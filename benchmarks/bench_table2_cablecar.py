@@ -1,0 +1,30 @@
+"""Paper Table 2: DCT codec time vs Cable-car image size (serial/parallel).
+
+Same legs as bench_table1 on the paper's Cable-car sizes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.bench_table1_lena import _parallel_codec, _serial_codec
+from benchmarks.common import row, time_fn
+from repro.core import images, quant
+
+SIZES = [(544, 512), (512, 480), (448, 416), (384, 352), (320, 288)]
+
+
+def run(full: bool = False):
+    q = quant.qtable(50)
+    sizes = SIZES if full else SIZES[:3]
+    for (h, w) in sizes:
+        img = jnp.asarray(images.cablecar_like(h, w))
+        us_par = time_fn(_parallel_codec, img, q, warmup=1, iters=3)
+        us_ser = time_fn(_serial_codec, img, q, warmup=1, iters=3)
+        row(f"table2_cablecar_{h}x{w}_parallel", us_par,
+            f"speedup={us_ser/us_par:.1f}x")
+        row(f"table2_cablecar_{h}x{w}_serial", us_ser, "leg=serial")
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,92 @@
+"""Analytic MODEL_FLOPS per (arch x shape) cell.
+
+Conventions (standard accounting):
+  * dense matmul flops = 2 * m * n * k
+  * train = fwd + bwd = 3x fwd on parameter matmuls => 6 * N_active * tokens
+  * causal attention fwd = 4 * B * S^2 * H * hd * 0.5 (scores + AV, causal
+    halves the work); bwd adds 2x => train attention = 6 * B * S^2 * H * hd
+  * decode step: 2 * N_active * B on params + attention reads over the cache
+MoE archs use activated params only (router-selected top-k + shared).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, SHAPES
+
+
+def _attn_dims(cfg: ArchConfig):
+    if cfg.use_mla:
+        # MLA: qk dim = nope+rope per head, v dim = v_head_dim
+        return cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim, cfg.v_head_dim
+    hd = cfg.resolved_head_dim
+    return cfg.n_heads, hd, hd
+
+
+def attention_flops(cfg: ArchConfig, b: int, s: int, train: bool) -> float:
+    if cfg.family == "ssm":                      # xLSTM: chunk-local matmuls
+        from repro.models import xlstm
+        q = cfg.ssm_chunk or 64
+        h = cfg.n_heads
+        dqk = xlstm.m_qk(cfg) // h
+        dv = xlstm.m_inner(cfg) // h
+        per_layer = 2.0 * b * s * h * (q * (dqk + dv)      # intra-chunk
+                                       + dqk * dv * 2)     # state update/read
+        total = per_layer * xlstm.n_mlstm(cfg)
+        return total * 3 if train else total
+    h, dqk, dv = _attn_dims(cfg)
+    n_attn_layers = cfg.n_layers
+    if cfg.family == "hybrid":
+        from repro.models import zamba
+        n_attn_layers = len(zamba.attn_sites(cfg))
+        # + mamba SSD state ops
+        from repro.models import ssm as ssm_mod
+        hm = ssm_mod.n_heads_ssm(cfg)
+        ssd = 6.0 * b * s * hm * cfg.ssm_head_dim * cfg.ssm_state * \
+            cfg.n_layers
+        extra = ssd * (3 if train else 1)
+    else:
+        extra = 0.0
+    fwd = 2.0 * b * s * s * h * (dqk + dv) * 0.5 * n_attn_layers
+    return (fwd * 3 if train else fwd) + extra
+
+
+def decode_attention_flops(cfg: ArchConfig, b: int, t: int) -> float:
+    """One decode token attending over a t-deep cache."""
+    if cfg.family == "ssm":
+        from repro.models import xlstm
+        h = cfg.n_heads
+        dqk = xlstm.m_qk(cfg) // h
+        dv = xlstm.m_inner(cfg) // h
+        return 6.0 * b * h * dqk * dv * xlstm.n_mlstm(cfg)
+    h, dqk, dv = _attn_dims(cfg)
+    n_attn = cfg.n_layers
+    extra = 0.0
+    if cfg.family == "hybrid":
+        from repro.models import zamba, ssm as ssm_mod
+        n_attn = len(zamba.attn_sites(cfg))
+        hm = ssm_mod.n_heads_ssm(cfg)
+        extra = 6.0 * b * hm * cfg.ssm_head_dim * cfg.ssm_state * cfg.n_layers
+    if cfg.use_mla:
+        # absorbed decode: scores over (kvr + rope), AV over kvr, plus
+        # per-head latent projections
+        kvr = cfg.kv_lora_rank
+        per = (2.0 * b * t * h * (kvr + cfg.qk_rope_dim)   # scores
+               + 2.0 * b * t * h * kvr                      # AV
+               + 2.0 * b * h * cfg.qk_nope_dim * kvr * 2)   # absorb projs
+        return per * cfg.n_layers + extra
+    return 2.0 * b * t * cfg.n_kv_heads * (dqk + dv) * n_attn * \
+        (cfg.n_heads // cfg.n_kv_heads) + extra
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    info = SHAPES[shape_name]
+    s, b, kind = info["seq_len"], info["global_batch"], info["kind"]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = b * s
+        return 6.0 * n_active * tokens + attention_flops(cfg, b, s, True)
+    if kind == "prefill":
+        tokens = b * s
+        return 2.0 * n_active * tokens + attention_flops(cfg, b, s, False)
+    # decode: 1 token/batch-row against a seq_len cache
+    return 2.0 * n_active * b + decode_attention_flops(cfg, b, s)

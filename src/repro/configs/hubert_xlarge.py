@@ -1,0 +1,15 @@
+"""hubert-xlarge [arXiv:2106.07447; assignment spec].
+
+Encoder-only audio transformer: 48L d_model=1280 16H d_ff=5120, masked
+cluster prediction over vocab=504.  The conv waveform frontend is a STUB
+per the brief: input_specs provide precomputed frame embeddings (B, T, d).
+Positional encoding adapted to RoPE (orig: conv-pos) — noted in DESIGN.md.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504, rope_base=10000.0,
+    is_encoder=True, input_mode="embeds",
+)

@@ -1,0 +1,11 @@
+"""qwen2.5-14b [hf:Qwen/Qwen2.5 family; assignment spec].
+
+Dense GQA with QKV bias: 48L d_model=5120 40H (kv=8) d_ff=13824 vocab=152064.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=13824, vocab_size=152064, qkv_bias=True, rope_base=1e6,
+)

@@ -1,0 +1,14 @@
+"""qwen2-vl-7b [arXiv:2409.12191; assignment spec].
+
+VLM backbone with M-RoPE (sections 16/24/24 over head_dim 128) and dynamic-
+resolution vision frontend STUB (input_specs provide patch embeddings +
+3-D positions): 28L d_model=3584 28H (kv=4) d_ff=18944 vocab=152064.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064, qkv_bias=True, rope_base=1e6,
+    input_mode="mixed", mrope_sections=(16, 24, 24),
+)

@@ -1,0 +1,12 @@
+"""qwen3-32b [hf:Qwen/Qwen3 family; assignment spec].
+
+Dense GQA with qk-norm and explicit head_dim=128 (q width 8192 != d_model):
+64L d_model=5120 64H (kv=8) d_ff=25600 vocab=151936.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=25600, vocab_size=151936, qk_norm=True, rope_base=1e6,
+)

@@ -1,0 +1,13 @@
+"""qwen3-moe-30b-a3b [hf:Qwen/Qwen3-30B-A3B; assignment spec].
+
+MoE: 48L d_model=2048 32H (kv=4) 128 experts top-8, expert d_ff=768,
+vocab=151936, qk-norm, head_dim=128.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=768, vocab_size=151936, qk_norm=True, rope_base=1e6,
+    n_experts=128, moe_top_k=8, moe_d_ff=768, moe_capacity_factor=1.25,
+)

@@ -1,0 +1,72 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig (full or reduced).
+
+``reduced()`` builds a same-family miniature (few layers, narrow width,
+few experts, tiny vocab) for CPU smoke tests; the full configs are only
+ever lowered abstractly (dry-run), never materialised on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+_MODULES = {
+    "xlstm-1.3b": "xlstm_13b",
+    "hubert-xlarge": "hubert_xlarge",
+    "zamba2-1.2b": "zamba2_12b",
+    "qwen2.5-14b": "qwen25_14b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen1.5-110b": "qwen15_110b",
+    "smollm-360m": "smollm_360m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def reduced(name: str, **overrides) -> ArchConfig:
+    """Miniature same-family config for CPU smoke tests."""
+    cfg = get(name)
+    r = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=256,
+        compute_dtype=jnp.float32,
+        remat="none",
+    )
+    if cfg.n_experts:
+        r.update(n_experts=8, moe_top_k=2, moe_d_ff=32,
+                 moe_capacity_factor=2.0)
+    if cfg.use_mla:
+        r.update(q_lora_rank=24, kv_lora_rank=16, qk_nope_dim=8,
+                 qk_rope_dim=4, v_head_dim=8, first_dense_layers=1,
+                 n_layers=3)
+    if cfg.first_dense_layers and not cfg.use_mla:
+        r.update(first_dense_layers=1)
+    if cfg.family in ("ssm", "hybrid"):
+        r.update(ssm_state=8, ssm_head_dim=8, ssm_chunk=4)
+    if cfg.shared_attn_every:
+        r.update(shared_attn_every=2, n_layers=4, n_kv_heads=4)
+    if cfg.slstm_every:
+        r.update(slstm_every=4, n_layers=4)
+    if cfg.mrope_sections:
+        r.update(mrope_sections=(4, 2, 2))
+    r.update(overrides)
+    return dataclasses.replace(cfg, **r)

@@ -1,0 +1,12 @@
+"""smollm-360m [hf:HuggingFaceTB/SmolLM-135M scaled; assignment spec].
+
+llama-arch small dense: 32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152.
+"""
+import jax.numpy as jnp
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, head_dim=64,
+    d_ff=2560, vocab_size=49152, rope_base=10000.0, tie_embeddings=True,
+)

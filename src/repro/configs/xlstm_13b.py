@@ -1,0 +1,14 @@
+"""xlstm-1.3b [arXiv:2405.04517; assignment spec].
+
+sLSTM + mLSTM blocks (7:1 ratio -> slstm_every=8): 48L d_model=2048 4H,
+d_ff=0 (in-block projections: mLSTM pf=2 with qk_factor=0.5, sLSTM FFN
+pf=4/3), vocab=50304.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304, slstm_every=8, ssm_chunk=64,
+    mlstm_proj_factor=2.0, mlstm_qk_factor=0.5, slstm_proj_factor=1.3334,
+)

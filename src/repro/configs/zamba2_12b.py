@@ -1,0 +1,15 @@
+"""zamba2-1.2b [arXiv:2411.15242; assignment spec].
+
+Hybrid: Mamba2 backbone (state=64) + one weight-shared attention block
+invoked every 6 layers: 38L d_model=2048 32H (MHA kv=32) d_ff=8192
+vocab=32000.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab_size=32000, rope_base=10000.0,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_chunk=64,
+    shared_attn_every=6,
+)

@@ -1,0 +1,13 @@
+"""repro.core — the paper's contribution: blockwise DCT image compression.
+
+Modules:
+  dct       exact orthonormal DCT (matrix + Kronecker MXU forms)
+  loeffler  Loeffler 8-point flow graph (exact rotations)
+  cordic    CORDIC micro-rotation approximation (the paper's variant)
+  quant     JPEG-style quantiser
+  codec     compress / decompress / roundtrip pipeline
+  metrics   PSNR / MSE per the paper's definitions
+  images    synthetic stand-ins for the paper's test images
+"""
+
+from repro.core import cordic, dct, images, loeffler, metrics, quant, codec  # noqa: F401

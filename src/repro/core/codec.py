@@ -1,0 +1,143 @@
+"""The paper's pipeline: blockwise DCT -> quantise -> (dequantise) -> IDCT.
+
+``compress`` / ``decompress`` are the public codec API; ``roundtrip`` is the
+exact experiment the paper runs (compress then reconstruct, then PSNR against
+the original).  ``transform`` selects:
+
+* ``"exact"``   — orthonormal matrix DCT (paper's reference "DCT"),
+* ``"cordic"``  — Cordic-based Loeffler DCT (the paper's subject),
+* ``"loeffler"``— Loeffler graph with exact rotations (sanity bridge: must
+                  match "exact" to float round-off).
+
+Images of sizes not divisible by 8 (e.g. the paper's 1024x814) are padded
+with edge replication and cropped back on reconstruction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cordic, dct, loeffler, metrics, quant
+
+Transform = Literal["exact", "cordic", "loeffler"]
+
+
+@dataclasses.dataclass
+class CompressedImage:
+    """Quantised DCT representation of a single grayscale image."""
+    qcoeffs: jnp.ndarray          # (H/8, W/8, 8, 8) int32 quantised levels
+    quality: int
+    transform: str
+    orig_shape: tuple             # (H, W) before padding
+    cordic_config: cordic.CordicConfig | None = None
+
+    def nbytes_estimate(self) -> float:
+        return float(quant.estimate_bits(self.qcoeffs)) / 8.0
+
+    def compression_ratio(self) -> float:
+        h, w = self.orig_shape
+        return float(quant.compression_ratio(self.qcoeffs, h, w))
+
+
+def pad_to_block(img: jnp.ndarray, block: int = 8) -> jnp.ndarray:
+    h, w = img.shape[-2:]
+    ph = (-h) % block
+    pw = (-w) % block
+    if ph == 0 and pw == 0:
+        return img
+    pad = [(0, 0)] * (img.ndim - 2) + [(0, ph), (0, pw)]
+    return jnp.pad(img, pad, mode="edge")
+
+
+def _forward(img_f32: jnp.ndarray, transform: Transform,
+             cordic_config: cordic.CordicConfig) -> jnp.ndarray:
+    if transform == "exact":
+        return dct.blockwise_dct2d_kron(img_f32)
+    blocks = dct.to_blocks(img_f32)
+    if transform == "loeffler":
+        return loeffler.loeffler_dct2d_8x8(blocks)
+    if transform == "cordic":
+        rot = cordic.make_cordic_rotate(cordic_config)
+        qfn = cordic.fixed_quantizer(cordic_config)
+        return loeffler.loeffler_dct2d_8x8(blocks, rotate_fn=rot,
+                                           quantize_fn=qfn)
+    raise ValueError(f"unknown transform {transform!r}")
+
+
+def _inverse(coeffs: jnp.ndarray, transform: Transform,
+             cordic_config: cordic.CordicConfig) -> jnp.ndarray:
+    if transform == "exact":
+        return dct.blockwise_idct2d_kron(coeffs)
+    if transform == "loeffler":
+        return dct.from_blocks(loeffler.loeffler_idct2d_8x8(coeffs))
+    if transform == "cordic":
+        rot = cordic.make_cordic_rotate(cordic_config)
+        qfn = cordic.fixed_quantizer(cordic_config)
+        return dct.from_blocks(
+            loeffler.loeffler_idct2d_8x8(coeffs, rotate_fn=rot,
+                                         quantize_fn=qfn))
+    raise ValueError(f"unknown transform {transform!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("transform", "quality",
+                                             "cordic_config"))
+def _compress_jit(img: jnp.ndarray, transform: Transform, quality: int,
+                  cordic_config: cordic.CordicConfig) -> jnp.ndarray:
+    # level-shift to signed range as in JPEG
+    x = img.astype(jnp.float32) - 128.0
+    coeffs = _forward(x, transform, cordic_config)
+    return quant.quantize(coeffs, quant.qtable(quality))
+
+
+@functools.partial(jax.jit, static_argnames=("transform", "quality",
+                                             "cordic_config"))
+def _decompress_jit(qcoeffs: jnp.ndarray, transform: Transform, quality: int,
+                    cordic_config: cordic.CordicConfig) -> jnp.ndarray:
+    coeffs = quant.dequantize(qcoeffs, quant.qtable(quality))
+    x = _inverse(coeffs, transform, cordic_config)
+    return jnp.clip(jnp.round(x + 128.0), 0.0, 255.0).astype(jnp.uint8)
+
+
+def compress(img, quality: int = 50, transform: Transform = "exact",
+             cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG
+             ) -> CompressedImage:
+    """Compress a (H, W) grayscale image (uint8 or float)."""
+    img = jnp.asarray(img)
+    orig_shape = tuple(img.shape[-2:])
+    padded = pad_to_block(img)
+    q = _compress_jit(padded, transform, quality, cordic_config)
+    return CompressedImage(qcoeffs=q, quality=quality, transform=transform,
+                           orig_shape=orig_shape, cordic_config=cordic_config)
+
+
+def decompress(c: CompressedImage, mode: str = "standard") -> jnp.ndarray:
+    """Reconstruct the (H, W) uint8 image.
+
+    mode="standard": the decoder applies the *exact* IDCT — a standards-
+      compliant decoder that does not know which approximate forward
+      transform the encoder used.  With a CORDIC encoder, its angle-
+      approximation error passes through to reconstruction; this reproduces
+      the paper's exact-DCT vs Cordic-Loeffler PSNR gap (Tables 3-4).
+    mode="matched": the decoder applies the adjoint of the encoder's own
+      (approximate) transform.  CORDIC angle errors then largely cancel —
+      a finding we report alongside the reproduction (EXPERIMENTS.md).
+    """
+    cfg = c.cordic_config or cordic.PAPER_CONFIG
+    dec_transform = "exact" if mode == "standard" else c.transform
+    out = _decompress_jit(c.qcoeffs, dec_transform, c.quality, cfg)
+    h, w = c.orig_shape
+    return out[..., :h, :w]
+
+
+def roundtrip(img, quality: int = 50, transform: Transform = "exact",
+              cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG,
+              mode: str = "standard"):
+    """The paper's experiment: returns (reconstructed, psnr_dB)."""
+    c = compress(img, quality, transform, cordic_config)
+    rec = decompress(c, mode=mode)
+    return rec, float(metrics.psnr(jnp.asarray(img), rec))

@@ -1,0 +1,26 @@
+"""Image-quality metrics — PSNR / MSE exactly as the paper defines them.
+
+Paper eq. (24): MSE(O, C) = (1/NM) ΣΣ ||O(i,j) - C(i,j)||²
+Paper eq. (23): PSNR(O, C) = 20 log10( MAX / sqrt(MSE) ), with MAX the
+maximum pixel value of the *original* image O (not a fixed 255) — we follow
+that definition by default and expose ``max_val`` for the conventional one.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mse(original: jnp.ndarray, reconstructed: jnp.ndarray) -> jnp.ndarray:
+    o = original.astype(jnp.float32)
+    c = reconstructed.astype(jnp.float32)
+    return jnp.mean((o - c) ** 2)
+
+
+def psnr(original: jnp.ndarray, reconstructed: jnp.ndarray,
+         max_val: float | None = None) -> jnp.ndarray:
+    """PSNR in dB per paper eq. (23)."""
+    m = mse(original, reconstructed)
+    if max_val is None:
+        max_val = original.astype(jnp.float32).max()
+    return 20.0 * jnp.log10(max_val / jnp.sqrt(jnp.maximum(m, 1e-12)))

@@ -1,0 +1,93 @@
+"""JPEG-style quantisation for 8x8 DCT coefficient blocks.
+
+The paper's pipeline is DCT -> quantiser -> IDCT (each a separate CUDA
+kernel).  We use the ITU-T T.81 Annex K luminance table with the standard
+IJG quality scaling.  Note: the orthonormal 2-D DCT used throughout this
+repo coincides exactly with the JPEG FDCT convention (the (1/4)·C(u)C(v)
+scaling equals the orthonormal alpha_u·alpha_v), so the table applies
+without rescaling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+# ITU-T T.81 Annex K, Table K.1 (luminance).
+JPEG_LUMA_QTABLE = np.array([
+    [16, 11, 10, 16, 24, 40, 51, 61],
+    [12, 12, 14, 19, 26, 58, 60, 55],
+    [14, 13, 16, 24, 40, 57, 69, 56],
+    [14, 17, 22, 29, 51, 87, 80, 62],
+    [18, 22, 37, 56, 68, 109, 103, 77],
+    [24, 35, 55, 64, 81, 104, 113, 92],
+    [49, 64, 78, 87, 103, 121, 120, 101],
+    [72, 92, 95, 98, 112, 100, 103, 99],
+], dtype=np.float64)
+
+
+@functools.lru_cache(maxsize=None)
+def _scaled_qtable_np(quality: int) -> np.ndarray:
+    """IJG quality scaling: quality in [1, 100]."""
+    quality = int(np.clip(quality, 1, 100))
+    if quality < 50:
+        scale = 5000.0 / quality
+    else:
+        scale = 200.0 - 2.0 * quality
+    q = np.floor((JPEG_LUMA_QTABLE * scale + 50.0) / 100.0)
+    return np.clip(q, 1.0, 255.0)
+
+
+def qtable(quality: int = 50, dtype=jnp.float32) -> jnp.ndarray:
+    """(8, 8) quantisation step table for an IJG quality factor."""
+    return jnp.asarray(_scaled_qtable_np(quality), dtype=dtype)
+
+
+def quantize(coeffs: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Round coefficients to quantisation steps.  (..., 8, 8) -> int32."""
+    return jnp.round(coeffs / q).astype(jnp.int32)
+
+
+def dequantize(qcoeffs: jnp.ndarray, q: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Reconstruct coefficient values from quantised levels."""
+    return qcoeffs.astype(dtype) * q.astype(dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _zigzag_perm(n: int = 8) -> np.ndarray:
+    """Raster->zigzag permutation of block indices (length n*n)."""
+    idx = sorted(((i + j, i if (i + j) % 2 else j, i, j)
+                  for i in range(n) for j in range(n)))
+    return np.array([i * n + j for (_, _, i, j) in idx], dtype=np.int32)
+
+
+def zigzag(blocks: jnp.ndarray) -> jnp.ndarray:
+    """(..., 8, 8) -> (..., 64) in zigzag order."""
+    *lead, b, b2 = blocks.shape
+    perm = jnp.asarray(_zigzag_perm(b))
+    return blocks.reshape(*lead, b * b2)[..., perm]
+
+
+def estimate_bits(qcoeffs: jnp.ndarray) -> jnp.ndarray:
+    """JPEG-flavoured size proxy (bits) for quantised blocks (..., 8, 8).
+
+    Per nonzero coefficient: magnitude-category bits + ~4 bits of Huffman
+    overhead; + 4 bits EOB per block.  This is a *proxy* used only to report
+    compression ratios (the paper reports none — it reports time + PSNR — so
+    this is auxiliary telemetry, not a reproduction target).
+    """
+    mag = jnp.abs(qcoeffs).astype(jnp.float32)
+    nz = mag > 0
+    cat_bits = jnp.where(nz, jnp.ceil(jnp.log2(mag + 1.0)), 0.0)
+    huff_bits = jnp.where(nz, 4.0, 0.0)
+    per_block = (cat_bits + huff_bits).sum(axis=(-1, -2)) + 4.0
+    return per_block.sum()
+
+
+def compression_ratio(qcoeffs: jnp.ndarray, h: int, w: int,
+                      bits_per_pixel: int = 8) -> jnp.ndarray:
+    """original bits / estimated compressed bits."""
+    return (h * w * bits_per_pixel) / estimate_bits(qcoeffs)

@@ -1,0 +1,72 @@
+"""Fault-tolerance: step watchdog (straggler detection) and retry policy.
+
+On a real pod, straggler mitigation means: detect a slow/hung step,
+attribute it to a host, and either (a) wait with a deadline then restart
+from the last checkpoint excluding the bad host (elastic rescale) or
+(b) pre-emptively re-dispatch work.  On this single-process container the
+detection/bookkeeping layer is fully real (threads + wall-clock); the
+"replace the node" action is delegated to the launcher (launch/train.py
+--max-restarts), and elastic rescale is ft/elastic.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import threading
+import time
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+    ratio: float
+
+
+class StepWatchdog:
+    """Tracks step durations; flags steps slower than ratio x running median.
+
+    Also runs a background heartbeat that fires ``on_hang`` if no step
+    completes within ``hang_timeout`` seconds — the "node went away" signal
+    that triggers checkpoint-restart in the trainer loop.
+    """
+
+    def __init__(self, ratio: float = 3.0, window: int = 32,
+                 hang_timeout: float | None = None, on_hang=None):
+        self.ratio = ratio
+        self.window = window
+        self.durations: list = []
+        self.events: list = []
+        self.hang_timeout = hang_timeout
+        self.on_hang = on_hang
+        self._last_beat = time.monotonic()
+        self._stop = threading.Event()
+        self._thread = None
+        if hang_timeout is not None:
+            self._thread = threading.Thread(target=self._monitor, daemon=True)
+            self._thread.start()
+
+    def _monitor(self):
+        while not self._stop.wait(min(self.hang_timeout / 4, 1.0)):
+            if time.monotonic() - self._last_beat > self.hang_timeout:
+                self._last_beat = time.monotonic()
+                if self.on_hang:
+                    self.on_hang()
+
+    def observe(self, step: int, duration: float):
+        self._last_beat = time.monotonic()
+        med = (statistics.median(self.durations[-self.window:])
+               if self.durations else duration)
+        self.durations.append(duration)
+        if len(self.durations) >= 4 and duration > self.ratio * med:
+            ev = StragglerEvent(step, duration, med, duration / med)
+            self.events.append(ev)
+            return ev
+        return None
+
+    def close(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)

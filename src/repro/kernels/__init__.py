@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimises.
+
+Each subpackage follows the kernel.py (pl.pallas_call + BlockSpec) /
+ops.py (jit wrapper) / ref.py (pure-jnp oracle) layout:
+
+  dct8x8          blockwise 2-D DCT/IDCT via the MXU Kronecker matmul
+  cordic_loeffler paper-faithful Cordic-based Loeffler DCT (VPU shift-add)
+  fused_codec     DCT->quant->dequant->IDCT in one HBM round-trip
+  grad_dct        DCT-domain gradient compression (encode/decode)
+"""

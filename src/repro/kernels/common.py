@@ -1,0 +1,44 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels in this package target TPU (pl.pallas_call with explicit
+BlockSpec VMEM tiling) and are *validated* on CPU via interpret mode, which
+executes the kernel body in Python.  ``interpret_default()`` picks the mode
+from the runtime backend so the same call sites work in both environments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpret_default() -> bool:
+    """True when we must interpret (no real TPU present)."""
+    return jax.default_backend() != "tpu"
+
+
+def pad2d_to_multiple(x: jnp.ndarray, mh: int, mw: int) -> jnp.ndarray:
+    """Edge-pad the last two dims up to multiples of (mh, mw)."""
+    h, w = x.shape[-2:]
+    ph, pw = (-h) % mh, (-w) % mw
+    if ph == 0 and pw == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, ph), (0, pw)]
+    return jnp.pad(x, pad, mode="edge")
+
+
+def pick_tile(dim: int, target: int = 256, multiple: int = 8) -> int:
+    """Largest tile <= target that divides ``dim`` and is a multiple of 8.
+
+    Image dims here are always multiples of 8 (ops pad first), so a valid
+    tile always exists (worst case: ``multiple`` itself).
+    """
+    if dim % multiple:
+        raise ValueError(f"dim {dim} not a multiple of {multiple}")
+    best = multiple
+    t = multiple
+    while t <= min(dim, target):
+        if dim % t == 0:
+            best = t
+        t += multiple
+    return best

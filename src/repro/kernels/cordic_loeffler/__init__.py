@@ -1,0 +1,3 @@
+from repro.kernels.cordic_loeffler.ops import (  # noqa: F401
+    cordic_loeffler_dct, cordic_loeffler_idct)
+from repro.kernels.cordic_loeffler.ref import cordic_loeffler_ref  # noqa: F401

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the cordic_loeffler kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cordic, dct, loeffler
+
+
+def cordic_loeffler_ref(img: jnp.ndarray,
+                        config: cordic.CordicConfig = cordic.PAPER_CONFIG,
+                        inverse: bool = False) -> jnp.ndarray:
+    """(H, W) -> (H, W) Cordic-Loeffler blockwise (I)DCT, block-planar."""
+    rot = cordic.make_cordic_rotate(config)
+    qfn = cordic.fixed_quantizer(config)
+    blocks = dct.to_blocks(img)
+    if inverse:
+        out = loeffler.loeffler_idct2d_8x8(blocks, rotate_fn=rot,
+                                           quantize_fn=qfn)
+    else:
+        out = loeffler.loeffler_dct2d_8x8(blocks, rotate_fn=rot,
+                                          quantize_fn=qfn)
+    return dct.from_blocks(out)

@@ -1,0 +1,2 @@
+from repro.kernels.dct8x8.ops import dct8x8, idct8x8  # noqa: F401
+from repro.kernels.dct8x8.ref import dct8x8_ref, idct8x8_ref  # noqa: F401

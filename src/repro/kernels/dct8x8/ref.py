@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the dct8x8 kernel (block-planar layout)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import dct
+
+
+def dct8x8_ref(img: jnp.ndarray) -> jnp.ndarray:
+    """(H, W) -> (H, W) blockwise DCT coefficients, block-planar layout."""
+    return dct.from_blocks(dct.blockwise_dct2d(img))
+
+
+def idct8x8_ref(coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`dct8x8_ref`."""
+    return dct.blockwise_idct2d(dct.to_blocks(coeffs))

@@ -1,0 +1,2 @@
+from repro.kernels.fused_codec.ops import fused_codec  # noqa: F401
+from repro.kernels.fused_codec.ref import fused_codec_ref  # noqa: F401

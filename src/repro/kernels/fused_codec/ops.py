@@ -1,0 +1,40 @@
+"""Jitted public wrappers for the fused_codec Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cordic, dct, quant
+from repro.kernels import common
+from repro.kernels.fused_codec import kernel
+
+
+def fused_codec(img: jnp.ndarray, *, quality: int = 50,
+                transform: str = "exact",
+                config: cordic.CordicConfig = cordic.PAPER_CONFIG,
+                tile: int = 256, interpret: bool | None = None):
+    """One-pass codec roundtrip.  (..., H, W) uint8/float.
+
+    Returns (reconstructed uint8, quantised coeffs int32 block-planar).
+    """
+    if interpret is None:
+        interpret = common.interpret_default()
+    img = jnp.asarray(img)
+    h, w = img.shape[-2:]
+    padded = common.pad2d_to_multiple(img, 8, 8).astype(jnp.float32)
+    ph, pw = padded.shape[-2:]
+    th = common.pick_tile(ph, tile)
+    tw = common.pick_tile(pw, tile)
+    t = dct.kron_dct_matrix(8)
+    qvec = quant.qtable(quality).reshape(1, 64)
+
+    fn = lambda x: kernel.fused_codec_pallas(
+        x, t, qvec, tile_h=th, tile_w=tw, transform=transform, config=config,
+        interpret=interpret)
+    for _ in range(img.ndim - 2):
+        fn = jax.vmap(fn)
+    rec, qc = fn(padded)
+    rec = rec[..., :h, :w].astype(jnp.uint8)
+    qc = qc[..., :h, :w]
+    return rec, qc

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused_codec kernel — the *unfused* pipeline.
+
+This is deliberately the paper's three-pass structure (DCT kernel, quantiser
+kernel, IDCT kernel) built from core/: it doubles as the reference the
+kernel must match bit-for-bit in float32, and as the "unfused baseline" leg
+of the fusion benchmark.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cordic, dct, loeffler, quant
+
+
+def fused_codec_ref(img: jnp.ndarray, quality: int = 50,
+                    transform: str = "exact",
+                    config: cordic.CordicConfig = cordic.PAPER_CONFIG):
+    """Returns (reconstructed f32 [0,255], quantised coeffs int32 planar)."""
+    x = img.astype(jnp.float32) - 128.0
+    q = quant.qtable(quality)
+    if transform == "exact":
+        coef = dct.blockwise_dct2d(x)
+    else:
+        rot = cordic.make_cordic_rotate(config)
+        qfn = cordic.fixed_quantizer(config)
+        coef = loeffler.loeffler_dct2d_8x8(dct.to_blocks(x), rotate_fn=rot,
+                                           quantize_fn=qfn)
+    qc = jnp.round(coef / q)
+    deq = qc * q
+    if transform == "exact":
+        rec = dct.blockwise_idct2d(deq)
+    else:
+        rot = cordic.make_cordic_rotate(config)
+        qfn = cordic.fixed_quantizer(config)
+        rec = dct.from_blocks(loeffler.loeffler_idct2d_8x8(
+            deq, rotate_fn=rot, quantize_fn=qfn))
+    rec = jnp.clip(jnp.round(rec + 128.0), 0.0, 255.0)
+    return rec, dct.from_blocks(qc).astype(jnp.int32)

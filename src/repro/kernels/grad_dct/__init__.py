@@ -1,0 +1,4 @@
+from repro.kernels.grad_dct.ops import (  # noqa: F401
+    BLOCK, CompressedGrad, decode, encode, roundtrip)
+from repro.kernels.grad_dct.ref import (  # noqa: F401
+    grad_dct_decode_ref, grad_dct_encode_ref, grad_dct_roundtrip_ref)

@@ -1,0 +1,89 @@
+"""Jitted public wrappers: compress/decompress arbitrary-shaped gradients.
+
+``encode``/``decode`` operate on flat vectors of any length: the tail that
+does not fill a 64-sample block is carried *uncompressed* (exact), which
+keeps the projection deterministic and shape-stable for jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct
+from repro.kernels import common
+from repro.kernels.grad_dct import kernel
+
+BLOCK = kernel.BLOCK
+
+
+@dataclasses.dataclass
+class CompressedGrad:
+    """DCT-compressed flat gradient."""
+    q: jnp.ndarray        # (R, keep) int8
+    scale: jnp.ndarray    # (R, 1) f32
+    tail: jnp.ndarray     # (T,) f32 uncompressed remainder (T < 64)
+    n: int                # original length
+
+    def wire_bytes(self) -> int:
+        """Bytes that would cross the interconnect."""
+        return (self.q.size * 1 + self.scale.size * 4 + self.tail.size * 4)
+
+
+def _split(g: jnp.ndarray):
+    n = g.shape[0]
+    r = n // BLOCK
+    return g[:r * BLOCK].reshape(r, BLOCK), g[r * BLOCK:]
+
+
+def encode(g: jnp.ndarray, keep: int = 16, *, block_rows: int = 512,
+           interpret: bool | None = None) -> CompressedGrad:
+    """Compress a flat f32 gradient vector."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    n = g.shape[0]
+    body, tail = _split(g.astype(jnp.float32))
+    r = body.shape[0]
+    if r == 0:
+        return CompressedGrad(q=jnp.zeros((0, keep), jnp.int8),
+                              scale=jnp.zeros((0, 1), jnp.float32),
+                              tail=tail, n=n)
+    # pad rows to a grid multiple
+    br = min(block_rows, r)
+    pad_rows = (-r) % br
+    if pad_rows:
+        body = jnp.pad(body, ((0, pad_rows), (0, 0)))
+    c = dct.dct_matrix(BLOCK, jnp.float32)
+    q, s = kernel.grad_dct_encode_pallas(body, c, keep=keep, block_rows=br,
+                                         interpret=interpret)
+    return CompressedGrad(q=q[:r], scale=s[:r], tail=tail, n=n)
+
+
+def decode(cg: CompressedGrad, *, block_rows: int = 512,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """Reconstruct the flat gradient (lossy in the compressed span)."""
+    if interpret is None:
+        interpret = common.interpret_default()
+    r = cg.q.shape[0]
+    if r == 0:
+        return cg.tail[:cg.n]
+    br = min(block_rows, r)
+    pad_rows = (-r) % br
+    q, s = cg.q, cg.scale
+    if pad_rows:
+        q = jnp.pad(q, ((0, pad_rows), (0, 0)))
+        s = jnp.pad(s, ((0, pad_rows), (0, 0)))
+    c = dct.dct_matrix(BLOCK, jnp.float32)
+    body = kernel.grad_dct_decode_pallas(q, s, c, block_rows=br,
+                                         interpret=interpret)[:r]
+    return jnp.concatenate([body.reshape(-1), cg.tail])[:cg.n]
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "interpret"))
+def roundtrip(g: jnp.ndarray, keep: int = 16,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """encode+decode in one jit — the projection used inside train steps."""
+    return decode(encode(g, keep, interpret=interpret), interpret=interpret)

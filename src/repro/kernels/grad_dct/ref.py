@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the grad_dct kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import dct
+
+BLOCK = 64
+
+
+def grad_dct_encode_ref(g: jnp.ndarray, keep: int):
+    """(R, 64) f32 -> ((R, keep) int8, (R, 1) f32)."""
+    c = dct.dct_matrix(BLOCK, jnp.float32)
+    coef = g @ c.T
+    kept = coef[:, :keep]
+    scale = jnp.max(jnp.abs(kept), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(kept / scale), -127.0, 127.0)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def grad_dct_decode_ref(q: jnp.ndarray, s: jnp.ndarray):
+    """((R, keep) int8, (R, 1) f32) -> (R, 64) f32."""
+    c = dct.dct_matrix(BLOCK, jnp.float32)
+    keep = q.shape[-1]
+    kept = q.astype(jnp.float32) * s
+    coef = jnp.pad(kept, ((0, 0), (0, BLOCK - keep)))
+    return coef @ c
+
+
+def grad_dct_roundtrip_ref(g: jnp.ndarray, keep: int):
+    """Encode+decode — the lossy projection the optimiser sees."""
+    q, s = grad_dct_encode_ref(g, keep)
+    return grad_dct_decode_ref(q, s)

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+# the production mesh with ShapeDtypeStruct stand-ins (no allocation), then
+# record memory_analysis / cost_analysis / the collective schedule.
+# THE TWO LINES ABOVE MUST STAY FIRST: jax locks device count on first init.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import registry as arch_registry          # noqa: E402
+from repro.configs.base import SHAPES, input_specs, shape_supported  # noqa: E402
+from repro.dist import sharding as sh                        # noqa: E402
+from repro.launch import specs as specs_lib                  # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.models import registry as model_registry          # noqa: E402
+from repro.optim import adamw                                # noqa: E402
+from repro.train import step as step_lib                     # noqa: E402
+
+# Microbatch counts for the train_4k cell, sized so activations + MoE
+# dispatch buffers fit v5e HBM (EXPERIMENTS.md §Dry-run discusses).
+TRAIN_MICROBATCHES = {
+    "deepseek-v3-671b": 16,
+    "qwen1.5-110b": 8,
+    "qwen3-32b": 4,
+    "qwen2.5-14b": 4,
+    "qwen3-moe-30b-a3b": 4,
+    "qwen2-vl-7b": 2,
+    "hubert-xlarge": 2,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s16": 2, "u16": 2, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective bytes by op kind from partitioned HLO text.
+
+    Note: ops inside a scanned layer body appear once; §Roofline uses the
+    compositional per-layer lowering for corrected totals (see
+    benchmarks/roofline.py); this function reports the compiled artifact
+    as-is for the §Dry-run record.
+    """
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        numel = 1
+        for d in dims.split(","):
+            if d:
+                numel *= int(d)
+        size = numel * _DTYPE_BYTES.get(dtype, 4)
+        out[kind] = out.get(kind, 0) + size
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+def build_lowerable(cfg, shape_name: str, mesh):
+    """Returns (fn, args, in_shardings) for the cell's step kind."""
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    ispecs = input_specs(cfg, shape_name)
+    bsh = specs_lib.batch_shardings(cfg, ispecs, mesh)
+
+    if kind == "train":
+        micro = TRAIN_MICROBATCHES.get(cfg.name, 1)
+        scfg = step_lib.TrainStepConfig(microbatches=micro)
+        ocfg = adamw.AdamWConfig()
+        fn = step_lib.make_train_step(cfg, ocfg, scfg)
+        state = step_lib.abstract_state(cfg, ocfg, scfg)
+        ssh = specs_lib.state_shardings(cfg, mesh)
+        return fn, (state, ispecs), (ssh, bsh)
+
+    psh = sh.param_shardings(model_registry.param_specs(cfg), mesh)
+    pstructs = model_registry.abstract_params(cfg)
+
+    if kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, _, _ = model_registry.apply(cfg, params, batch,
+                                                mode="prefill")
+            return logits
+        return prefill_fn, (pstructs, ispecs), (psh, bsh)
+
+    # decode: one token against a filled cache
+    cache = ispecs.pop("cache")
+    csh = bsh.pop("cache")
+
+    def serve_step(params, batch, cache):
+        logits, new_cache, _ = model_registry.apply(cfg, params, batch,
+                                                    mode="decode",
+                                                    cache=cache)
+        return logits, new_cache
+
+    return serve_step, (pstructs, ispecs, cache), (psh, bsh, csh)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = arch_registry.get(arch)
+    ok, reason = shape_supported(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = specs_lib.rules_for(cfg, shape_name)
+    t0 = time.monotonic()
+    with sh.use_mesh_and_rules(mesh, rules):
+        fn, args, in_sh = build_lowerable(cfg, shape_name, mesh)
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        t_lower = time.monotonic() - t0
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    print(f"[{arch} x {shape_name} x {mesh_name}]")
+    print("  memory_analysis:", mem)
+    print("  cost_analysis: flops={:.3e} bytes={:.3e}".format(
+        cost.get("flops", 0.0), cost.get("bytes accessed", 0.0)))
+    print("  collectives:", colls)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        microbatches=TRAIN_MICROBATCHES.get(arch, 1)
+        if SHAPES[shape_name]["kind"] == "train" else 1,
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+        ),
+        hlo_flops=cost.get("flops", 0.0),
+        hlo_bytes=cost.get("bytes accessed", 0.0),
+        collectives=colls,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="single arch id (default all)")
+    ap.add_argument("--shape", default=None, help="single shape (default all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    archs = [args.arch] if args.arch else arch_registry.ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = f"{arch}|{shape_name}|{'multi' if multi else 'single'}"
+                if key in results and results[key].get("status") in (
+                        "ok", "skipped") and not args.force:
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, multi)
+                except Exception as e:   # noqa: BLE001 — recorded, not hidden
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error", "error": str(e)[:2000]}
+                    failures.append(key)
+                    print(f"[{key}] ERROR: {str(e)[:300]}")
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

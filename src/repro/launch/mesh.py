@@ -1,0 +1,34 @@
+"""Production mesh definitions (MULTI-POD DRY-RUN spec).
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state — device count is
+locked on first jax init, and only launch/dryrun.py sets the 512-device
+XLA flag.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh for tests / reduced runs."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# TPU v5e hardware model used by the roofline analysis (benchmarks/roofline).
+HW = dict(
+    peak_flops_bf16=197e12,     # per chip
+    hbm_bw=819e9,               # bytes/s per chip
+    ici_bw=50e9,                # bytes/s per link (conservative single-link)
+    hbm_bytes=16e9,             # v5e HBM capacity
+)

@@ -1,0 +1,78 @@
+"""Serving launcher: batched prefill + decode with optional DCT KV compression.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+      --batch 4 --prompt-len 32 --max-new 32 --kv-dct-keep 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-dct-keep", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import registry as R
+    from repro.models import registry as M
+    from repro.serve import engine, kv_compress
+    from repro.serve.engine import ServeConfig
+
+    cfg = R.reduced(args.arch) if args.reduced else R.get(args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode")
+    params = M.init_params(cfg, jax.random.key(args.seed))
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    scfg = ServeConfig(max_len=args.max_len, temperature=args.temperature,
+                       kv_dct_keep=args.kv_dct_keep)
+    t0 = time.monotonic()
+    if args.kv_dct_keep and cfg.family in ("dense", "moe", "vlm"):
+        # compress the prompt's cache blocks, decode over reconstruction
+        cache = M.init_cache(cfg, batch=args.batch, max_len=args.max_len)
+        prefill = engine.make_prefill(cfg)
+        logits, cache = prefill(params, prompts, cache)
+        ckv, tails = kv_compress.compress_cache(cache, args.kv_dct_keep,
+                                                args.prompt_len)
+        raw = sum(v.size * v.dtype.itemsize for v in cache.values())
+        comp = kv_compress.wire_bytes(ckv, tails)
+        print(f"kv cache bytes: raw={raw} dct={comp} "
+              f"ratio={raw/comp:.2f}x")
+        cache = kv_compress.reconstruct_cache(ckv, tails)
+        step_fn = engine.make_decode_step(cfg, args.temperature)
+        nxt = jnp.argmax(logits.astype(jnp.float32), -1).astype(jnp.int32)
+        out = [nxt]
+        key = jax.random.key(args.seed)
+        for i in range(args.max_new - 1):
+            key, sub = jax.random.split(key)
+            nxt, cache = step_fn(params, nxt[:, None], cache,
+                                 jnp.asarray(args.prompt_len + i, jnp.int32),
+                                 sub)
+            out.append(nxt)
+        tokens = jnp.stack(out, axis=1)
+    else:
+        tokens = engine.generate(cfg, params, prompts, args.max_new, scfg,
+                                 args.seed)
+    dt = time.monotonic() - t0
+    total = args.batch * args.max_new
+    print(f"generated {tokens.shape} in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s incl. compile)")
+    print("sample:", tokens[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

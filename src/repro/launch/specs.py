@@ -1,0 +1,106 @@
+"""Input/state sharding spec builders for the dry-run and launchers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES
+from repro.dist import sharding as sh
+from repro.models import registry
+
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "mask": ("batch", "seq"),
+    "embeds": ("batch", "seq", "embed"),
+    "vision_embeds": ("batch", "seq", "embed"),
+    "vision_mask": ("batch", "seq"),
+    "positions3": (None, "batch", "seq"),
+    "cache_index": (),
+}
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    if cfg.use_mla:
+        return {"ckv": ("layers", "batch", "cache_time", None),
+                "krope": ("layers", "batch", "cache_time", None)}
+    if cfg.family == "hybrid":
+        return {"attn/k": (None, "batch", "cache_time", "kv_heads", "head_dim"),
+                "attn/v": (None, "batch", "cache_time", "kv_heads", "head_dim"),
+                "mamba/conv": ("layers", "batch", None, "mlp"),
+                "mamba/ssm": ("layers", "batch", "heads", None, "state")}
+    if cfg.family == "ssm":
+        axes = {"m/C": ("layers", "batch", "heads", None, "mlp"),
+                "m/n": ("layers", "batch", "heads", None),
+                "m/m": ("layers", "batch", "heads")}
+        from repro.models import xlstm
+        if xlstm.n_slstm(cfg):
+            axes.update({"s/h": ("layers", "batch", "mlp"),
+                         "s/c": ("layers", "batch", "mlp"),
+                         "s/n": ("layers", "batch", "mlp"),
+                         "s/m": ("layers", "batch", "mlp")})
+        return axes
+    return {"k": ("layers", "batch", "cache_time", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "cache_time", "kv_heads", "head_dim")}
+
+
+def rules_for(cfg: ArchConfig, shape_name: str) -> dict:
+    """Rule table for a cell.
+
+    decode_32k: the KV-cache time axis shards over "model" (partial-softmax
+    attention over T shards) — kv_heads (e.g. 8) rarely divides the 16-wide
+    model axis, and batch alone leaves the cache 16x too big per device.
+    long_500k (batch=1) flips fully to sequence parallelism: the 512k-token
+    axis shards over every mesh axis (pod, data, model).
+    """
+    rules = dict(sh.DEFAULT_RULES)
+    rules["embed"] = ("pod", "data")          # FSDP params by default
+    if cfg.family == "ssm":
+        # Perf iteration B (EXPERIMENTS.md §Perf): xLSTM has 4 heads and
+        # odd inner dims — TP over a 16-wide axis forces GSPMD into
+        # involuntary remat/reshard storms.  Pure DP over every axis +
+        # FSDP over (pod, data) eliminates them: params are small (2.9B),
+        # activations never cross chips.
+        rules["batch"] = ("pod", "data", "model")
+        rules["heads"] = None
+        rules["mlp"] = None
+        rules["kv_heads"] = None
+    if SHAPES[shape_name]["kind"] == "decode":
+        # cache TIME shards over model; intra-step "seq" (length 1) must
+        # stay unsharded or GSPMD replicates downstream compute (§Perf C3)
+        rules["cache_time"] = "model"
+        # Perf iteration C2: serving keeps weights RESIDENT (TP over model,
+        # replicated over data) — FSDP would re-all-gather every weight on
+        # every decode step (measured: ~1 GB/layer/step on qwen2.5-14b).
+        rules["embed"] = None
+    if shape_name == "long_500k":
+        rules["batch"] = None
+        rules["cache_time"] = ("pod", "data", "model")
+    return rules
+
+
+def batch_shardings(cfg: ArchConfig, specs: dict, mesh: Mesh) -> dict:
+    out = {}
+    for name, struct in specs.items():
+        if name == "cache":
+            caxes = cache_axes(cfg)
+            out[name] = {p: sh.input_sharding(struct[p].shape, caxes[p], mesh)
+                         for p in struct}
+        else:
+            out[name] = sh.input_sharding(struct.shape, BATCH_AXES[name],
+                                          mesh)
+    return out
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh, with_ef: bool = False):
+    pspecs = registry.param_specs(cfg)
+    psh = sh.param_shardings(pspecs, mesh)
+    repl = NamedSharding(mesh, P())
+    out = {"params": psh,
+           "opt": {"m": psh, "v": psh, "count": repl},
+           "step": repl}
+    if with_ef:
+        out["ef"] = psh
+    return out

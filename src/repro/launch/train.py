@@ -1,0 +1,116 @@
+"""Training launcher.
+
+Examples:
+  # CPU-runnable reduced config, synthetic data, checkpoints + auto-resume:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 200 --ckpt-dir /tmp/run1 --grad-compress
+
+  # production lowering check for a full config (no execution):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --lower-only
+
+On a real TPU pod this same entry point runs under one process per host
+(jax.distributed.initialize is called when JAX_COORDINATOR is set); the
+mesh/rules plumbing is identical to the dry-run's.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--gc-keep", type=int, default=16)
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="auto-restart from latest ckpt on crash")
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()   # multi-host pod entry
+
+    from repro.configs import registry as R
+    from repro.data.synth import DataConfig, make_batch_fn, \
+        make_encoder_batch_fn
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.grad_compress import GradCompressConfig
+    from repro.train.step import TrainStepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = R.reduced(args.arch) if args.reduced else R.get(args.arch)
+
+    if args.lower_only:
+        # single-device abstract lowering of the full config
+        from repro.models import registry as M
+        from repro.optim import adamw
+        from repro.train import step as step_lib
+        from repro.configs.base import input_specs
+        fn = step_lib.make_train_step(cfg, adamw.AdamWConfig(),
+                                      step_lib.TrainStepConfig())
+        state = step_lib.abstract_state(cfg, adamw.AdamWConfig())
+        specs = input_specs(cfg, "train_4k")
+        lowered = jax.jit(fn).lower(state, specs)
+        print(lowered.as_text()[:2000])
+        print(f"[lower-only] OK: {args.arch}")
+        return
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.batch, seed=args.seed)
+    if cfg.input_mode == "embeds":
+        batch_fn = make_encoder_batch_fn(dcfg, cfg.d_model)
+    else:
+        base = make_batch_fn(dcfg)
+        if cfg.input_mode == "mixed":
+            import jax.numpy as jnp
+
+            def batch_fn(step):
+                b = base(step)
+                bsz, s = b["tokens"].shape
+                b["vision_embeds"] = jnp.zeros((bsz, s, cfg.d_model),
+                                               cfg.compute_dtype)
+                b["vision_mask"] = jnp.zeros((bsz, s), bool)
+                b["positions3"] = jnp.broadcast_to(
+                    jnp.arange(s)[None, None], (3, bsz, s)).astype(jnp.int32)
+                return b
+        else:
+            batch_fn = base
+
+    gc = GradCompressConfig(enabled=args.grad_compress, keep=args.gc_keep)
+    scfg = TrainStepConfig(microbatches=args.microbatches, grad_compress=gc)
+    ocfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 5),
+                       decay_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+
+    restarts = 0
+    while True:
+        try:
+            trainer = Trainer(cfg, ocfg, tcfg, batch_fn, step_cfg=scfg,
+                              seed=args.seed)
+            history = trainer.run()
+            print(f"final loss: {history[-1]['loss']:.4f}")
+            return
+        except Exception:
+            restarts += 1
+            if restarts > args.max_restarts:
+                raise
+            print(f"[ft] crash detected; restart {restarts}/"
+                  f"{args.max_restarts} from latest checkpoint")
+
+
+if __name__ == "__main__":
+    main()

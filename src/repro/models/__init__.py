@@ -1,0 +1,1 @@
+"""Model zoo: one module per architecture family (pure JAX)."""

@@ -1,0 +1,291 @@
+"""DeepSeek-V3: Multi-head Latent Attention (MLA) + fine-grained MoE + MTP.
+
+MLA (arXiv:2412.19437): queries/keys/values are produced through low-rank
+latents; the KV cache stores only the 512-d compressed latent + the 64-d
+decoupled RoPE key per token (vs H*hd*2).  Decode uses the *absorbed*
+formulation (W^UK folded into the query, W^UV folded into the output), so
+per-step attention works directly on the latent cache — the cache is ~9x
+smaller than GQA-128 and the decode step is MQA-like with 576-wide heads.
+
+This synergises with the framework's DCT KV compression (serve/kv_compress):
+both attack the same decode-HBM roofline term; the dry-run quantifies each.
+
+MTP: one extra transformer depth predicting token t+2 (shared embedding and
+head), used as an auxiliary training loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers, moe
+from repro.models.params import ParamSpec, subtree
+
+
+def mla_param_specs(cfg: ArchConfig, lead, lax_, prefix) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        f"{prefix}/wq_a": ParamSpec(lead + (d, qr), lax_ + ("embed", None)),
+        f"{prefix}/q_norm": ParamSpec(lead + (qr,), lax_ + (None,),
+                                      init="ones"),
+        f"{prefix}/wq_b": ParamSpec(lead + (qr, h * (dn + dr)),
+                                    lax_ + (None, "heads")),
+        f"{prefix}/wkv_a": ParamSpec(lead + (d, kvr + dr),
+                                     lax_ + ("embed", None)),
+        f"{prefix}/kv_norm": ParamSpec(lead + (kvr,), lax_ + (None,),
+                                       init="ones"),
+        f"{prefix}/wkv_b": ParamSpec(lead + (kvr, h * (dn + dv)),
+                                     lax_ + (None, "heads")),
+        f"{prefix}/wo": ParamSpec(lead + (h * dv, d),
+                                  lax_ + ("heads", "embed")),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    nd = cfg.first_dense_layers
+    nm = cfg.n_layers - nd
+    sp = {"embed/tokens": ParamSpec((v, d), ("vocab", "embed"),
+                                    init="embed")}
+    # first-k dense blocks (unscanned)
+    for i in range(nd):
+        pre = f"dense{i}"
+        sp[f"{pre}/attn_norm"] = ParamSpec((d,), (None,), init="ones")
+        sp.update(mla_param_specs(cfg, (), (), f"{pre}/attn"))
+        sp[f"{pre}/mlp_norm"] = ParamSpec((d,), (None,), init="ones")
+        sp[f"{pre}/mlp/wi_gate"] = ParamSpec((d, cfg.d_ff * 9),
+                                             ("embed", "mlp"))
+        sp[f"{pre}/mlp/wi_up"] = ParamSpec((d, cfg.d_ff * 9),
+                                           ("embed", "mlp"))
+        sp[f"{pre}/mlp/wo"] = ParamSpec((cfg.d_ff * 9, d), ("mlp", "embed"))
+    # scanned MoE blocks
+    lead, lax_ = (nm,), ("layers",)
+    sp["blocks/attn_norm"] = ParamSpec(lead + (d,), lax_ + (None,),
+                                       init="ones")
+    sp.update(mla_param_specs(cfg, lead, lax_, "blocks/attn"))
+    sp["blocks/mlp_norm"] = ParamSpec(lead + (d,), lax_ + (None,),
+                                      init="ones")
+    sp.update(moe.param_specs(cfg, lead, lax_, "blocks/moe"))
+    sp["final_norm"] = ParamSpec((d,), (None,), init="ones")
+    sp["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    if cfg.mtp_depth:
+        sp["mtp/norm_in"] = ParamSpec((d,), (None,), init="ones")
+        sp["mtp/norm_emb"] = ParamSpec((d,), (None,), init="ones")
+        sp["mtp/proj"] = ParamSpec((2 * d, d), (None, "embed"))
+        sp["mtp/attn_norm"] = ParamSpec((d,), (None,), init="ones")
+        sp.update(mla_param_specs(cfg, (), (), "mtp/attn"))
+        sp["mtp/mlp_norm"] = ParamSpec((d,), (None,), init="ones")
+        sp["mtp/mlp/wi_gate"] = ParamSpec((d, cfg.d_ff * 9), ("embed", "mlp"))
+        sp["mtp/mlp/wi_up"] = ParamSpec((d, cfg.d_ff * 9), ("embed", "mlp"))
+        sp["mtp/mlp/wo"] = ParamSpec((cfg.d_ff * 9, d), ("mlp", "embed"))
+        sp["mtp/final_norm"] = ParamSpec((d,), (None,), init="ones")
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# MLA attention
+# ---------------------------------------------------------------------------
+
+def _rope_pair(x, cos, sin):
+    """x (B, S, H, dr) — rotate-half RoPE on the decoupled dims."""
+    return layers.apply_rope(x, cos, sin)
+
+
+def mla_attention(cfg: ArchConfig, p: dict, x, cos, sin,
+                  cache: dict | None = None, cache_index=None):
+    """Returns (out, new_cache).  cache: {"ckv": (B,T,kvr), "krope": (B,T,dr)}."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    cq = layers.rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = _rope_pair(q_rope, cos, sin)
+
+    kv_a = x @ p["wkv_a"]                                  # (B, S, kvr+dr)
+    ckv = layers.rms_norm(kv_a[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    k_rope = _rope_pair(kv_a[..., None, kvr:], cos, sin)   # (B, S, 1, dr)
+    k_rope = k_rope[:, :, 0]                               # (B, S, dr)
+
+    new_cache = None
+    if cache is not None:
+        ckv_c = layers.cache_update(cache["ckv"], ckv, cache_index)
+        kr_c = layers.cache_update(cache["krope"], k_rope, cache_index)
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        # ---- absorbed decode path (MQA-like over the latent cache) -------
+        wkv_b = p["wkv_b"].reshape(kvr, h, dn + dv)
+        wk = wkv_b[..., :dn]                                # (kvr, H, dn)
+        wv = wkv_b[..., dn:]                                # (kvr, H, dv)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk)    # (B, s, H, kvr)
+        ckv_all = ckv_c.astype(x.dtype)                     # (B, T, kvr)
+        kr_all = kr_c.astype(x.dtype)                       # (B, T, dr)
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_all) +
+                  jnp.einsum("bshr,btr->bhst", q_rope, kr_all)) * scale
+        t = ckv_all.shape[1]
+        kpos = jnp.arange(t)
+        mask = kpos[None, :] > (cache_index + jnp.arange(s)[:, None])
+        scores = jnp.where(mask[None, None], -1e30, scores)
+        attn = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                              ).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", attn, ckv_all)   # (B, s, H, kvr)
+        out = jnp.einsum("bshr,rhv->bshv", ctx, wv)         # (B, s, H, dv)
+        out = out.reshape(b, s, h * dv) @ p["wo"]
+        return out, new_cache
+
+    # ---- train/prefill path (full materialisation) ------------------------
+    kv = (ckv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, dr))],
+        axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qf = constrain(qf, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "heads", "head_dim")
+    scores = jnp.einsum("bshd,bthd->bhst", qf, k) * scale
+    mask = jnp.arange(s)[None, :] > jnp.arange(s)[:, None]
+    scores = jnp.where(mask[None, None], -1e30, scores)
+    attn = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", attn, v)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = out.reshape(b, s, h * dv) @ p["wo"]
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int):
+    ll = cfg.n_layers
+    return {
+        "ckv": ((ll, batch, max_len, cfg.kv_lora_rank), cfg.compute_dtype),
+        "krope": ((ll, batch, max_len, cfg.qk_rope_dim), cfg.compute_dtype),
+    }
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return {k: jax.ShapeDtypeStruct(s, d)
+            for k, (s, d) in cache_struct(cfg, batch, max_len).items()}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return {k: jnp.zeros(s, d)
+            for k, (s, d) in cache_struct(cfg, batch, max_len).items()}
+
+
+# ---------------------------------------------------------------------------
+# blocks / model
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, p, x, cos, sin, cache, cache_index):
+    h, nc = mla_attention(cfg, subtree(p, "attn"),
+                          layers.rms_norm(x, p["attn_norm"], cfg.norm_eps),
+                          cos, sin, cache, cache_index)
+    x = x + h
+    g = layers.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + layers.swiglu(subtree(p, "mlp"), g), nc
+
+
+def _moe_block(cfg, p, x, cos, sin, cache, cache_index):
+    h, nc = mla_attention(cfg, subtree(p, "attn"),
+                          layers.rms_norm(x, p["attn_norm"], cfg.norm_eps),
+                          cos, sin, cache, cache_index)
+    x = x + h
+    g = layers.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    y, aux = moe.moe_ffn(cfg, subtree(p, "moe"), g)
+    return x + y, nc, aux
+
+
+def apply(cfg: ArchConfig, params: dict, batch: dict, *, mode: str = "train",
+          cache: dict | None = None):
+    emb = params["embed/tokens"].astype(cfg.compute_dtype)
+    x = emb[batch["tokens"]]
+    b, s, _ = x.shape
+    decode = mode == "decode"
+    cache_index = batch.get("cache_index") if decode else None
+    pos = (jnp.arange(s)[None] if cache_index is None
+           else cache_index + jnp.arange(s)[None])
+    pos = jnp.broadcast_to(pos, (b, s))
+    cos, sin = layers.rope_angles(pos, cfg.qk_rope_dim, cfg.rope_base)
+    x = constrain(x, "batch", "seq", "embed")
+
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(cfg.compute_dtype)
+        if a.dtype == jnp.float32 else a, t)
+
+    nd = cfg.first_dense_layers
+    new_cache = dict(cache) if cache is not None else None
+
+    for i in range(nd):
+        p = cast(subtree(params, f"dense{i}"))
+        lc = None
+        if cache is not None:
+            lc = {"ckv": cache["ckv"][i], "krope": cache["krope"][i]}
+        x, nc = _dense_block(cfg, p, x, cos, sin, lc, cache_index)
+        if new_cache is not None and nc is not None:
+            new_cache["ckv"] = new_cache["ckv"].at[i].set(nc["ckv"])
+            new_cache["krope"] = new_cache["krope"].at[i].set(nc["krope"])
+
+    blocks = cast(subtree(params, "blocks"))
+
+    def block_fn(carry, layer_p, layer_cache):
+        h, aux_sum = carry
+        if layer_cache is not None:
+            lc = {"ckv": layer_cache[0], "krope": layer_cache[1]}
+        else:
+            lc = None
+        out, nc, aux = _moe_block(cfg, layer_p, h, cos, sin, lc, cache_index)
+        ys = (nc["ckv"], nc["krope"]) if nc is not None else None
+        return (out, aux_sum + aux), ys
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        block_fn = jax.checkpoint(block_fn, policy=policy)
+
+    moe_cache = None
+    if cache is not None:
+        moe_cache = (cache["ckv"][nd:], cache["krope"][nd:])
+
+    def scan_body(carry, xs):
+        layer_p, layer_cache = xs
+        return block_fn(carry, layer_p, layer_cache)
+
+    (x, aux_total), ys = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), (blocks, moe_cache))
+    if new_cache is not None and ys is not None:
+        new_cache["ckv"] = new_cache["ckv"].at[nd:].set(ys[0])
+        new_cache["krope"] = new_cache["krope"].at[nd:].set(ys[1])
+
+    hidden = x
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"].astype(cfg.compute_dtype)
+    logits = x @ head
+    logits = constrain(logits, "batch", "seq", "vocab")
+
+    aux = {"aux_loss": aux_total}
+    # ---- MTP auxiliary head (training only) --------------------------------
+    if cfg.mtp_depth and mode == "train" and "tokens" in batch:
+        p = cast(subtree(params, "mtp"))
+        # combine h_t with embedding of token t+1 to predict token t+2
+        nxt = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        e = emb[nxt]
+        hcat = jnp.concatenate(
+            [layers.rms_norm(hidden, p["norm_in"], cfg.norm_eps),
+             layers.rms_norm(e, p["norm_emb"], cfg.norm_eps)], axis=-1)
+        hm = hcat @ p["proj"]
+        hm, _ = _dense_block(cfg, p, hm, cos, sin, None, None)
+        hm = layers.rms_norm(hm, p["final_norm"], cfg.norm_eps)
+        aux["mtp_logits"] = hm @ head
+    return logits, new_cache, aux

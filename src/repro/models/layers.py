@@ -1,0 +1,209 @@
+"""Shared model building blocks (pure JAX, flat param dicts).
+
+Conventions:
+  * params are flat dicts path -> array; helpers take the relevant subtree.
+  * activations carry logical sharding tags via dist.sharding.constrain.
+  * compute dtype (bf16 on TPU) is the caller's responsibility: blocks
+    compute in the dtype of their inputs; norms accumulate in f32.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with f32 *row statistics* only: the mean-of-squares reduces
+    in f32 via the contraction's accumulator (no x-sized f32 temporaries —
+    Perf iteration A2, EXPERIMENTS.md §Perf)."""
+    dtype = x.dtype
+    sq = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    var = sq[..., None] / x.shape[-1]
+    scale = jax.lax.rsqrt(var + eps).astype(dtype)
+    return x * scale * weight.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                base: float = 1e6) -> tuple:
+    """positions (..., S) -> (cos, sin) of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x (B, S, H, D) with (cos, sin) (B, S, D/2) — rotate-half convention.
+
+    Rotation runs in the input dtype (angles are precomputed in f32 and cast
+    once; rope phases are exactly representable enough in bf16 for training
+    — x-sized f32 temporaries removed, Perf iteration A2)."""
+    dtype = x.dtype
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(dtype)
+    s = sin[..., None, :].astype(dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def mrope_angles(positions3: jnp.ndarray, head_dim: int,
+                 sections: tuple = (16, 24, 24), base: float = 1e6) -> tuple:
+    """M-RoPE (Qwen2-VL): positions3 (3, B, S) temporal/height/width.
+
+    Frequency slots are split into ``sections`` (halves of head_dim//2);
+    each section takes its angle from the corresponding position stream.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions3[..., None].astype(jnp.float32) * freqs  # (3, B, S, half)
+    parts, start = [], 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                    # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def stable_softmax(scores: jnp.ndarray, out_dtype) -> jnp.ndarray:
+    """Softmax with f32 *row statistics* but score-sized traffic in the
+    compute dtype (Perf iteration A, EXPERIMENTS.md §Perf): the S^2-sized
+    tensors stay bf16 (the flash-attention accumulator discipline expressed
+    at the HLO level); only the rowwise max/sum are f32."""
+    m = jnp.max(scores, axis=-1, keepdims=True)        # row max (compute dt)
+    e = jnp.exp(scores - m)                             # score-sized, bf16
+    z = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)  # f32 rows
+    return e * (1.0 / z).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional biases / qk-norm / cache)
+# ---------------------------------------------------------------------------
+
+def cache_update(cache: jnp.ndarray, new: jnp.ndarray, index) -> jnp.ndarray:
+    """Write ``new`` (B, s, ...) into ``cache`` (B, T, ...) at ``index``.
+
+    Single-token decode uses a one-hot masked select instead of
+    dynamic_update_slice: a DUS at a runtime index into a time-sharded
+    cache forces GSPMD to all-gather the operand, while the masked select
+    is elementwise — every T-shard updates locally (Perf iteration C,
+    EXPERIMENTS.md §Perf).  Multi-token writes (prefill) keep the DUS.
+    """
+    new = new.astype(cache.dtype)
+    if new.shape[1] == 1:
+        t = cache.shape[1]
+        onehot = (jnp.arange(t) == index)
+        shape = (1, t) + (1,) * (cache.ndim - 2)
+        return jnp.where(onehot.reshape(shape), new, cache)
+    idx = (jnp.zeros((), jnp.int32), index) + \
+        (jnp.zeros((), jnp.int32),) * (cache.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache, new, idx)
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, T, Hkv, D) -> (B, T, Hkv*groups, D)."""
+    if groups == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, groups, d)
+                            ).reshape(b, t, h * groups, d)
+
+
+def attention(p: dict, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, cos: jnp.ndarray, sin: jnp.ndarray,
+              causal: bool = True, qk_norm: bool = False,
+              cache: dict | None = None, cache_index=None,
+              q_positions: jnp.ndarray | None = None,
+              window: int | None = None) -> tuple:
+    """GQA attention.
+
+    p: wq (d, H*hd), wk/wv (d, Hkv*hd), wo (H*hd, d), optional bq/bk/bv,
+       optional q_norm/k_norm (hd,).
+    cache: {"k","v"} (B, T_max, Hkv, hd) ring/linear cache; cache_index is
+       the write position (decode) — returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+
+    new_cache = None
+    if cache is not None:
+        assert cache_index is not None
+        ck = cache_update(cache["k"], k, cache_index)
+        cv = cache_update(cache["v"], v, cache_index)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+
+    t = k.shape[1]
+    groups = n_heads // n_kv_heads
+    # grouped-query einsum: KV heads are never materialised G-wide
+    qg = q.reshape(b, s, n_kv_heads, groups, head_dim)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / math.sqrt(head_dim)
+    kpos = jnp.arange(t)
+    if q_positions is None:
+        q_positions = jnp.arange(s) if cache is None else (
+            cache_index + jnp.arange(s))
+    mask = None
+    if causal:
+        mask = kpos[None, :] > q_positions[:, None]             # future
+    if cache is not None:
+        beyond = kpos[None, :] > (cache_index + s - 1)          # unwritten
+        mask = beyond if mask is None else (mask | beyond)
+    if window is not None:
+        old = kpos[None, :] < (q_positions[:, None] - window + 1)
+        mask = old if mask is None else (mask | old)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], -1e30, scores)
+    attn = stable_softmax(scores, x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", attn, v)
+    out = constrain(out.reshape(b, s, n_heads, head_dim),
+                    "batch", "seq", "heads", "head_dim")
+    out = out.reshape(b, s, n_heads * head_dim) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """p: wi_gate, wi_up (d, f), wo (f, d)."""
+    gate = x @ p["wi_gate"]
+    up = x @ p["wi_up"]
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ p["wo"]
+
+
+def gelu_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """p: wi (d, f), wo (f, d) — classic encoder FFN (HuBERT)."""
+    h = jax.nn.gelu(x @ p["wi"])
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ p["wo"]

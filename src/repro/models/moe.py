@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Dispatch design (DESIGN.md §5): token-choice top-K routing with *per-expert
+top-C capacity selection* — each expert gathers the C highest-probability
+tokens among those that selected it.  This is GShard-style capacity
+dropping implemented with gather/scatter instead of the O(T·E·C) one-hot
+einsum, so peak memory is O(T·E) for the routing table plus O(E·C·d) for
+the expert batch — both shardable ("experts" on the model axis, capacity on
+the data axis), and expert FLOPs are exactly the active top-K FLOPs (big
+MXU-shaped batched matmuls).
+
+The gather across the token axis is what becomes the EP all-to-all under
+GSPMD; benchmarks measure it in the dry-run's collective table.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+def param_specs(cfg: ArchConfig, lead: tuple, lead_axes: tuple,
+                prefix: str) -> dict:
+    d, fe, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    sp = {}
+    sp[f"{prefix}/router"] = ParamSpec(lead + (d, e), lead_axes +
+                                       ("embed", None), scale=0.02)
+    if cfg.router_type == "sigmoid":
+        sp[f"{prefix}/router_bias"] = ParamSpec(lead + (e,),
+                                                lead_axes + (None,),
+                                                init="zeros")
+    sp[f"{prefix}/experts/wi_gate"] = ParamSpec(
+        lead + (e, d, fe), lead_axes + ("experts", "embed", None))
+    sp[f"{prefix}/experts/wi_up"] = ParamSpec(
+        lead + (e, d, fe), lead_axes + ("experts", "embed", None))
+    sp[f"{prefix}/experts/wo"] = ParamSpec(
+        lead + (e, fe, d), lead_axes + ("experts", None, "embed"))
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        sp[f"{prefix}/shared/wi_gate"] = ParamSpec(lead + (d, fs),
+                                                   lead_axes + ("embed", "mlp"))
+        sp[f"{prefix}/shared/wi_up"] = ParamSpec(lead + (d, fs),
+                                                 lead_axes + ("embed", "mlp"))
+        sp[f"{prefix}/shared/wo"] = ParamSpec(lead + (fs, d),
+                                              lead_axes + ("mlp", "embed"))
+    return sp
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.moe_top_k * cfg.moe_capacity_factor
+                      / cfg.n_experts))
+    return min(max(8, c), n_tokens)
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> tuple:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    xf = x.reshape(t, d)
+    xf = constrain(xf, "batch", "embed")
+
+    # ---- routing ---------------------------------------------------------
+    router = p["router"].astype(jnp.float32)
+    logits = xf.astype(jnp.float32) @ router                    # (T, E)
+    if cfg.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits + p["router_bias"])
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, k)                  # (T, K)
+    topk_w = topk_w / (topk_w.sum(-1, keepdims=True) + 1e-9)
+
+    # dense (T, E) table of the chosen weights (0 where not chosen)
+    onehot = jax.nn.one_hot(topk_idx, e, dtype=jnp.float32)     # (T, K, E)
+    table = jnp.einsum("tke,tk->te", onehot, topk_w)            # (T, E)
+    table = constrain(table, "batch", None)
+
+    # ---- per-expert capacity selection ------------------------------------
+    c = capacity(cfg, t)
+    masked = jnp.where(table > 0, probs, -1.0)                  # (T, E)
+    sel_score, sel_idx = jax.lax.top_k(masked.T, c)             # (E, C)
+    valid = sel_score > 0
+    gate = jnp.take_along_axis(table.T, sel_idx, axis=-1)       # (E, C)
+    gate = jnp.where(valid, gate, 0.0)
+
+    # ---- expert computation (the EP all-to-all happens here) --------------
+    xg = jnp.take(xf, sel_idx.reshape(-1), axis=0)              # (E*C, d)
+    xg = xg.reshape(e, c, d)
+    xg = constrain(xg, "experts", "expert_cap", None)
+    wg = p["experts/wi_gate"]
+    wu = p["experts/wi_up"]
+    wo = p["experts/wo"]
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, wg))
+    hidden = hidden * jnp.einsum("ecd,edf->ecf", xg, wu)
+    hidden = constrain(hidden, "experts", "expert_cap", None)
+    y = jnp.einsum("ecf,efd->ecd", hidden, wo)                  # (E, C, d)
+    y = y * gate[..., None].astype(y.dtype)
+
+    # ---- scatter-add back to token order -----------------------------------
+    out = jnp.zeros((t, d), y.dtype)
+    out = out.at[sel_idx.reshape(-1)].add(y.reshape(-1, d),
+                                          mode="drop")
+    out = constrain(out, "batch", "embed")
+
+    # ---- shared experts -----------------------------------------------------
+    if cfg.n_shared_experts:
+        gate_s = jax.nn.silu(xf @ p["shared/wi_gate"])
+        up_s = xf @ p["shared/wi_up"]
+        out = out + (gate_s * up_s) @ p["shared/wo"]
+
+    # ---- load-balance aux loss (Switch-style) -------------------------------
+    me = probs.mean(axis=0)                                      # (E,)
+    ce = (table > 0).astype(jnp.float32).mean(axis=0) / k        # (E,)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,47 @@
+"""Model registry: ArchConfig -> (param_specs, apply, caches)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import params as P
+
+
+def _module(cfg: ArchConfig):
+    if cfg.use_mla:
+        from repro.models import deepseek
+        return deepseek
+    if cfg.family == "hybrid":
+        from repro.models import zamba
+        return zamba
+    if cfg.family == "ssm":
+        from repro.models import xlstm
+        return xlstm
+    from repro.models import transformer
+    return transformer
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    return _module(cfg).param_specs(cfg)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    return P.init_params(param_specs(cfg), key)
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    return P.abstract_params(param_specs(cfg))
+
+
+def apply(cfg: ArchConfig, params: dict, batch: dict, *, mode: str = "train",
+          cache: dict | None = None):
+    return _module(cfg).apply(cfg, params, batch, mode=mode, cache=cache)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return _module(cfg).abstract_cache(cfg, batch, max_len)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return _module(cfg).init_cache(cfg, batch, max_len)

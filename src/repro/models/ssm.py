@@ -1,0 +1,194 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan, TPU-native formulation.
+
+The SSD "state-space duality" algorithm maps naturally onto the MXU: within
+a chunk the recurrence is a masked (decay-weighted) attention-like batched
+matmul; across chunks a short ``lax.scan`` carries the (H, P, N) state.
+Per-token cost is O(P·N + Q·P) — sub-quadratic in sequence length, which is
+why the ssm/hybrid archs own the ``long_500k`` cell (DESIGN.md §5).
+
+Decode is the O(1) recurrent update on the carried state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamSpec, subtree
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_heads_ssm(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def param_specs(cfg: ArchConfig, lead: tuple, lead_axes: tuple,
+                prefix: str) -> dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_heads_ssm(cfg)
+    k = cfg.ssm_conv
+    conv_ch = di + 2 * n            # xBC channels get the causal conv
+    sp = {
+        f"{prefix}/in_proj": ParamSpec(
+            lead + (d, 2 * di + 2 * n + h), lead_axes + ("embed", "mlp")),
+        f"{prefix}/conv_w": ParamSpec(
+            lead + (k, conv_ch), lead_axes + ("conv_k", "mlp"), scale=0.1),
+        f"{prefix}/conv_b": ParamSpec(
+            lead + (conv_ch,), lead_axes + ("mlp",), init="zeros"),
+        f"{prefix}/A_log": ParamSpec(
+            lead + (h,), lead_axes + ("heads",), init="zeros"),
+        f"{prefix}/D": ParamSpec(
+            lead + (h,), lead_axes + ("heads",), init="ones"),
+        f"{prefix}/dt_bias": ParamSpec(
+            lead + (h,), lead_axes + ("heads",), init="zeros"),
+        f"{prefix}/norm": ParamSpec(
+            lead + (di,), lead_axes + ("mlp",), init="ones"),
+        f"{prefix}/out_proj": ParamSpec(
+            lead + (di, d), lead_axes + ("mlp", "embed")),
+    }
+    return sp
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., Q) -> (..., Q, Q) lower-tri matrix L[t,s] = sum_{s<r<=t} a[r]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """SSD forward.
+
+    x  (B, S, H, P)   inputs per head
+    dt (B, S, H)      positive step sizes (softplus already applied)
+    a_log (H,)        A = -exp(a_log)
+    b, c (B, S, N)    input/output projections (single group)
+    d_skip (H,)       skip connection
+    Returns y (B, S, H, P), final_state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))            # (H,)
+    dta = dt.astype(jnp.float32) * a                   # (B, S, H) log-decay
+    xb = (x * dt[..., None]).astype(jnp.float32)       # dt-weighted input
+
+    # reshape into chunks
+    xc = xb.reshape(bsz, nc, q, h, p)
+    dc = dta.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic within chunk, MXU batched matmul) ---------
+    L = _segsum(dc.transpose(0, 1, 3, 2))              # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)     # (B, nc, Q, Q)
+    m = jnp.exp(L) * scores[:, :, None]                # (B, nc, H, Q, Q)
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", m, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    cum = jnp.cumsum(dc, axis=2)                       # (B, nc, Q, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # (B, nc, Q, H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bc, decay_to_end, xc)
+
+    # ---- inter-chunk scan ---------------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B, nc, H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                               # emit state *before*
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # ---- inter-chunk contribution -------------------------------------------
+    in_decay = jnp.exp(cum)                             # (B, nc, Q, H)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, prev_states, in_decay)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, final
+
+
+def mamba_block(cfg: ArchConfig, p: dict, x: jnp.ndarray,
+                state: dict | None = None):
+    """One Mamba2 block.  x (B, S, d).
+
+    state (decode): {"conv": (B, K-1, conv_ch), "ssm": (B, H, P, N)}.
+    Returns (out, new_state | None).
+    """
+    bsz, s, d = x.shape
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_heads_ssm(cfg)
+    pdim = cfg.ssm_head_dim
+    k = cfg.ssm_conv
+
+    proj = x @ p["in_proj"]
+    # split: z (di) | xbc (di + 2n) | dt (h)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n:]
+
+    # causal conv over xbc channels
+    conv_w = p["conv_w"]                                # (K, C)
+    if state is None:
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+        new_conv = None
+        conv_out = sum(pad[:, i:i + s] * conv_w[i] for i in range(k))
+    else:
+        hist = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, K-1+s, C)
+        conv_out = sum(hist[:, i:i + s] * conv_w[i] for i in range(k))
+        new_conv = hist[:, -(k - 1):]
+    xbc = jax.nn.silu(conv_out + p["conv_b"])
+
+    xin = xbc[..., :di].reshape(bsz, s, h, pdim)
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if state is None:
+        y, _ = ssd_chunked(xin, dt, p["A_log"], b, c, p["D"], cfg.ssm_chunk)
+        new_ssm = None
+    else:
+        # recurrent decode update (s == 1)
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dta = jnp.exp(dt[:, 0] * a)                     # (B, H)
+        xbar = xin[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+        upd = jnp.einsum("bn,bhp->bhpn", b[:, 0].astype(jnp.float32), xbar)
+        new_ssm = state["ssm"] * dta[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), new_ssm)
+        y = y + xin[:, 0].astype(jnp.float32) * p["D"][None, :, None]
+        y = y[:, None]
+
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if state is None:
+        return out, None
+    return out, {"conv": new_conv, "ssm": new_ssm.astype(jnp.float32)}
+
+
+def mamba_state_struct(cfg: ArchConfig, batch: int):
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_heads_ssm(cfg)
+    return {
+        "conv": ((batch, cfg.ssm_conv - 1, di + 2 * n), cfg.compute_dtype),
+        "ssm": ((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+    }

@@ -1,0 +1,208 @@
+"""Dense decoder-only transformer (llama/qwen family), encoder variant
+(HuBERT) and VLM backbone (Qwen2-VL M-RoPE) — one implementation.
+
+Layers are scanned (``lax.scan`` over stacked block params) so HLO size is
+O(1) in depth; remat policy is configurable per config.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamSpec, subtree
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attn_param_specs(cfg: ArchConfig, lead: tuple, lead_axes: tuple,
+                     prefix: str) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    sp = {}
+    sp[f"{prefix}/wq"] = ParamSpec(lead + (d, h * hd),
+                                   lead_axes + ("embed", "heads"))
+    sp[f"{prefix}/wk"] = ParamSpec(lead + (d, hkv * hd),
+                                   lead_axes + ("embed", "kv_heads"))
+    sp[f"{prefix}/wv"] = ParamSpec(lead + (d, hkv * hd),
+                                   lead_axes + ("embed", "kv_heads"))
+    sp[f"{prefix}/wo"] = ParamSpec(lead + (h * hd, d),
+                                   lead_axes + ("heads", "embed"))
+    if cfg.qkv_bias:
+        sp[f"{prefix}/bq"] = ParamSpec(lead + (h * hd,),
+                                       lead_axes + ("heads",), init="zeros")
+        sp[f"{prefix}/bk"] = ParamSpec(lead + (hkv * hd,),
+                                       lead_axes + ("kv_heads",), init="zeros")
+        sp[f"{prefix}/bv"] = ParamSpec(lead + (hkv * hd,),
+                                       lead_axes + ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        sp[f"{prefix}/q_norm"] = ParamSpec(lead + (hd,),
+                                           lead_axes + (None,), init="ones")
+        sp[f"{prefix}/k_norm"] = ParamSpec(lead + (hd,),
+                                           lead_axes + (None,), init="ones")
+    return sp
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    ll = cfg.n_layers
+    lead, lax_ = ((ll,), ("layers",)) if cfg.scan_layers else ((), ())
+    sp = {}
+    if cfg.input_mode != "embeds":
+        sp["embed/tokens"] = ParamSpec((v, d), ("vocab", "embed"),
+                                       init="embed")
+    sp[f"blocks/attn_norm"] = ParamSpec(lead + (d,), lax_ + (None,),
+                                        init="ones")
+    sp.update(attn_param_specs(cfg, lead, lax_, "blocks/attn"))
+    sp["blocks/mlp_norm"] = ParamSpec(lead + (d,), lax_ + (None,),
+                                      init="ones")
+    if cfg.n_experts:
+        from repro.models import moe
+        sp.update(moe.param_specs(cfg, lead, lax_, "blocks/moe"))
+    elif cfg.is_encoder:
+        sp["blocks/mlp/wi"] = ParamSpec(lead + (d, f), lax_ + ("embed", "mlp"))
+        sp["blocks/mlp/wo"] = ParamSpec(lead + (f, d), lax_ + ("mlp", "embed"))
+    else:
+        sp["blocks/mlp/wi_gate"] = ParamSpec(lead + (d, f),
+                                             lax_ + ("embed", "mlp"))
+        sp["blocks/mlp/wi_up"] = ParamSpec(lead + (d, f),
+                                           lax_ + ("embed", "mlp"))
+        sp["blocks/mlp/wo"] = ParamSpec(lead + (f, d), lax_ + ("mlp", "embed"))
+    sp["final_norm"] = ParamSpec((d,), (None,), init="ones")
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int):
+    hd, hkv, ll = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_layers
+    shape = (ll, batch, max_len, hkv, hd)
+    return {"k": (shape, cfg.compute_dtype), "v": (shape, cfg.compute_dtype)}
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return {k: jax.ShapeDtypeStruct(s, d)
+            for k, (s, d) in cache_struct(cfg, batch, max_len).items()}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return {k: jnp.zeros(s, d)
+            for k, (s, d) in cache_struct(cfg, batch, max_len).items()}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _angles(cfg: ArchConfig, batch: dict, b: int, s: int, cache_index):
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections is not None:
+        pos3 = batch.get("positions3")
+        if pos3 is None:
+            base_pos = jnp.arange(s)[None] if cache_index is None else (
+                cache_index + jnp.arange(s)[None])
+            pos3 = jnp.broadcast_to(base_pos, (3, b, s))
+        return layers.mrope_angles(pos3, hd, cfg.mrope_sections,
+                                   cfg.rope_base)
+    pos = jnp.arange(s)[None] if cache_index is None else (
+        cache_index + jnp.arange(s)[None])
+    pos = jnp.broadcast_to(pos, (b, s))
+    return layers.rope_angles(pos, hd, cfg.rope_base)
+
+
+def _embed_inputs(cfg: ArchConfig, params: dict, batch: dict):
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        emb = params["embed/tokens"].astype(cfg.compute_dtype)
+        x = emb[batch["tokens"]]
+        if cfg.input_mode == "mixed" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(cfg.compute_dtype)
+            x = jnp.where(batch["vision_mask"][..., None], ve, x)
+    return x
+
+
+def apply(cfg: ArchConfig, params: dict, batch: dict, *, mode: str = "train",
+          cache: dict | None = None):
+    """Returns (logits, new_cache, aux)."""
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    cache_index = batch.get("cache_index") if mode == "decode" else None
+    cos, sin = _angles(cfg, batch, b, s, cache_index)
+    x = constrain(x, "batch", "seq", "embed")
+
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(cfg.compute_dtype)
+        if a.dtype == jnp.float32 else a, t)
+    blocks = cast(subtree(params, "blocks"))
+
+    def block_fn(x, layer_p, layer_cache):
+        return _run_block(cfg, layer_p, x, cos, sin, layer_cache, cache_index)
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        block_fn = jax.checkpoint(block_fn, policy=policy,
+                                  static_argnums=())
+
+    if cfg.scan_layers:
+        def scan_body(carry, xs):
+            h, aux_sum = carry
+            layer_p, layer_cache = xs
+            out, new_c, aux = block_fn(h, layer_p, layer_cache)
+            return (out, aux_sum + aux), new_c
+        (x, aux_total), new_cache = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), (blocks, cache))
+        if cache is None:
+            new_cache = None
+    else:
+        new_cache = None
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            layer_p = jax.tree.map(lambda a: a[i], blocks)
+            layer_cache = (jax.tree.map(lambda a: a[i], cache)
+                           if cache is not None else None)
+            x, _, aux = block_fn(x, layer_p, layer_cache)
+            aux_total = aux_total + aux
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = params["embed/tokens"].astype(cfg.compute_dtype).T
+    else:
+        head = params["lm_head"].astype(cfg.compute_dtype)
+    logits = x @ head
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, new_cache, {"aux_loss": aux_total}
+
+
+def _run_block(cfg: ArchConfig, p: dict, x, cos, sin, cache, cache_index):
+    attn_in = layers.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    h, new_cache = layers.attention(
+        subtree(p, "attn"), attn_in,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, cos=cos, sin=sin,
+        causal=not cfg.is_encoder, qk_norm=cfg.qk_norm,
+        cache=cache, cache_index=cache_index)
+    x = x + h
+    g = layers.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        from repro.models import moe
+        y, aux = moe.moe_ffn(cfg, subtree(p, "moe"), g)
+        x = x + y
+    else:
+        mlp = layers.gelu_mlp if cfg.is_encoder else layers.swiglu
+        x = x + mlp(subtree(p, "mlp"), g)
+    return x, new_cache, aux

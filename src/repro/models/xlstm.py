@@ -1,0 +1,394 @@
+"""xLSTM blocks — mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, recurrent scan), per Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM is computed in the *chunkwise stabilised* form: within a chunk the
+gated outer-product recurrence collapses to decay-masked attention-like
+batched matmuls (MXU-shaped); across chunks a ``lax.scan`` carries the
+(H, dqk, dv) matrix memory C, the normaliser n and the stabiliser m.  The
+chunked form is bit-matched against the step recurrence in tests, and the
+step recurrence is the decode path.
+
+sLSTM is inherently sequential (the paper's point: true recurrence with
+memory mixing) — a ``lax.scan`` over time with block-diagonal per-head
+recurrent matrices; input projections are hoisted out of the scan.
+
+Block layout follows the 1.3B config: mostly mLSTM blocks (pre-up-projection
+factor 2, no FFN) with sLSTM blocks (post-FFN, proj factor 4/3) every
+``slstm_every`` positions.  d_ff=0 in the assignment encodes exactly this
+in-block feed-forward structure.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamSpec, subtree
+
+
+# ---------------------------------------------------------------------------
+# dims
+# ---------------------------------------------------------------------------
+
+def m_inner(cfg: ArchConfig) -> int:
+    return int(cfg.mlstm_proj_factor * cfg.d_model)
+
+
+def m_qk(cfg: ArchConfig) -> int:
+    return int(cfg.mlstm_qk_factor * m_inner(cfg))
+
+
+def s_ff(cfg: ArchConfig) -> int:
+    return int(cfg.slstm_proj_factor * cfg.d_model)
+
+
+def is_slstm(cfg: ArchConfig, layer_idx: int) -> bool:
+    return cfg.slstm_every > 0 and layer_idx % cfg.slstm_every == (
+        cfg.slstm_every - 1)
+
+
+def n_slstm(cfg: ArchConfig) -> int:
+    return sum(is_slstm(cfg, i) for i in range(cfg.n_layers))
+
+
+def n_mlstm(cfg: ArchConfig) -> int:
+    return cfg.n_layers - n_slstm(cfg)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def mlstm_param_specs(cfg: ArchConfig, lead, lax_, prefix) -> dict:
+    d, di, dqk, h = cfg.d_model, m_inner(cfg), m_qk(cfg), cfg.n_heads
+    return {
+        f"{prefix}/norm": ParamSpec(lead + (d,), lax_ + (None,), init="ones"),
+        f"{prefix}/up": ParamSpec(lead + (d, 2 * di),
+                                  lax_ + ("embed", "mlp")),
+        f"{prefix}/wq": ParamSpec(lead + (di, dqk), lax_ + ("mlp", None)),
+        f"{prefix}/wk": ParamSpec(lead + (di, dqk), lax_ + ("mlp", None)),
+        f"{prefix}/wv": ParamSpec(lead + (di, di), lax_ + ("mlp", None)),
+        f"{prefix}/wgates": ParamSpec(lead + (di, 2 * h),
+                                      lax_ + ("mlp", None), scale=0.02),
+        f"{prefix}/gate_bias": ParamSpec(lead + (2 * h,), lax_ + (None,),
+                                         init="zeros"),
+        f"{prefix}/mnorm": ParamSpec(lead + (di,), lax_ + (None,),
+                                     init="ones"),
+        f"{prefix}/down": ParamSpec(lead + (di, d), lax_ + ("mlp", "embed")),
+    }
+
+
+def slstm_param_specs(cfg: ArchConfig, lead, lax_, prefix) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    fs = s_ff(cfg)
+    return {
+        f"{prefix}/norm": ParamSpec(lead + (d,), lax_ + (None,), init="ones"),
+        f"{prefix}/wx": ParamSpec(lead + (d, 4 * d), lax_ + ("embed", "mlp")),
+        f"{prefix}/r": ParamSpec(lead + (4, h, hd, hd),
+                                 lax_ + (None, "heads", None, None),
+                                 scale=0.02),
+        f"{prefix}/bias": ParamSpec(lead + (4 * d,), lax_ + (None,),
+                                    init="zeros"),
+        f"{prefix}/gnorm": ParamSpec(lead + (d,), lax_ + (None,),
+                                     init="ones"),
+        f"{prefix}/ffn_norm": ParamSpec(lead + (d,), lax_ + (None,),
+                                        init="ones"),
+        f"{prefix}/ffn_up": ParamSpec(lead + (d, 2 * fs),
+                                      lax_ + ("embed", "mlp")),
+        f"{prefix}/ffn_down": ParamSpec(lead + (fs, d),
+                                        lax_ + ("mlp", "embed")),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    nm, ns = n_mlstm(cfg), n_slstm(cfg)
+    sp = {"embed/tokens": ParamSpec((v, d), ("vocab", "embed"),
+                                    init="embed")}
+    sp.update(mlstm_param_specs(cfg, (nm,), ("layers",), "mblocks"))
+    if ns:
+        sp.update(slstm_param_specs(cfg, (ns,), ("layers",), "sblocks"))
+    sp["final_norm"] = ParamSpec((d,), (None,), init="ones")
+    sp["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, log_f, log_i, chunk: int, state=None):
+    """Chunkwise-stabilised mLSTM.
+
+    q, k (B, S, H, dqk) — q pre-scaled by 1/sqrt(dqk); v (B, S, H, dv);
+    log_f, log_i (B, S, H).  state: (C, n, m) or None.
+    Returns (h (B, S, H, dv), new_state).
+    """
+    bsz, s, h, dqk = q.shape
+    dv = v.shape[-1]
+    qc = min(chunk, s)
+    assert s % qc == 0
+    nc = s // qc
+
+    def r(x):
+        return x.reshape(bsz, nc, qc, *x.shape[2:]).transpose(1, 0, *range(2, x.ndim + 1))
+
+    # chunk-major: (nc, B, Q, H, ...)
+    qs, ks, vs = r(q), r(k), r(v)
+    fs, is_ = r(log_f.astype(jnp.float32)), r(log_i.astype(jnp.float32))
+
+    if state is None:
+        c0 = jnp.zeros((bsz, h, dqk, dv), jnp.float32)
+        n0 = jnp.zeros((bsz, h, dqk), jnp.float32)
+        m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((qc, qc), bool))
+
+    def body(carry, xs):
+        c, n, m = carry
+        qq, kk, vv, ff, ii = xs          # (B, Q, H, ...)
+        cum = jnp.cumsum(ff, axis=1)     # (B, Q, H) inclusive
+        g = ii - cum                     # (B, Q, H)
+        gmax = jax.lax.cummax(g, axis=1)
+        m_intra = cum + gmax
+        m_t = jnp.maximum(m0_plus(m, cum), m_intra)     # (B, Q, H)
+        # intra-chunk decay matrix D[t, s]
+        dmat = cum[:, :, None] - cum[:, None] + ii[:, None] - m_t[:, :, None]
+        dmat = jnp.where(tri[None, :, :, None], jnp.exp(dmat), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qq.astype(jnp.float32),
+                            kk.astype(jnp.float32))
+        w = scores * dmat                                # (B, T, S, H)
+        num_intra = jnp.einsum("btsh,bshv->bthv", w, vv.astype(jnp.float32))
+        den_intra = w.sum(axis=2)                        # (B, T, H)
+        inter = jnp.exp(m[:, None] + cum - m_t)          # (B, Q, H)
+        num_inter = jnp.einsum("bthd,bhdv->bthv",
+                               qq.astype(jnp.float32), c) * inter[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth",
+                               qq.astype(jnp.float32), n) * inter
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        out = num / den[..., None]
+
+        # end-of-chunk state
+        m_end = m_t[:, -1]                               # (B, H)
+        carry_decay = jnp.exp(m + cum[:, -1] - m_end)    # (B, H)
+        upd_w = jnp.exp(cum[:, -1:] - cum + ii - m_end[:, None])  # (B,Q,H)
+        kw = kk.astype(jnp.float32) * upd_w[..., None]
+        c_new = c * carry_decay[..., None, None] + jnp.einsum(
+            "bshd,bshv->bhdv", kw, vv.astype(jnp.float32))
+        n_new = n * carry_decay[..., None] + kw.sum(axis=1)
+        return (c_new, n_new, m_end), out
+
+    (c1, n1, m1), outs = jax.lax.scan(body, (c0, n0, m0),
+                                      (qs, ks, vs, fs, is_))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, dv)
+    return out, (c1, n1, m1)
+
+
+def m0_plus(m, cum):
+    """broadcast m (B, H) over the Q axis of cum (B, Q, H)."""
+    return m[:, None] + cum
+
+
+def mlstm_step(q, k, v, log_f, log_i, state):
+    """Single-token recurrent update.  q,k (B,H,dqk); v (B,H,dv);
+    log_f, log_i (B,H).  Matches mlstm_chunked exactly (tests assert)."""
+    c, n, m = state
+    log_f = log_f.astype(jnp.float32)
+    log_i = log_i.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, log_i)
+    fdec = jnp.exp(log_f + m - m_new)
+    iw = jnp.exp(log_i - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_new = c * fdec[..., None, None] + iw[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = n * fdec[..., None] + iw[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (c_new, n_new, m_new)
+
+
+def mlstm_block(cfg: ArchConfig, p: dict, x: jnp.ndarray, state=None,
+                decode: bool = False):
+    """x (B, S, d) -> (out, new_state | None)."""
+    bsz, s, d = x.shape
+    di, dqk, h = m_inner(cfg), m_qk(cfg), cfg.n_heads
+    hqk, hv = dqk // h, di // h
+    xin = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    up = xin @ p["up"]
+    xm, z = up[..., :di], up[..., di:]
+    q = (xm @ p["wq"]).reshape(bsz, s, h, hqk) * (hqk ** -0.5)
+    k = (xm @ p["wk"]).reshape(bsz, s, h, hqk)
+    v = (xm @ p["wv"]).reshape(bsz, s, h, hv)
+    gates = (xm @ p["wgates"] + p["gate_bias"]).astype(jnp.float32)
+    log_i = gates[..., :h]
+    log_f = jax.nn.log_sigmoid(gates[..., h:])
+
+    if decode:
+        out, new_state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                    log_f[:, 0], log_i[:, 0], state)
+        out = out[:, None]
+    else:
+        out, new_state = mlstm_chunked(q, k, v, log_f, log_i,
+                                       cfg.ssm_chunk or 64, state)
+    y = out.reshape(bsz, s, di).astype(x.dtype)
+    y = layers.rms_norm(y, p["mnorm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["down"], (new_state if (decode or state is not None)
+                               else None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_block(cfg: ArchConfig, p: dict, x: jnp.ndarray, state=None,
+                decode: bool = False):
+    """Recurrent sLSTM block + GeGLU FFN.  x (B, S, d)."""
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xin = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    # input projections hoisted out of the scan: (B, S, 4d)
+    xproj = (xin @ p["wx"] + p["bias"]).astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)                    # (4, H, hd, hd)
+
+    if state is None:
+        hp = jnp.zeros((bsz, d), jnp.float32)
+        cp = jnp.zeros((bsz, d), jnp.float32)
+        np_ = jnp.ones((bsz, d), jnp.float32)
+        mp = jnp.zeros((bsz, d), jnp.float32)
+    else:
+        hp, cp, np_, mp = state
+
+    def step(carry, xt):
+        hprev, c, n, m = carry
+        hh = hprev.reshape(bsz, h, hd)
+        rec = jnp.einsum("bhd,ghde->bghe", hh, r).reshape(bsz, 4 * d)
+        pre = xt + rec
+        zr, ir, fr, orr = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zr)
+        ot = jax.nn.sigmoid(orr)
+        log_f = jax.nn.log_sigmoid(fr)
+        m_new = jnp.maximum(log_f + m, ir)
+        it = jnp.exp(ir - m_new)
+        ft = jnp.exp(log_f + m - m_new)
+        c_new = ft * c + it * zt
+        n_new = ft * n + it
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (hp, cp, np_, mp), hs = jax.lax.scan(step, (hp, cp, np_, mp),
+                                         xproj.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)         # (B, S, d)
+    y = layers.rms_norm(y, p["gnorm"], cfg.norm_eps)
+    x = x + y
+    # GeGLU FFN (proj factor 4/3)
+    g = layers.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    upd = g @ p["ffn_up"]
+    fs = upd.shape[-1] // 2
+    x = x + (jax.nn.gelu(upd[..., :fs]) * upd[..., fs:]) @ p["ffn_down"]
+    new_state = (hp, cp, np_, mp) if (decode or state is not None) else None
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _layer_kinds(cfg: ArchConfig):
+    return [("s" if is_slstm(cfg, i) else "m") for i in range(cfg.n_layers)]
+
+
+def state_struct(cfg: ArchConfig, batch: int):
+    di, dqk, h, d = m_inner(cfg), m_qk(cfg), cfg.n_heads, cfg.d_model
+    nm, ns = n_mlstm(cfg), n_slstm(cfg)
+    st = {
+        "m/C": ((nm, batch, h, dqk // h, di // h), jnp.float32),
+        "m/n": ((nm, batch, h, dqk // h), jnp.float32),
+        "m/m": ((nm, batch, h), jnp.float32),
+    }
+    if ns:
+        st.update({
+            "s/h": ((ns, batch, d), jnp.float32),
+            "s/c": ((ns, batch, d), jnp.float32),
+            "s/n": ((ns, batch, d), jnp.float32),
+            "s/m": ((ns, batch, d), jnp.float32),
+        })
+    return st
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return {k: jax.ShapeDtypeStruct(s, dt)
+            for k, (s, dt) in state_struct(cfg, batch).items()}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    out = {}
+    for kk, (s, dt) in state_struct(cfg, batch).items():
+        if kk == "m/m":
+            out[kk] = jnp.full(s, -1e30, dt)
+        elif kk == "s/n":
+            out[kk] = jnp.ones(s, dt)
+        else:
+            out[kk] = jnp.zeros(s, dt)
+    return out
+
+
+def apply(cfg: ArchConfig, params: dict, batch: dict, *, mode: str = "train",
+          cache: dict | None = None):
+    emb = params["embed/tokens"].astype(cfg.compute_dtype)
+    x = emb[batch["tokens"]]
+    decode = mode == "decode"
+    kinds = _layer_kinds(cfg)
+
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(cfg.compute_dtype)
+        if a.dtype == jnp.float32 else a, t)
+    mparams = cast(subtree(params, "mblocks"))
+    sparams = cast(subtree(params, "sblocks")) if n_slstm(cfg) else None
+
+    new_cache = dict(cache) if cache is not None else None
+    mi = si = 0
+    for kind in kinds:
+        if kind == "m":
+            lp = jax.tree.map(lambda a, i=mi: a[i], mparams)
+            st = None
+            if cache is not None:
+                st = (cache["m/C"][mi], cache["m/n"][mi], cache["m/m"][mi])
+            x, new_st = mlstm_block(cfg, lp, x, st, decode=decode)
+            if new_cache is not None and new_st is not None:
+                c, n, m = new_st
+                new_cache["m/C"] = new_cache["m/C"].at[mi].set(c)
+                new_cache["m/n"] = new_cache["m/n"].at[mi].set(n)
+                new_cache["m/m"] = new_cache["m/m"].at[mi].set(m)
+            mi += 1
+        else:
+            lp = jax.tree.map(lambda a, i=si: a[i], sparams)
+            st = None
+            if cache is not None:
+                st = (cache["s/h"][si], cache["s/c"][si], cache["s/n"][si],
+                      cache["s/m"][si])
+            x, new_st = slstm_block(cfg, lp, x, st, decode=decode)
+            if new_cache is not None and new_st is not None:
+                hh, c, n, m = new_st
+                new_cache["s/h"] = new_cache["s/h"].at[si].set(hh)
+                new_cache["s/c"] = new_cache["s/c"].at[si].set(c)
+                new_cache["s/n"] = new_cache["s/n"].at[si].set(n)
+                new_cache["s/m"] = new_cache["s/m"].at[si].set(m)
+            si += 1
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, new_cache, {}

@@ -1,0 +1,185 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-shared attention block
+invoked every ``shared_attn_every`` layers (arXiv:2411.15242).
+
+The shared block's KV cache is per *invocation site* (the same weights see
+different inputs at each site), so the cache leading dim is n_sites, not
+n_layers — a 6x cache saving relative to a dense transformer of equal
+depth, on top of Mamba's O(1) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers, ssm, transformer
+from repro.models.params import ParamSpec, subtree
+
+
+def attn_sites(cfg: ArchConfig):
+    every = cfg.shared_attn_every
+    return [i for i in range(cfg.n_layers) if every and i % every == 0]
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    d, v, ll = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    sp = {"embed/tokens": ParamSpec((v, d), ("vocab", "embed"),
+                                    init="embed")}
+    sp.update(ssm.param_specs(cfg, (ll,), ("layers",), "mamba"))
+    sp["mamba_norm"] = ParamSpec((ll, d), ("layers", None), init="ones")
+    # the single shared attention block (weight-tied across sites)
+    sp["shared/attn_norm"] = ParamSpec((d,), (None,), init="ones")
+    sp.update(transformer.attn_param_specs(cfg, (), (), "shared/attn"))
+    sp["shared/mlp_norm"] = ParamSpec((d,), (None,), init="ones")
+    sp["shared/mlp/wi_gate"] = ParamSpec((d, cfg.d_ff), ("embed", "mlp"))
+    sp["shared/mlp/wi_up"] = ParamSpec((d, cfg.d_ff), ("embed", "mlp"))
+    sp["shared/mlp/wo"] = ParamSpec((cfg.d_ff, d), ("mlp", "embed"))
+    sp["final_norm"] = ParamSpec((d,), (None,), init="ones")
+    sp["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    return sp
+
+
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int):
+    sites = len(attn_sites(cfg))
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    st = {
+        "attn/k": ((sites, batch, max_len, hkv, hd), cfg.compute_dtype),
+        "attn/v": ((sites, batch, max_len, hkv, hd), cfg.compute_dtype),
+    }
+    for name, (shape, dt) in ssm.mamba_state_struct(cfg, batch).items():
+        st[f"mamba/{name}"] = ((cfg.n_layers,) + shape, dt)
+    return st
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return {k: jax.ShapeDtypeStruct(s, d)
+            for k, (s, d) in cache_struct(cfg, batch, max_len).items()}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return {k: jnp.zeros(s, d)
+            for k, (s, d) in cache_struct(cfg, batch, max_len).items()}
+
+
+def _shared_attn_block(cfg: ArchConfig, p: dict, x, cos, sin, cache,
+                       cache_index):
+    h, new_cache = layers.attention(
+        subtree(p, "attn"), layers.rms_norm(x, p["attn_norm"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, cos=cos, sin=sin, causal=True,
+        cache=cache, cache_index=cache_index)
+    x = x + h
+    g = layers.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + layers.swiglu(subtree(p, "mlp"), g), new_cache
+
+
+def apply(cfg: ArchConfig, params: dict, batch: dict, *, mode: str = "train",
+          cache: dict | None = None):
+    emb = params["embed/tokens"].astype(cfg.compute_dtype)
+    x = emb[batch["tokens"]]
+    b, s, _ = x.shape
+    decode = mode == "decode"
+    cache_index = batch.get("cache_index") if decode else None
+    cos, sin = transformer._angles(cfg, batch, b, s, cache_index)
+    x = constrain(x, "batch", "seq", "embed")
+
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(cfg.compute_dtype)
+        if a.dtype == jnp.float32 else a, t)
+    mparams = cast(subtree(params, "mamba"))
+    mnorm = params["mamba_norm"]
+    shared = cast(subtree(params, "shared"))
+    sites = attn_sites(cfg)
+    every = cfg.shared_attn_every
+    n_full = cfg.n_layers // every          # scanned [attn + every x mamba]
+    tail = list(range(n_full * every, cfg.n_layers))
+
+    new_cache = dict(cache) if cache is not None else None
+
+    def mamba_one(x, lp, norm_w, st):
+        h = layers.rms_norm(x, norm_w, cfg.norm_eps)
+        y, new_st = ssm.mamba_block(cfg, lp, h, st)
+        return x + y, new_st
+
+    # ---- scanned groups: [shared attn, mamba x every] ---------------------
+    def group_fn(carry, xs):
+        h = carry
+        gp, gnorm, g_attn_cache, g_mamba_cache = xs
+        h, nc = _shared_attn_block(cfg, shared, h, cos, sin, g_attn_cache,
+                                   cache_index)
+        for j in range(every):
+            lp = jax.tree.map(lambda a, j=j: a[j], gp)
+            st = (None if g_mamba_cache is None else
+                  jax.tree.map(lambda a, j=j: a[j], g_mamba_cache))
+            st = (None if st is None else
+                  {"conv": st["conv"], "ssm": st["ssm"]})
+            h, new_st = mamba_one(h, lp, gnorm[j], st)
+            if new_st is not None:
+                g_mamba_cache = jax.tree.map(
+                    lambda acc, n, j=j: acc.at[j].set(n),
+                    g_mamba_cache, new_st)
+        return h, (nc, g_mamba_cache)
+
+    grp = jax.tree.map(
+        lambda a: a[:n_full * every].reshape(n_full, every, *a.shape[1:]),
+        mparams)
+    gnorms = mnorm[:n_full * every].reshape(n_full, every, -1)
+    g_attn_cache = None
+    g_mamba_cache = None
+    if cache is not None:
+        g_attn_cache = {"k": cache["attn/k"][:n_full],
+                        "v": cache["attn/v"][:n_full]}
+        if decode:
+            g_mamba_cache = jax.tree.map(
+                lambda a: a[:n_full * every].reshape(n_full, every,
+                                                     *a.shape[1:]),
+                {"conv": cache["mamba/conv"], "ssm": cache["mamba/ssm"]})
+
+    x, (attn_caches, mamba_caches) = jax.lax.scan(
+        group_fn, x, (grp, gnorms, g_attn_cache, g_mamba_cache))
+    if new_cache is not None and attn_caches is not None:
+        new_cache["attn/k"] = new_cache["attn/k"].at[:n_full].set(
+            attn_caches["k"])
+        new_cache["attn/v"] = new_cache["attn/v"].at[:n_full].set(
+            attn_caches["v"])
+    if new_cache is not None and mamba_caches is not None:
+        for key in ("conv", "ssm"):
+            flat = mamba_caches[key].reshape(
+                n_full * every, *mamba_caches[key].shape[2:])
+            new_cache[f"mamba/{key}"] = \
+                new_cache[f"mamba/{key}"].at[:n_full * every].set(flat)
+
+    # ---- tail layers (n_layers % every), incl. a site if aligned ----------
+    site_i = n_full
+    for i in tail:
+        if i in sites:
+            attn_cache = None
+            if cache is not None:
+                attn_cache = {"k": cache["attn/k"][site_i],
+                              "v": cache["attn/v"][site_i]}
+            x, nc = _shared_attn_block(cfg, shared, x, cos, sin, attn_cache,
+                                       cache_index)
+            if new_cache is not None and nc is not None:
+                new_cache["attn/k"] = new_cache["attn/k"].at[site_i].set(
+                    nc["k"])
+                new_cache["attn/v"] = new_cache["attn/v"].at[site_i].set(
+                    nc["v"])
+            site_i += 1
+        lp = jax.tree.map(lambda a, i=i: a[i], mparams)
+        st = None
+        if cache is not None and decode:
+            st = {"conv": cache["mamba/conv"][i],
+                  "ssm": cache["mamba/ssm"][i]}
+        x, new_st = mamba_one(x, lp, mnorm[i], st)
+        if new_cache is not None and new_st is not None:
+            new_cache["mamba/conv"] = new_cache["mamba/conv"].at[i].set(
+                new_st["conv"])
+            new_cache["mamba/ssm"] = new_cache["mamba/ssm"].at[i].set(
+                new_st["ssm"])
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.compute_dtype)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, new_cache, {}

@@ -1,0 +1,78 @@
+"""DCT gradient compression with error feedback (the paper's technique as a
+distributed-optimisation feature — DESIGN.md §3.2).
+
+Mechanics per parameter leaf:
+  1. residual-corrected gradient  g' = g + ef          (error feedback)
+  2. DCT-domain projection        p  = IDCT(trunc_k(DCT(g')))  [+ int8 quant]
+  3. new error feedback           ef' = g' - p
+The projection is exactly the grad_dct Pallas kernel's encode/decode pair,
+so what the optimiser applies is bit-identical to what would cross the
+interconnect.
+
+Two integration points:
+  * ``project_tree``       — in-jit projection (single-device tests, and the
+                             math the cross-pod exchange implements),
+  * ``dist.compressed``    — shard_map all-gather of the int8 codes over a
+                             chosen mesh axis (the actual bytes saving;
+                             dry-run measures it in the collective table).
+
+Seide et al. (2014)-style error feedback keeps the method unbiased in the
+long run; tests check convergence parity within tolerance on a real
+training run (examples/train_lm.py --grad-compress).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grad_dct import ops as gd
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressConfig:
+    enabled: bool = False
+    keep: int = 16                 # of 64 DCT coefficients
+    axis: str = "pod"              # mesh axis whose traffic is compressed
+    min_size: int = 4096           # leaves smaller than this stay exact
+
+    @property
+    def ratio(self) -> float:
+        """wire-bytes ratio vs f32 (per 64-float block: keep int8 + 1 f32)."""
+        return (self.keep * 1 + 4) / (64 * 4)
+
+
+def project_leaf(g: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Lossy DCT projection of one gradient leaf (any shape)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    proj = gd.roundtrip(flat, keep=keep)
+    return proj.reshape(g.shape).astype(g.dtype)
+
+
+def init_error_feedback(params: dict) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def abstract_error_feedback(param_structs: dict) -> dict:
+    return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                        param_structs)
+
+
+def project_tree(grads: dict, ef: dict, cfg: GradCompressConfig):
+    """Apply EF-corrected DCT projection to every (large) leaf.
+
+    Returns (projected_grads, new_ef).
+    """
+    new_g, new_ef = {}, {}
+    for path, g in grads.items():
+        if g.size < cfg.min_size:
+            new_g[path] = g
+            new_ef[path] = ef[path]
+            continue
+        corrected = g.astype(jnp.float32) + ef[path]
+        proj = project_leaf(corrected, cfg.keep)
+        new_g[path] = proj.astype(g.dtype)
+        new_ef[path] = corrected - proj.astype(jnp.float32)
+    return new_g, new_ef

@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + decode with KV cache.
+
+``prefill`` writes the prompt into the cache in one pass (the decode-path
+dynamic_update_slice with seq>1); ``decode_step`` appends one token for the
+whole batch.  Optional DCT KV-cache compression (serve/kv_compress.py)
+re-encodes frozen 64-step blocks of the cache in the frequency domain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    temperature: float = 0.0      # 0 => greedy
+    kv_dct_keep: int = 0          # 0 => off; else coefficients kept of 64
+
+
+def make_prefill(cfg: ArchConfig):
+    @jax.jit
+    def prefill(params, tokens, cache):
+        batch = {"tokens": tokens,
+                 "cache_index": jnp.zeros((), jnp.int32)}
+        logits, cache, _ = registry.apply(cfg, params, batch, mode="decode",
+                                          cache=cache)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, temperature: float = 0.0):
+    @jax.jit
+    def decode_step(params, tokens, cache, cache_index, key):
+        batch = {"tokens": tokens, "cache_index": cache_index}
+        logits, cache, _ = registry.apply(cfg, params, batch, mode="decode",
+                                          cache=cache)
+        last = logits[:, -1].astype(jnp.float32)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt.astype(jnp.int32), cache
+    return decode_step
+
+
+def generate(cfg: ArchConfig, params, prompts: jnp.ndarray, max_new: int,
+             serve_cfg: ServeConfig = ServeConfig(), seed: int = 0):
+    """Greedy/temperature generation for a whole batch.
+
+    prompts (B, P) int32.  Returns (B, max_new) generated tokens.
+    """
+    b, p = prompts.shape
+    cache = registry.init_cache(cfg, batch=b, max_len=serve_cfg.max_len)
+    prefill = make_prefill(cfg)
+    step_fn = make_decode_step(cfg, serve_cfg.temperature)
+    logits, cache = prefill(params, prompts, cache)
+    nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+
+    out = [nxt]
+    key = jax.random.key(seed)
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        nxt, cache = step_fn(params, nxt[:, None], cache,
+                             jnp.asarray(p + i, jnp.int32), sub)
+        out.append(nxt)
+    return jnp.stack(out, axis=1)

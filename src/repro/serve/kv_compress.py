@@ -1,0 +1,116 @@
+"""DCT KV-cache compression (the paper's energy compaction on the time axis).
+
+Frozen cache blocks of 64 consecutive positions are DCT'd along time,
+truncated to ``keep`` low-frequency coefficients and int8-quantised —
+exactly the grad_dct wire format, reused across the framework.  Attention
+keys/values vary smoothly along the sequence for adjacent positions (RoPE
+phases aside), so energy compaction holds well enough that decode-quality
+loss is small at keep=16..32 (tests bound the logit drift).
+
+HBM read traffic per decode step drops by ~256/(keep+4) per compressed
+block — directly attacking the memory roofline term that dominates
+decode_32k / long_500k (EXPERIMENTS.md §Roofline).
+
+Layout: dense-cache tensors (L, B, T, H, D) are compressed per (L, B, H, D)
+column along T in blocks of 64: codes (L, B, T/64, keep, H, D) int8 +
+scales (L, B, T/64, 1, H, D) f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct
+
+BLOCK = 64
+
+
+@dataclasses.dataclass
+class CompressedKV:
+    codes: dict       # path -> int8 (..., nb, keep, ...) codes
+    scales: dict      # path -> f32 scales
+    keep: int
+    t_compressed: int  # positions covered by compressed blocks
+
+
+def _move_t_last(x: jnp.ndarray):
+    """(L, B, T, H, D) -> (L, B, H, D, T)."""
+    return jnp.moveaxis(x, 2, -1)
+
+
+def _move_t_back(x: jnp.ndarray):
+    return jnp.moveaxis(x, -1, 2)
+
+
+def compress_tensor(x: jnp.ndarray, keep: int):
+    """x (L, B, T, ...) -> (codes int8, scales f32) blocks along T."""
+    xt = _move_t_last(x).astype(jnp.float32)           # (..., T)
+    t = xt.shape[-1]
+    nb = t // BLOCK
+    body = xt[..., :nb * BLOCK].reshape(*xt.shape[:-1], nb, BLOCK)
+    c = dct.dct_matrix(BLOCK, jnp.float32)
+    coef = body @ c.T
+    kept = coef[..., :keep]
+    scale = jnp.maximum(jnp.max(jnp.abs(kept), -1, keepdims=True) / 127.0,
+                        1e-30)
+    codes = jnp.clip(jnp.round(kept / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def decompress_tensor(codes: jnp.ndarray, scales: jnp.ndarray,
+                      out_dtype=jnp.bfloat16):
+    """Inverse of compress_tensor -> (L, B, T_c, ...)."""
+    c = dct.dct_matrix(BLOCK, jnp.float32)
+    keep = codes.shape[-1]
+    kept = codes.astype(jnp.float32) * scales
+    coef = jnp.pad(kept, [(0, 0)] * (kept.ndim - 1) + [(0, BLOCK - keep)])
+    body = coef @ c                                     # (..., nb, BLOCK)
+    xt = body.reshape(*body.shape[:-2], body.shape[-2] * BLOCK)
+    return _move_t_back(xt).astype(out_dtype)
+
+
+def compress_cache(cache: dict, keep: int, prefix_len: int) -> tuple:
+    """Compress the first ``prefix_len - (prefix_len % 64)`` positions of
+    every time-major cache tensor; return (CompressedKV, raw_tail_cache).
+
+    The tail (ragged remainder + all future decode writes) stays raw.
+    """
+    t_c = (prefix_len // BLOCK) * BLOCK
+    codes, scales, tails = {}, {}, {}
+    for path, x in cache.items():
+        if x.ndim >= 3 and x.shape[2] >= BLOCK:
+            cc, ss = compress_tensor(x[:, :, :t_c], keep)
+            codes[path] = cc
+            scales[path] = ss
+            tails[path] = x[:, :, t_c:]
+        else:
+            tails[path] = x
+    return CompressedKV(codes, scales, keep, t_c), tails
+
+
+def reconstruct_cache(ckv: CompressedKV, tails: dict,
+                      dtype=jnp.bfloat16) -> dict:
+    """Materialise a full cache from compressed blocks + raw tail."""
+    out = {}
+    for path, tail in tails.items():
+        if path in ckv.codes:
+            head = decompress_tensor(ckv.codes[path], ckv.scales[path],
+                                     tail.dtype)
+            out[path] = jnp.concatenate([head, tail], axis=2)
+        else:
+            out[path] = tail
+    return out
+
+
+def wire_bytes(ckv: CompressedKV, tails: dict) -> int:
+    """HBM bytes of the compressed representation."""
+    total = 0
+    for p in ckv.codes:
+        total += ckv.codes[p].size + ckv.scales[p].size * 4
+    for p, t in tails.items():
+        total += t.size * t.dtype.itemsize
+    return total

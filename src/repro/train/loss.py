@@ -1,0 +1,48 @@
+"""Losses: next-token CE, masked-prediction CE (encoder), MTP aux."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token CE with f32 *row statistics* only (Perf iteration A):
+    the (B, S, V)-sized tensors stay in the compute dtype; the rowwise
+    max/logsumexp and the final mean are f32."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)                                  # V-sized, bf16
+    z = jnp.sum(e.astype(jnp.float32), axis=-1)              # f32 rows
+    logz = jnp.log(z) + m[..., 0].astype(jnp.float32)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0].astype(jnp.float32)
+    nll = logz - gold
+    if mask is not None:
+        mk = mask.astype(jnp.float32)
+        return (nll * mk).sum() / jnp.maximum(mk.sum(), 1.0)
+    return nll.mean()
+
+
+def lm_loss(cfg, logits: jnp.ndarray, batch: dict, aux: dict) -> tuple:
+    """Family-aware training loss.  Returns (loss, metrics)."""
+    metrics = {}
+    if cfg.is_encoder:
+        # masked-prediction: only masked frames contribute
+        loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    else:
+        # next-token: shift left
+        labels = batch["labels"]
+        loss = cross_entropy(logits[:, :-1], labels[:, 1:])
+    metrics["ce_loss"] = loss
+    if "aux_loss" in aux:
+        loss = loss + aux["aux_loss"]
+        metrics["moe_aux"] = aux["aux_loss"]
+    if "mtp_logits" in aux:
+        # MTP predicts token t+2 from position t
+        labels = batch["labels"]
+        mtp = cross_entropy(aux["mtp_logits"][:, :-2], labels[:, 2:])
+        loss = loss + 0.1 * mtp
+        metrics["mtp_loss"] = mtp
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,129 @@
+"""Jittable train / eval steps with microbatch accumulation and optional
+DCT gradient compression.
+
+``make_train_step`` returns a pure function
+    (state, batch) -> (state, metrics)
+suitable for jax.jit with in/out shardings from dist.sharding.  Microbatch
+accumulation is a ``lax.scan`` over the leading microbatch split — required
+for the biggest configs, where a full 1M-token global batch cannot coexist
+with MoE dispatch buffers (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.optim import adamw
+from repro.optim.grad_compress import GradCompressConfig, project_tree
+from repro.train.loss import lm_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    grad_compress: GradCompressConfig = GradCompressConfig()
+
+
+def init_state(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, key,
+               step_cfg: TrainStepConfig | None = None) -> dict:
+    params = registry.init_params(cfg, key)
+    state = {"params": params,
+             "opt": adamw.init_state(opt_cfg, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if step_cfg and step_cfg.grad_compress.enabled:
+        from repro.optim.grad_compress import init_error_feedback
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+def abstract_state(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                   step_cfg: TrainStepConfig | None = None) -> dict:
+    pstructs = registry.abstract_params(cfg)
+    state = {"params": pstructs,
+             "opt": adamw.abstract_state(opt_cfg, pstructs),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if step_cfg and step_cfg.grad_compress.enabled:
+        from repro.optim.grad_compress import abstract_error_feedback
+        state["ef"] = abstract_error_feedback(pstructs)
+    return state
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    # positions3 has leading 3-axis; microbatch on axis 1
+    out = {}
+    for k, v in batch.items():
+        if k == "positions3":
+            out[k] = jnp.moveaxis(
+                v.reshape(3, n, v.shape[1] // n, *v.shape[2:]), 1, 0)
+        else:
+            out[k] = r(v)
+    return out
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    step_cfg: TrainStepConfig = TrainStepConfig(),
+                    grad_sync=None):
+    """grad_sync: optional f(grads, ef) -> (grads, ef) (dist.compressed)."""
+    gc = step_cfg.grad_compress
+
+    def loss_fn(params, batch):
+        logits, _, aux = registry.apply(cfg, params, batch, mode="train")
+        return lm_loss(cfg, logits, batch, aux)
+
+    def compute_grads(params, batch):
+        if step_cfg.microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+        micro = _split_micro(batch, step_cfg.microbatches)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc_fn(carry, mb):
+            g_acc = carry
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return g_acc, metrics
+        g_sum, metrics_all = jax.lax.scan(acc_fn, zero, micro)
+        grads = jax.tree.map(lambda g: g / step_cfg.microbatches, g_sum)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+        return grads, metrics
+
+    def train_step(state, batch):
+        grads, metrics = compute_grads(state["params"], batch)
+        ef = state.get("ef")
+        if gc.enabled:
+            if grad_sync is not None:
+                grads, ef = grad_sync(grads, ef)
+            else:
+                grads, ef = project_tree(grads, ef, gc)
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, state["params"], grads, state["opt"])
+        metrics.update(opt_metrics)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if ef is not None:
+            new_state["ef"] = ef
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig):
+    def eval_step(params, batch):
+        logits, _, aux = registry.apply(cfg, params, batch, mode="train")
+        _, metrics = lm_loss(cfg, logits, batch, aux)
+        return metrics
+    return eval_step

@@ -1,0 +1,99 @@
+"""Trainer loop: jit'd step + checkpoint/auto-resume + watchdog + logging.
+
+The loop is deliberately stateless between steps beyond TrainState: data is
+a pure function of the step index (data/synth.py), so crash-restart resumes
+bit-identically from the latest committed checkpoint — the fault-tolerance
+tests kill a run mid-flight and assert exact continuation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint
+from repro.configs.base import ArchConfig
+from repro.ft.watchdog import StepWatchdog
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    log_every: int = 10
+    straggler_ratio: float = 3.0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                 tcfg: TrainerConfig, batch_fn,
+                 step_cfg: step_lib.TrainStepConfig | None = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.batch_fn = batch_fn
+        self.step_cfg = step_cfg or step_lib.TrainStepConfig()
+        self.watchdog = StepWatchdog(ratio=tcfg.straggler_ratio)
+        self.history: list = []
+
+        self._train_step = jax.jit(
+            step_lib.make_train_step(cfg, opt_cfg, self.step_cfg))
+        self._ckptr = None
+        if tcfg.ckpt_dir and tcfg.ckpt_async:
+            self._ckptr = checkpoint.AsyncCheckpointer(tcfg.ckpt_dir)
+
+        # ---- init or auto-resume ------------------------------------------
+        start = None
+        if tcfg.ckpt_dir:
+            start = checkpoint.latest_step(tcfg.ckpt_dir)
+        if start is not None:
+            tree, extra = checkpoint.load(tcfg.ckpt_dir, start)
+            self.state = tree
+            self.start_step = int(extra.get("step", start))
+        else:
+            self.state = step_lib.init_state(cfg, opt_cfg,
+                                             jax.random.key(seed),
+                                             self.step_cfg)
+            self.start_step = 0
+
+    def _save(self, step: int):
+        if not self.tcfg.ckpt_dir:
+            return
+        if self._ckptr:
+            self._ckptr.submit(step, self.state, {"step": step})
+        else:
+            checkpoint.save(self.tcfg.ckpt_dir, step, self.state,
+                            {"step": step})
+
+    def run(self, steps: int | None = None):
+        total = steps or self.tcfg.total_steps
+        for step in range(self.start_step, total):
+            batch = self.batch_fn(step)
+            t0 = time.monotonic()
+            self.state, metrics = self._train_step(self.state, batch)
+            loss = float(metrics["loss"])   # blocks: real step time
+            dt = time.monotonic() - t0
+            ev = self.watchdog.observe(step, dt)
+            if ev is not None:
+                print(f"[watchdog] straggler step {step}: "
+                      f"{ev.duration:.3f}s vs median {ev.median:.3f}s")
+            rec = {"step": step, "loss": loss, "time_s": dt,
+                   "grad_norm": float(metrics["grad_norm"])}
+            self.history.append(rec)
+            if step % self.tcfg.log_every == 0 or step == total - 1:
+                print(f"step {step:5d}  loss {loss:.4f}  "
+                      f"gnorm {rec['grad_norm']:.3f}  {dt*1e3:.0f} ms")
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step == total - 1:
+                self._save(step + 1)
+        if self._ckptr:
+            self._ckptr.wait()
+        self.watchdog.close()
+        return self.history

@@ -1,0 +1,10 @@
+"""Test fixtures.  NOTE: no global XLA_FLAGS here — tests must see ONE CPU
+device; multi-device tests spawn subprocesses with their own flags."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,128 @@
+"""Core DCT math: exactness, orthonormality, Loeffler graph, CORDIC."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cordic, dct, loeffler
+
+F32 = np.float32
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(F32)
+
+
+class TestDctMatrix:
+    def test_orthonormal(self):
+        for n in (4, 8, 16, 64):
+            c = dct._dct_matrix_np(n)   # float64 host-side matrix
+            np.testing.assert_allclose(c @ c.T, np.eye(n), atol=1e-12)
+
+    def test_matches_definition(self):
+        # paper eq. (3): F(x) = sqrt(2/N) sum alpha(i) cos(...) f(i)
+        n = 8
+        c = dct._dct_matrix_np(n)
+        x = _rand((n,)).astype(np.float64)
+        for k in range(n):
+            alpha = math.sqrt(0.5) if k == 0 else 1.0
+            expect = math.sqrt(2.0 / n) * alpha * sum(
+                x[i] * math.cos(math.pi * k * (2 * i + 1) / (2 * n))
+                for i in range(n))
+            assert abs((c @ x)[k] - expect) < 1e-12
+
+    def test_kron_equals_separable(self):
+        img = jnp.asarray(_rand((2, 32, 40)))
+        a = dct.blockwise_dct2d(img)
+        b = dct.blockwise_dct2d_kron(img)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_parseval(self, seed):
+        x = jnp.asarray(_rand((8, 8), seed))
+        y = dct.dct2d(x)
+        assert abs(float((x**2).sum()) - float((y**2).sum())) < 1e-3
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip(self, seed):
+        x = jnp.asarray(_rand((16, 24), seed))
+        rec = dct.blockwise_idct2d(dct.blockwise_dct2d(x))
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(x), atol=1e-4)
+
+    def test_dc_coefficient(self):
+        x = jnp.ones((8, 8))
+        y = dct.dct2d(x)
+        # orthonormal: DC = mean * N = 8 for all-ones
+        assert abs(float(y[0, 0]) - 8.0) < 1e-5
+        assert float(jnp.abs(y).sum()) - 8.0 < 1e-4  # all AC zero
+
+
+class TestLoeffler:
+    def test_matches_exact_dct(self):
+        x = jnp.asarray(_rand((100, 8)))
+        np.testing.assert_allclose(
+            np.asarray(loeffler.loeffler_dct8(x)),
+            np.asarray(dct.dct1d(x)), atol=2e-5)
+
+    def test_inverse_is_transpose(self):
+        x = jnp.asarray(_rand((50, 8), 1))
+        y = loeffler.loeffler_dct8(x)
+        rec = loeffler.loeffler_idct8(y)
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(x), atol=2e-5)
+
+    def test_2d(self):
+        blocks = jnp.asarray(_rand((5, 8, 8), 2))
+        np.testing.assert_allclose(
+            np.asarray(loeffler.loeffler_dct2d_8x8(blocks)),
+            np.asarray(dct.dct2d(blocks)), atol=5e-5)
+
+    def test_stage_count_is_serial(self):
+        # the graph is 4 serial stages (paper §2.5.2) — structural property:
+        # rotations are only in stages 2/3, never stage 1/4
+        assert loeffler.THETA_ODD_A == 3 * math.pi / 16
+        assert loeffler.THETA_ODD_B == math.pi / 16
+        assert loeffler.THETA_EVEN == math.pi / 8
+
+
+class TestCordic:
+    def test_high_precision_matches_exact(self):
+        cfg = cordic.EXACT_CONFIG
+        u = jnp.asarray(_rand((100,)))
+        v = jnp.asarray(_rand((100,), 1))
+        for th in (loeffler.THETA_ODD_A, loeffler.THETA_ODD_B,
+                   loeffler.THETA_EVEN):
+            eu, ev = loeffler.exact_rotate(u, v, th)
+            cu, cv = cordic.cordic_rotate(u, v, th, cfg)
+            np.testing.assert_allclose(np.asarray(cu), np.asarray(eu),
+                                       atol=1e-5)
+            np.testing.assert_allclose(np.asarray(cv), np.asarray(ev),
+                                       atol=1e-5)
+
+    def test_paper_config_bounded_error(self):
+        for th in (loeffler.THETA_ODD_A, loeffler.THETA_ODD_B,
+                   loeffler.THETA_EVEN):
+            ang_err, gain_err = cordic.rotation_error(th,
+                                                      cordic.PAPER_CONFIG)
+            assert ang_err < 0.15          # few-iteration approximation
+            assert gain_err < 0.01
+
+    def test_more_iterations_reduce_angle_error(self):
+        errs = [cordic.rotation_error(loeffler.THETA_EVEN,
+                                      cordic.CordicConfig(n, 24, None))[0]
+                for n in (2, 4, 8, 16)]
+        assert errs[-1] < errs[0]
+        assert errs[-1] < 1e-3
+
+    def test_cordic_loeffler_is_approximate_dct(self):
+        x = jnp.asarray(_rand((64, 8), 3))
+        exact = dct.dct1d(x)
+        approx = loeffler.loeffler_dct8(
+            x, rotate_fn=cordic.make_cordic_rotate(
+                cordic.CordicConfig(4, 3, None)))
+        err = float(jnp.abs(exact - approx).max())
+        assert 1e-6 < err < 0.5 * float(jnp.abs(exact).max())

@@ -1,0 +1,113 @@
+"""Quantiser + codec pipeline (the paper's experiment)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, cordic, images, metrics, quant
+
+
+class TestQuant:
+    def test_quality_scales_table(self):
+        q10 = np.asarray(quant.qtable(10))
+        q50 = np.asarray(quant.qtable(50))
+        q90 = np.asarray(quant.qtable(90))
+        assert (q10 >= q50).all() and (q50 >= q90).all()
+        np.testing.assert_allclose(q50, quant.JPEG_LUMA_QTABLE)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_error_bounded_by_half_step(self, seed, quality):
+        c = jnp.asarray(np.random.default_rng(seed).normal(
+            scale=100, size=(4, 8, 8)).astype(np.float32))
+        q = quant.qtable(quality)
+        deq = quant.dequantize(quant.quantize(c, q), q)
+        assert float(jnp.abs(deq - c).max()) <= float(q.max()) / 2 + 1e-3
+
+    def test_zigzag_permutation(self):
+        blk = jnp.arange(64).reshape(8, 8)
+        z = np.asarray(quant.zigzag(blk))
+        assert z[0] == 0 and z[1] == 1 and z[2] == 8 and z[3] == 16
+        assert sorted(z.tolist()) == list(range(64))
+
+    def test_bits_estimate_positive_and_monotone(self):
+        rng = np.random.default_rng(0)
+        small = jnp.asarray(rng.integers(-2, 2, (16, 8, 8)))
+        big = jnp.asarray(rng.integers(-200, 200, (16, 8, 8)))
+        assert float(quant.estimate_bits(small)) < float(
+            quant.estimate_bits(big))
+
+
+class TestCodec:
+    def test_psnr_definition(self):
+        o = jnp.full((16, 16), 200, jnp.uint8)
+        c = o.at[0, 0].set(190)
+        mse = 100.0 / 256.0
+        expect = 20 * np.log10(200.0 / np.sqrt(mse))
+        assert abs(float(metrics.psnr(o, c)) - expect) < 1e-3
+
+    def test_roundtrip_quality_ordering(self):
+        img = images.lena_like(128, 128)
+        psnrs = [codec.roundtrip(img, q, "exact")[1] for q in (10, 50, 90)]
+        assert psnrs[0] < psnrs[1] < psnrs[2]
+
+    def test_nondivisible_size_padding(self):
+        # the paper's 1024x814 case: 814 % 8 != 0
+        img = images.lena_like(96, 102)
+        rec, p = codec.roundtrip(img, 50)
+        assert rec.shape == (96, 102)
+        assert p > 25
+
+    def test_loeffler_transform_equals_exact(self):
+        img = images.lena_like(64, 64)
+        _, p_exact = codec.roundtrip(img, 50, "exact")
+        _, p_loef = codec.roundtrip(img, 50, "loeffler")
+        assert abs(p_exact - p_loef) < 0.05
+
+    def test_cordic_gap_in_paper_band(self):
+        """Tables 3-4: Cordic-Loeffler loses ~1.1-3 dB vs exact DCT."""
+        for gen, size in ((images.lena_like, (512, 512)),
+                          (images.cablecar_like, (320, 288))):
+            img = gen(*size)
+            _, pe = codec.roundtrip(img, 50, "exact")
+            _, pc = codec.roundtrip(img, 50, "cordic")
+            assert 0.5 < pe - pc < 4.0, (pe, pc)
+
+    def test_matched_adjoint_cancels_angle_error(self):
+        """With a float datapath, the CORDIC *angle* error cancels between
+        analysis and its adjoint synthesis (the finding recorded in
+        EXPERIMENTS.md §PSNR: the paper's 2 dB gap therefore implies a
+        fixed-point datapath, not the angle approximation)."""
+        import jax.numpy as jnp
+        from repro.core import dct as dct_mod, loeffler
+        cfg = cordic.CordicConfig(iterations=3, gain_terms=4,
+                                  fixed_point_bits=None)
+        rot = cordic.make_cordic_rotate(cfg)
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            scale=50, size=(10, 8, 8)).astype(np.float32))
+        coef = loeffler.loeffler_dct2d_8x8(x, rotate_fn=rot)
+        # matched adjoint: near-perfect roundtrip despite ~0.1 rad angle err
+        rec_matched = loeffler.loeffler_idct2d_8x8(coef, rotate_fn=rot)
+        rel_m = float(jnp.linalg.norm(rec_matched - x) /
+                      jnp.linalg.norm(x))
+        # standards-compliant decoder: exact IDCT sees the angle error
+        rec_std = dct_mod.idct2d(coef)
+        rel_s = float(jnp.linalg.norm(rec_std - x) / jnp.linalg.norm(x))
+        assert rel_m < 0.01
+        assert rel_s > 2 * rel_m
+
+    def test_compression_ratio_above_one(self):
+        img = images.lena_like(128, 128)
+        c = codec.compress(img, 50)
+        assert c.compression_ratio() > 2.0
+
+    def test_psnr_range_matches_paper_tables(self):
+        # paper: Lena 31.6-37.1 dB; Cable-car 24.2-32.3 dB at their sizes
+        img = images.lena_like(512, 512)
+        _, p = codec.roundtrip(img, 50)
+        assert 28.0 < p < 45.0
+        img2 = images.cablecar_like(320, 288)
+        _, p2 = codec.roundtrip(img2, 50)
+        assert 24.0 < p2 < 42.0
+        assert p2 < p  # cable-car is harder, like the paper

@@ -1,0 +1,58 @@
+"""Logical sharding rules — unit tests (single device, no mesh needed)."""
+
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.configs.base import SHAPES
+from repro.dist import sharding as sh
+from repro.launch import specs as specs_lib
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = sh.constrain(x, "batch", "embed")
+    assert (y == x).all()
+
+
+def test_logical_spec_no_mesh_is_empty():
+    assert sh.logical_spec(("batch", "embed")) == P()
+
+
+def test_rules_for_default_and_long():
+    cfg = R.get("qwen2.5-14b")
+    r = specs_lib.rules_for(cfg, "train_4k")
+    assert r["batch"] == ("pod", "data")
+    assert r["embed"] == ("pod", "data")          # FSDP
+    r2 = specs_lib.rules_for(cfg, "long_500k")
+    assert r2["batch"] is None
+    assert r2["cache_time"] == ("pod", "data", "model")  # sequence parallel
+    r3 = specs_lib.rules_for(cfg, "decode_32k")
+    assert r3["cache_time"] == "model"            # cache time-sharding
+    assert r3["seq"] is None                      # intra-step stays local
+    assert r3["embed"] is None                    # weights resident (no FSDP)
+
+
+def test_cache_axes_cover_all_families():
+    for arch in R.ARCH_NAMES:
+        cfg = R.get(arch)
+        if not cfg.supports_decode:
+            continue
+        from repro.models import registry as M
+        axes = specs_lib.cache_axes(cfg)
+        cache = M.abstract_cache(cfg, batch=2, max_len=64)
+        assert set(axes) == set(cache), arch
+        for p, a in axes.items():
+            assert len(a) == len(cache[p].shape), (arch, p)
+
+
+def test_batch_axes_cover_all_input_specs():
+    from repro.configs.base import input_specs, shape_supported
+    for arch in R.ARCH_NAMES:
+        cfg = R.get(arch)
+        for shape_name in SHAPES:
+            if not shape_supported(cfg, shape_name)[0]:
+                continue
+            for k in input_specs(cfg, shape_name):
+                assert k == "cache" or k in specs_lib.BATCH_AXES, (arch, k)
