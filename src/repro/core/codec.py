@@ -84,33 +84,54 @@ def _inverse(coeffs: jnp.ndarray, transform: Transform,
     raise ValueError(f"unknown transform {transform!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("transform", "quality",
-                                             "cordic_config"))
-def _compress_jit(img: jnp.ndarray, transform: Transform, quality: int,
-                  cordic_config: cordic.CordicConfig) -> jnp.ndarray:
-    # level-shift to signed range as in JPEG
-    x = img.astype(jnp.float32) - 128.0
-    coeffs = _forward(x, transform, cordic_config)
+def compress_batch_blocks(imgs: jnp.ndarray, transform: Transform,
+                          quality: int,
+                          cordic_config: cordic.CordicConfig) -> jnp.ndarray:
+    """Batch-first body: (B, H, W) -> (B, H/8, W/8, 8, 8) quantised levels.
+
+    Plain (unjitted) so serve.codec_engine can trace it inside shard_map;
+    ``_compress_jit`` is its jitted single-host form.
+    """
+    def one(img):
+        # level-shift to signed range as in JPEG
+        x = img.astype(jnp.float32) - 128.0
+        return _forward(x, transform, cordic_config)
+    coeffs = jax.vmap(one)(imgs)
     return quant.quantize(coeffs, quant.qtable(quality))
 
 
-@functools.partial(jax.jit, static_argnames=("transform", "quality",
-                                             "cordic_config"))
-def _decompress_jit(qcoeffs: jnp.ndarray, transform: Transform, quality: int,
-                    cordic_config: cordic.CordicConfig) -> jnp.ndarray:
+def decompress_batch_blocks(qcoeffs: jnp.ndarray, transform: Transform,
+                            quality: int,
+                            cordic_config: cordic.CordicConfig
+                            ) -> jnp.ndarray:
+    """Batch-first body: (B, H/8, W/8, 8, 8) levels -> (B, H, W) uint8."""
     coeffs = quant.dequantize(qcoeffs, quant.qtable(quality))
-    x = _inverse(coeffs, transform, cordic_config)
+    x = jax.vmap(lambda c: _inverse(c, transform, cordic_config))(coeffs)
     return jnp.clip(jnp.round(x + 128.0), 0.0, 255.0).astype(jnp.uint8)
+
+
+_compress_jit = functools.partial(
+    jax.jit, static_argnames=("transform", "quality", "cordic_config"))(
+        compress_batch_blocks)
+
+_decompress_jit = functools.partial(
+    jax.jit, static_argnames=("transform", "quality", "cordic_config"))(
+        decompress_batch_blocks)
 
 
 def compress(img, quality: int = 50, transform: Transform = "exact",
              cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG
              ) -> CompressedImage:
-    """Compress a (H, W) grayscale image (uint8 or float)."""
+    """Compress a (H, W) grayscale image (uint8 or float).
+
+    Thin wrapper over the batch-first jit: a single image is a batch of
+    one.  ``repro.serve.codec_engine`` drives the same jits with real
+    batches (and shards them across devices).
+    """
     img = jnp.asarray(img)
     orig_shape = tuple(img.shape[-2:])
     padded = pad_to_block(img)
-    q = _compress_jit(padded, transform, quality, cordic_config)
+    q = _compress_jit(padded[None], transform, quality, cordic_config)[0]
     return CompressedImage(qcoeffs=q, quality=quality, transform=transform,
                            orig_shape=orig_shape, cordic_config=cordic_config)
 
@@ -129,7 +150,7 @@ def decompress(c: CompressedImage, mode: str = "standard") -> jnp.ndarray:
     """
     cfg = c.cordic_config or cordic.PAPER_CONFIG
     dec_transform = "exact" if mode == "standard" else c.transform
-    out = _decompress_jit(c.qcoeffs, dec_transform, c.quality, cfg)
+    out = _decompress_jit(c.qcoeffs[None], dec_transform, c.quality, cfg)[0]
     h, w = c.orig_shape
     return out[..., :h, :w]
 

@@ -1,0 +1,2 @@
+"""Distribution primitives: logical sharding rules, compressed cross-axis
+gradient exchange, and pipeline parallelism."""

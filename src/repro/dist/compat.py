@@ -1,0 +1,31 @@
+"""Version tolerance for the shard_map entry point.
+
+The container pins jax 0.4.37 (``jax.experimental.shard_map``, ``check_rep``)
+while CI installs current jax (``jax.shard_map``, ``check_vma``).  Everything
+in repro that shard_maps goes through :func:`shard_map` so call sites never
+see the difference.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _resolve():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn
+    return fn
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (portable across jax APIs)."""
+    sm = _resolve()
+    for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+        except TypeError:
+            continue
+    raise RuntimeError("no usable shard_map signature found")

@@ -1,0 +1,130 @@
+"""Logical-axis sharding.
+
+Model code names tensor dimensions with *logical* axes ("batch", "embed",
+"heads", ...); a rule table maps each logical axis to zero or more *mesh*
+axes.  ``use_mesh_and_rules`` activates a (mesh, rules) pair; inside the
+context ``constrain`` lowers to ``with_sharding_constraint`` and the spec
+builders resolve logical names against the active rules.  Outside any
+context everything is a no-op / fully replicated, so single-device tests
+run the same model code unchanged.
+
+Resolution prunes rule entries that cannot apply: mesh axes absent from the
+mesh (e.g. "pod" on a 2-axis mesh), axes already consumed by an earlier
+dimension (a mesh axis may appear at most once per PartitionSpec), and —
+when the concrete shape is known — axes whose device count does not divide
+the dimension (e.g. 8 kv_heads over a 16-wide "model" axis).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Default rule table: training-style DP over (pod, data), TP over model.
+# "embed" is None by default (replicated params); launch.specs.rules_for
+# flips it to ("pod", "data") for FSDP in training shapes.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "cache_time": None,
+    "layers": None,
+    "state": None,
+}
+
+# Active (mesh, rules) stack; the top entry governs constrain/spec building.
+_ACTIVE: list[tuple] = []
+
+
+def current_mesh():
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def current_rules() -> dict:
+    return _ACTIVE[-1][1] if _ACTIVE else DEFAULT_RULES
+
+
+@contextlib.contextmanager
+def use_mesh_and_rules(mesh, rules: dict):
+    """Activate a mesh + logical rule table for constrain/spec builders."""
+    _ACTIVE.append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def _resolve_dim(name, rules: dict, mesh, dim_size, used: set):
+    """Mesh axes for one logical dim, pruned to what can actually apply."""
+    rule = rules.get(name) if name is not None else None
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        rule = (rule,)
+    out = []
+    shards = 1
+    for ax in rule:
+        if ax not in mesh.shape or ax in used:
+            continue
+        k = mesh.shape[ax]
+        if dim_size is not None and dim_size % (shards * k):
+            continue
+        out.append(ax)
+        used.add(ax)
+        shards *= k
+    return tuple(out)
+
+
+def _spec(axes, rules: dict, mesh, shape=None) -> P:
+    used: set = set()
+    entries = []
+    for i, name in enumerate(axes):
+        dim = None if shape is None else shape[i]
+        mesh_axes = _resolve_dim(name, rules, mesh, dim, used)
+        if not mesh_axes:
+            entries.append(None)
+        elif len(mesh_axes) == 1:
+            entries.append(mesh_axes[0])
+        else:
+            entries.append(mesh_axes)
+    return P(*entries)
+
+
+def logical_spec(axes: tuple) -> P:
+    """PartitionSpec for logical axes under the active rules (P() if none)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    return _spec(axes, current_rules(), mesh)
+
+
+def constrain(x, *axes):
+    """Sharding-constrain ``x`` by logical axis names; no-op without mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _spec(axes, current_rules(), mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def input_sharding(shape: tuple, axes: tuple, mesh) -> NamedSharding:
+    """NamedSharding for a batch input with per-dim logical names."""
+    return NamedSharding(mesh, _spec(axes, current_rules(), mesh,
+                                     shape=tuple(shape)))
+
+
+def param_shardings(pspecs: dict, mesh) -> dict:
+    """{path: NamedSharding} from a flat {path: ParamSpec} dict."""
+    rules = current_rules()
+    return {path: NamedSharding(mesh, _spec(s.axes, rules, mesh,
+                                            shape=s.shape))
+            for path, s in pspecs.items()}

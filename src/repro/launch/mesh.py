@@ -11,18 +11,31 @@ from __future__ import annotations
 import jax
 
 
+def _mk(shape: tuple, axes: tuple):
+    # jax < 0.5 has neither jax.sharding.AxisType nor the axis_types kwarg
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh for tests / reduced runs."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
+
+
+def make_data_mesh(n_devices: int | None = None):
+    """1-D "data" mesh over the local devices (batch-sharded serving)."""
+    n = n_devices if n_devices is not None else jax.local_device_count()
+    return _mk((n,), ("data",))
 
 
 # TPU v5e hardware model used by the roofline analysis (benchmarks/roofline).

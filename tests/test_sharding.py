@@ -9,6 +9,8 @@ from repro.configs.base import SHAPES
 from repro.dist import sharding as sh
 from repro.launch import specs as specs_lib
 
+pytestmark = pytest.mark.multidevice
+
 
 def test_constrain_is_noop_without_mesh():
     x = jnp.ones((4, 4))
