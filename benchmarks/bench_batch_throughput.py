@@ -1,10 +1,9 @@
-"""Batched codec throughput: images/sec vs batch size (1 -> 256).
+"""Batched codec throughput — thin entrypoint over ``repro.bench``.
 
-The paper attributes the GPU's win to saturating the device with many
-independent 8x8 blocks; this benchmark shows the same effect from
-*batching* through the multi-device engine — per-call dispatch and
-launch overheads amortise, so images/sec grows with batch size until
-the backend saturates.
+The sweep itself is :func:`repro.bench.cases.batch_throughput_grid`
+(shared with the ``serve_batch_throughput`` registry case that feeds
+RESULTS.md); this script keeps the historical CSV interface and the
+``--check-monotone`` CI gate.
 
     PYTHONPATH=src python benchmarks/bench_batch_throughput.py
     PYTHONPATH=src python benchmarks/bench_batch_throughput.py --size 128 \
@@ -15,38 +14,11 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
-import numpy as np
 
-from repro.core import images
-from repro.serve import codec_engine
-
-
-def bench_transform(transform: str, size: int, batches, iters: int) -> dict:
-    """Best-of-N throughput per batch size, with the N timing rounds
-    *interleaved* across batch sizes so machine-load drift (shared CI
-    runners) biases every batch size equally instead of whichever one it
-    happened to land on."""
-    base = np.stack([images.lena_like(size, size, seed=i)
-                     for i in range(max(batches))])
-
-    def run(x):
-        rec, _ = codec_engine.roundtrip_batch(x, 50, transform,
-                                              with_psnr=False)
-        return rec
-
-    best = {b: float("inf") for b in batches}
-    for b in batches:                       # compile + warm every shape
-        for _ in range(2):
-            jax.block_until_ready(run(base[:b]))
-    for _ in range(iters):
-        for b in batches:
-            t0 = time.perf_counter()
-            jax.block_until_ready(run(base[:b]))
-            best[b] = min(best[b], time.perf_counter() - t0)
-    return {b: b / best[b] for b in batches}
+from repro.bench.cases import (batch_sizes, batch_throughput_grid,
+                               check_monotone)
 
 
 def main():
@@ -64,27 +36,22 @@ def main():
                          "from batch 1 to 64")
     args = ap.parse_args()
 
-    batches = [b for b in (1, 2, 4, 8, 16, 32, 64, 128, 256)
-               if b <= args.max_batch]
+    batches = batch_sizes(args.max_batch)
     print(f"# backend={jax.default_backend()} "
           f"devices={jax.local_device_count()} size={args.size}")
     print("batch," + ",".join(f"{t}_img_per_s" for t in ("exact", "cordic")))
 
-    results = {}
-    for transform in ("exact", "cordic"):
-        results[transform] = bench_transform(transform, args.size, batches,
-                                             args.iters)
+    results = batch_throughput_grid(("exact", "cordic"), args.size, batches,
+                                    args.iters)
     for b in batches:
         print(f"{b}," + ",".join(f"{results[t][b]:.1f}"
                                  for t in ("exact", "cordic")))
 
     if args.check_monotone:
-        lo, hi = [b for b in batches if b <= 64][0], [
-            b for b in batches if b <= 64][-1]
         checked = [b for b in batches if b <= 64]
+        lo, hi = checked[0], checked[-1]
         bad = [(t, a, b) for t in results
-               for a, b in zip(checked, checked[1:])
-               if results[t][b] <= results[t][a]]
+               for a, b in check_monotone(results[t], up_to=64)]
         if bad:
             print(f"NOT monotone {lo}->{hi}: {bad}", file=sys.stderr)
             raise SystemExit(1)

@@ -1,96 +1,24 @@
-"""Framework micro-benches: fusion win, grad compression, KV compression,
-decode step throughput (reduced configs, CPU wall-clock)."""
+"""Framework micro-benches — thin entrypoint over ``repro.bench``.
+
+Fusion win, grad compression, KV compression and decode-step throughput
+now live in :mod:`repro.bench.cases` (``framework_micro``).  Prefer::
+
+    PYTHONPATH=src python -m repro.bench run --suite micro
+"""
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import row, time_fn
-from repro.core import dct, images, quant
-from repro.kernels import grad_dct
-
-
-def bench_fusion():
-    """Unfused 3-pass (paper's kernel structure) vs fused 1-pass codec."""
-    img = jnp.asarray(images.lena_like(1024, 1024), jnp.float32)
-    q = quant.qtable(50)
-
-    @jax.jit
-    def unfused(img):
-        x = img - 128.0
-        coef = dct.blockwise_dct2d_kron(x)          # pass 1 (DCT kernel)
-        qc = jnp.round(coef / q) * q                # pass 2 (quantiser)
-        return dct.blockwise_idct2d_kron(qc) + 128  # pass 3 (IDCT kernel)
-
-    @jax.jit
-    def fused(img):
-        x = img - 128.0
-        t = dct.kron_dct_matrix(8)
-        blocks = dct.to_blocks(x).reshape(-1, 64)
-        coef = blocks @ t.T
-        qv = q.reshape(64)
-        qc = jnp.round(coef / qv) * qv
-        rec = (qc @ t).reshape(128, 128, 8, 8)
-        return dct.from_blocks(rec) + 128.0
-
-    us_u = time_fn(unfused, img, warmup=1, iters=5)
-    us_f = time_fn(fused, img, warmup=1, iters=5)
-    row("fused_codec_1024", us_f, f"unfused_us={us_u:.0f};"
-        f"fusion_speedup={us_u/us_f:.2f}x")
-
-
-def bench_grad_compress():
-    g = jax.random.normal(jax.random.key(0), (4 * 1024 * 1024,))
-    fn = jax.jit(functools.partial(grad_dct.roundtrip, keep=16,
-                                   interpret=True))
-    us = time_fn(fn, g, warmup=1, iters=3)
-    mb = g.size * 4 / 1e6
-    cg = grad_dct.encode(g, keep=16)
-    row("grad_dct_roundtrip_16MB", us,
-        f"MB/s={mb/(us/1e6):.0f};wire_ratio={g.size*4/cg.wire_bytes():.1f}x")
-
-
-def bench_kv_compress():
-    from repro.serve import kv_compress
-    cache = {"k": jax.random.normal(jax.random.key(1),
-                                    (4, 2, 512, 4, 32), jnp.bfloat16),
-             "v": jax.random.normal(jax.random.key(2),
-                                    (4, 2, 512, 4, 32), jnp.bfloat16)}
-    raw = sum(v.size * v.dtype.itemsize for v in cache.values())
-
-    def roundtrip(c):
-        ckv, tails = kv_compress.compress_cache(c, keep=16, prefix_len=512)
-        return kv_compress.reconstruct_cache(ckv, tails)
-
-    us = time_fn(roundtrip, cache, warmup=1, iters=3)
-    ckv, tails = kv_compress.compress_cache(cache, keep=16, prefix_len=512)
-    comp = kv_compress.wire_bytes(ckv, tails)
-    row("kv_dct_roundtrip", us, f"hbm_ratio={raw/comp:.1f}x")
-
-
-def bench_decode_step():
-    from repro.configs import registry as R
-    from repro.models import registry as M
-    from repro.serve import engine
-    cfg = R.reduced("smollm-360m", n_layers=4, d_model=128, vocab_size=1024)
-    params = M.init_params(cfg, jax.random.key(0))
-    cache = M.init_cache(cfg, batch=8, max_len=256)
-    step = engine.make_decode_step(cfg)
-    tok = jnp.zeros((8, 1), jnp.int32)
-    key = jax.random.key(0)
-    fn = lambda: step(params, tok, cache, jnp.asarray(128, jnp.int32), key)
-    us = time_fn(fn, warmup=2, iters=5)
-    row("decode_step_b8_reduced", us, f"tok/s={8/(us/1e6):.0f}")
+from benchmarks.common import row
+from repro.bench import RunContext, get
+from repro.bench.runner import SUITE_TIMERS
 
 
 def run(full: bool = False):
-    bench_fusion()
-    bench_grad_compress()
-    bench_kv_compress()
-    bench_decode_step()
+    ctx = RunContext(suite="micro", timer=SUITE_TIMERS["micro"])
+    for r in get("framework_micro").run(ctx):
+        leg, timing = next(iter(r.timings_us.items()))
+        derived = ";".join(f"{k}={v:.2f}" for k, v in r.metrics.items())
+        row(r.label, timing["median_us"], derived)
 
 
 if __name__ == "__main__":

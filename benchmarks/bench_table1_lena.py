@@ -1,71 +1,26 @@
-"""Paper Table 1: DCT codec time vs Lena image size (serial vs parallel).
+"""Paper Table 1 (Lena timings) — thin entrypoint over ``repro.bench``.
 
-The paper measures CPU-serial vs GPU-parallel on a GTX 480.  This container
-has no GPU, so the two legs are reproduced structurally on one CPU:
+The case itself lives in :mod:`repro.bench.cases` (``table1_lena``);
+this script keeps the historical CSV-to-stdout interface.  Prefer::
 
-  serial   — the paper's CPU code shape: per-block loop (lax.map over
-             8x8 blocks, one at a time, unfused three-pass DCT/quant/IDCT)
-  parallel — the TPU-style data-parallel path: all blocks batched in one
-             fused pipeline (what the Pallas kernel does per VMEM tile)
-
-``derived`` reports the speedup (serialµs/parallelµs) and MPix/s of the
-parallel leg; the *trend with image size* is the reproduction target
-(paper Figs 5/6), not GTX-480 milliseconds.
+    PYTHONPATH=src python -m repro.bench run --suite paper --cases table1_lena
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import row, time_fn
-from repro.core import dct, images, quant
-
-# paper Table 1 sizes (largest first, like the paper)
-SIZES = [(1024, 1024), (512, 512), (200, 200)]
-SIZES_FULL = [(3072, 3072), (2048, 2048), (1600, 1400), (1024, 814),
-              (576, 720), (512, 512), (200, 200)]
-
-
-@functools.partial(jax.jit, static_argnames=())
-def _parallel_codec(img, q):
-    x = img.astype(jnp.float32) - 128.0
-    coef = dct.blockwise_dct2d_kron(x)
-    qc = jnp.round(coef / q)
-    rec = dct.blockwise_idct2d_kron(qc * q)
-    return jnp.clip(jnp.round(rec + 128.0), 0, 255).astype(jnp.uint8)
-
-
-@jax.jit
-def _serial_codec(img, q):
-    """Per-block sequential processing (the paper's CPU loop shape)."""
-    x = img.astype(jnp.float32) - 128.0
-    blocks = dct.to_blocks(x)
-    hb, wb = blocks.shape[0], blocks.shape[1]
-    flat = blocks.reshape(hb * wb, 8, 8)
-
-    def one(block):
-        coef = dct.dct2d(block)
-        qc = jnp.round(coef / q)
-        return dct.idct2d(qc * q)
-
-    out = jax.lax.map(one, flat)   # sequential over blocks
-    rec = dct.from_blocks(out.reshape(hb, wb, 8, 8))
-    return jnp.clip(jnp.round(rec + 128.0), 0, 255).astype(jnp.uint8)
+from benchmarks.common import rows_from_records
+from repro.bench import RunContext, get
+from repro.bench.runner import SUITE_TIMERS
 
 
 def run(full: bool = False):
-    q = quant.qtable(50)
-    for (h, w) in (SIZES_FULL if full else SIZES):
-        img = jnp.asarray(images.lena_like(h, w))
-        us_par = time_fn(_parallel_codec, img, q, warmup=1, iters=3)
-        us_ser = time_fn(_serial_codec, img, q, warmup=1, iters=3)
-        mpixs = (h * w) / us_par
-        row(f"table1_lena_{h}x{w}_parallel", us_par,
-            f"speedup={us_ser/us_par:.1f}x;mpix/s={mpixs:.1f}")
-        row(f"table1_lena_{h}x{w}_serial", us_ser, "leg=serial")
+    suite = "full" if full else "paper"
+    ctx = RunContext(suite=suite, timer=SUITE_TIMERS[suite])
+    records = get("table1_lena").run(ctx)
+    rows_from_records(
+        "table1", records,
+        metrics_fmt=lambda r: (f"speedup={r.metrics['speedup']:.1f}x;"
+                               f"mpix/s={r.metrics['mpix_per_s']:.1f}"))
 
 
 if __name__ == "__main__":

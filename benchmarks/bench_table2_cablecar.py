@@ -1,29 +1,25 @@
-"""Paper Table 2: DCT codec time vs Cable-car image size (serial/parallel).
+"""Paper Table 2 (Cable-car timings) — thin entrypoint over ``repro.bench``.
 
-Same legs as bench_table1 on the paper's Cable-car sizes.
+The case lives in :mod:`repro.bench.cases` (``table2_cablecar``).  Prefer::
+
+    PYTHONPATH=src python -m repro.bench run --suite paper \
+        --cases table2_cablecar
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from benchmarks.bench_table1_lena import _parallel_codec, _serial_codec
-from benchmarks.common import row, time_fn
-from repro.core import images, quant
-
-SIZES = [(544, 512), (512, 480), (448, 416), (384, 352), (320, 288)]
+from benchmarks.common import rows_from_records
+from repro.bench import RunContext, get
+from repro.bench.runner import SUITE_TIMERS
 
 
 def run(full: bool = False):
-    q = quant.qtable(50)
-    sizes = SIZES if full else SIZES[:3]
-    for (h, w) in sizes:
-        img = jnp.asarray(images.cablecar_like(h, w))
-        us_par = time_fn(_parallel_codec, img, q, warmup=1, iters=3)
-        us_ser = time_fn(_serial_codec, img, q, warmup=1, iters=3)
-        row(f"table2_cablecar_{h}x{w}_parallel", us_par,
-            f"speedup={us_ser/us_par:.1f}x")
-        row(f"table2_cablecar_{h}x{w}_serial", us_ser, "leg=serial")
+    suite = "full" if full else "paper"
+    ctx = RunContext(suite=suite, timer=SUITE_TIMERS[suite])
+    records = get("table2_cablecar").run(ctx)
+    rows_from_records(
+        "table2", records,
+        metrics_fmt=lambda r: f"speedup={r.metrics['speedup']:.1f}x")
 
 
 if __name__ == "__main__":

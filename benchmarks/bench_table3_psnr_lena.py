@@ -1,28 +1,27 @@
-"""Paper Table 3: PSNR of exact DCT vs Cordic-based Loeffler DCT on Lena.
+"""Paper Table 3 (Lena PSNR) — thin entrypoint over ``repro.bench``.
 
-Paper values (their images): DCT 31.6-37.1 dB, Cordic-Loeffler ~2 dB lower,
-both increasing with image size.  Our synthetic Lena stand-in reproduces
-the ordering, the size trend and the gap band (absolute dB differ — see
-DESIGN.md §6 item 4).
+The case lives in :mod:`repro.bench.cases` (``table3_psnr_lena``).  Prefer::
+
+    PYTHONPATH=src python -m repro.bench run --suite paper \
+        --cases table3_psnr_lena
 """
 
 from __future__ import annotations
 
-from benchmarks.common import row
-from repro.core import codec, images
+from benchmarks.common import rows_from_records
+from repro.bench import RunContext, get
 
-SIZES = [(200, 200), (512, 512), (2048, 2048), (3072, 3072)]
+
+def _fmt(r):
+    return (f"dct_db={r.metrics['psnr_db_exact']:.3f};"
+            f"cordic_db={r.metrics['psnr_db_cordic']:.3f};"
+            f"gap_db={r.metrics['gap_db']:.3f}")
 
 
 def run(full: bool = False):
-    sizes = SIZES if full else SIZES[:2]
-    for (h, w) in sizes:
-        img = images.lena_like(h, w)
-        _, p_dct = codec.roundtrip(img, 50, "exact")
-        _, p_cor = codec.roundtrip(img, 50, "cordic")
-        row(f"table3_psnr_lena_{h}x{w}", 0.0,
-            f"dct_db={p_dct:.3f};cordic_db={p_cor:.3f};"
-            f"gap_db={p_dct - p_cor:.3f}")
+    ctx = RunContext(suite="full" if full else "paper")
+    records = get("table3_psnr_lena").run(ctx)
+    rows_from_records("table3_psnr", records, metrics_fmt=_fmt)
 
 
 if __name__ == "__main__":

@@ -1,22 +1,23 @@
-"""Paper Table 4: PSNR of exact DCT vs Cordic-Loeffler DCT on Cable-car."""
+"""Paper Table 4 (Cable-car PSNR) — thin entrypoint over ``repro.bench``.
+
+The case lives in :mod:`repro.bench.cases` (``table4_psnr_cablecar``).
+Prefer::
+
+    PYTHONPATH=src python -m repro.bench run --suite paper \
+        --cases table4_psnr_cablecar
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import row
-from repro.core import codec, images
-
-SIZES = [(320, 288), (384, 352), (448, 416), (512, 480), (544, 512)]
+from benchmarks.bench_table3_psnr_lena import _fmt
+from benchmarks.common import rows_from_records
+from repro.bench import RunContext, get
 
 
 def run(full: bool = False):
-    sizes = SIZES if full else SIZES[:2]
-    for (h, w) in sizes:
-        img = images.cablecar_like(h, w)
-        _, p_dct = codec.roundtrip(img, 50, "exact")
-        _, p_cor = codec.roundtrip(img, 50, "cordic")
-        row(f"table4_psnr_cablecar_{h}x{w}", 0.0,
-            f"dct_db={p_dct:.3f};cordic_db={p_cor:.3f};"
-            f"gap_db={p_dct - p_cor:.3f}")
+    ctx = RunContext(suite="full" if full else "paper")
+    records = get("table4_psnr_cablecar").run(ctx)
+    rows_from_records("table4_psnr", records, metrics_fmt=_fmt)
 
 
 if __name__ == "__main__":

@@ -1,24 +1,39 @@
-"""Benchmark timing helpers."""
+"""Legacy CSV helpers for the thin ``benchmarks/`` entrypoints.
+
+All timing goes through :mod:`repro.bench.timer`; this module only keeps
+the historical ``name,us_per_call,derived`` stdout format alive.  New
+code should use ``python -m repro.bench run`` and consume JSON artifacts
+instead (docs/benchmarks.md).
+"""
 
 from __future__ import annotations
-
-import time
-
-import jax
-
-
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-time in microseconds (blocks on the result)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
 
 
 def row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def rows_from_records(prefix: str, records, legs=("parallel", "serial"),
+                      metrics_fmt=None):
+    """Print one legacy CSV row per (record, leg).
+
+    Args:
+        prefix: row-name prefix, e.g. ``"table1_lena"``.
+        records: :class:`repro.bench.schema.BenchRecord` list.
+        legs: timing legs to emit (ignored for records without timings —
+            those print one ``us=0`` row carrying only derived metrics).
+        metrics_fmt: optional ``record -> str`` for the derived column;
+            defaults to ``k=v`` pairs from ``record.metrics``.
+    """
+    for r in records:
+        derived = (metrics_fmt(r) if metrics_fmt else
+                   ";".join(f"{k}={v:.3f}" for k, v in r.metrics.items()))
+        if not r.timings_us:
+            row(f"{prefix}_{r.label}", 0.0, derived)
+            continue
+        for leg in legs:
+            if leg not in r.timings_us:
+                continue
+            us = r.timings_us[leg]["median_us"]
+            row(f"{prefix}_{r.label}_{leg}", us,
+                derived if leg == legs[0] else f"leg={leg}")

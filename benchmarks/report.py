@@ -1,89 +1,19 @@
-"""Render EXPERIMENTS.md tables from dryrun/roofline JSON artifacts.
+"""Render RESULTS.md from benchmark artifacts — alias for
+``python -m repro.bench report``.
 
-    PYTHONPATH=src python -m benchmarks.report \
-        --dryrun dryrun_results.json dryrun_results_multi.json \
-        --roofline roofline_results.json
+    PYTHONPATH=src python -m benchmarks.report results/*.json
+
+Historical note: this script once rendered dry-run/roofline tables from
+``dryrun_results.json`` / ``roofline_results.json`` that no current tool
+emits; those dead paths are gone.  ``benchmarks/roofline.py`` still
+prints its own per-cell summary and writes its own JSON.
 """
 
 from __future__ import annotations
 
-import argparse
-import json
+import sys
 
-
-def _gb(x):
-    return f"{x/1e9:.2f}"
-
-
-def dryrun_table(paths):
-    rows = []
-    for path in paths:
-        try:
-            with open(path) as f:
-                results = json.load(f)
-        except FileNotFoundError:
-            continue
-        for key in sorted(results):
-            r = results[key]
-            if r["status"] == "skipped":
-                rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-                            f"SKIP | {r['reason']} |||||")
-                continue
-            if r["status"] == "error":
-                rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-                            f"ERROR | {r.get('error','')[:60]} |||||")
-                continue
-            m = r["memory"]
-            c = r["collectives"]
-            coll_desc = " ".join(
-                f"{k.split('-')[0]}-{k.split('-')[1][:1] if '-' in k else k}"
-                f"={_gb(v)}" for k, v in sorted(c.items()) if k != "total")
-            rows.append(
-                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
-                f"({r['compile_s']:.0f}s) | µB={r.get('microbatches',1)} "
-                f"| {_gb(m['argument_bytes'])} | {_gb(m['temp_bytes'])} "
-                f"| {_gb(c['total'])} | {coll_desc} |")
-    hdr = ("| arch | shape | mesh | compile | µbatch | args GB/dev "
-           "| temp GB/dev | coll GB/dev | collective mix (GB) |\n"
-           "|---|---|---|---|---|---|---|---|---|")
-    return hdr + "\n" + "\n".join(rows)
-
-
-def roofline_table(path):
-    try:
-        with open(path) as f:
-            results = json.load(f)
-    except FileNotFoundError:
-        return "(roofline_results.json missing)"
-    hdr = ("| arch | shape | compute s | memory s | collective s | bound "
-           "| MODEL_FLOPS | useful ratio | roofline frac |\n"
-           "|---|---|---|---|---|---|---|---|---|")
-    rows = []
-    for key in sorted(results):
-        r = results[key]
-        if r["status"] != "ok":
-            rows.append(f"| {r['arch']} | {r['shape']} | "
-                        f"{r['status']}: {r.get('reason', r.get('error',''))[:60]} |||||||")
-            continue
-        rows.append(
-            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f}m "
-            f"| {r['memory_s']*1e3:.2f}m | {r['collective_s']*1e3:.2f}m "
-            f"| **{r['bound']}** | {r['model_flops']:.2e} "
-            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
-    return hdr + "\n" + "\n".join(rows)
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dryrun", nargs="*", default=["dryrun_results.json",
-                    "dryrun_results_multi.json"])
-    ap.add_argument("--roofline", default="roofline_results.json")
-    args = ap.parse_args()
-    print("## Dry-run table\n")
-    print(dryrun_table(args.dryrun))
-    print("\n## Roofline table (single-pod, per-chip; 'm' = milliseconds)\n")
-    print(roofline_table(args.roofline))
-
+from repro.bench.cli import main
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main(["report", *sys.argv[1:]]))

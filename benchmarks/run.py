@@ -1,8 +1,11 @@
-"""Benchmark harness — one function per paper table + framework benches.
+"""Legacy CSV harness — thin entrypoint over ``repro.bench``.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the paper's
-complete size grids (several minutes on one CPU core); default is the
-representative subset used by CI.
+Prints ``name,us_per_call,derived`` rows for the paper tables and the
+framework micro-benches.  ``--full`` selects the paper's complete size
+grids.  The JSON-artifact pipeline (preferred; feeds RESULTS.md)::
+
+    PYTHONPATH=src python -m repro.bench run --suite paper --out results/
+    PYTHONPATH=src python -m repro.bench report
 """
 
 from __future__ import annotations

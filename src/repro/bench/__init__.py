@@ -1,0 +1,24 @@
+"""Benchmark subsystem: registry + runner + artifact pipeline + renderer.
+
+The measurement backbone of the repo (docs/benchmarks.md):
+
+* :mod:`repro.bench.registry` — ``@benchmark`` decorator, suites,
+  :func:`~repro.bench.registry.resolve`;
+* :mod:`repro.bench.cases` — the paper's Tables 1-4 plus serving-layer
+  benches, registered declaratively;
+* :mod:`repro.bench.timer` — warmup/steady-state wall-clock timing with
+  ``jax.block_until_ready``;
+* :mod:`repro.bench.schema` — versioned JSON artifact
+  (:class:`~repro.bench.schema.BenchResult`);
+* :mod:`repro.bench.runner` — :func:`~repro.bench.runner.run_suite`;
+* :mod:`repro.bench.report` — regenerates ``RESULTS.md`` (Tables 1-4 +
+  throughput curves) from artifacts alone;
+* :mod:`repro.bench.cli` — ``python -m repro.bench run | report | list``.
+"""
+
+from repro.bench.registry import (RunContext, all_cases, benchmark,  # noqa: F401
+                                  get, resolve)
+from repro.bench.runner import run_suite                             # noqa: F401
+from repro.bench.schema import (SCHEMA_VERSION, BenchRecord,         # noqa: F401
+                                BenchResult, load, load_many, save)
+from repro.bench.timer import TimerConfig, Timing, measure           # noqa: F401

@@ -1,0 +1,384 @@
+"""Registered benchmark cases: the paper's four tables + serving benches.
+
+Every case is declarative about *what* it measures (image family, size
+grid, transform, quality) and delegates *how* to the shared machinery:
+:func:`repro.bench.timer.measure` for timing and
+:mod:`repro.serve.codec_engine` for the accelerated leg, so CPU-vs-
+accelerated comparisons run one code path (the engine routes to the
+fused Pallas kernel on TPU and to the bit-exact staged path elsewhere).
+
+Legs for the timing tables (paper Tables 1-2):
+
+* ``serial``   — the paper's CPU code shape: ``lax.map`` over 8x8 blocks,
+  one at a time, unfused three-pass DCT/quant/IDCT,
+* ``parallel`` — the serving path: :func:`codec_engine.roundtrip_batch`
+  on a batch of one (all blocks batched; fused kernel on TPU).
+
+This container has no GPU, so the paper's CPU-vs-GTX480 contrast is
+reproduced structurally on whatever backend jax reports; the *trend with
+image size* and the serial/parallel ratio are the reproduction targets,
+not GTX-480 milliseconds (see PAPER.md and docs/benchmarks.md).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.registry import RunContext, benchmark
+from repro.bench.schema import BenchRecord
+from repro.bench.timer import measure
+from repro.core import codec, dct, images, quant
+
+QUALITY = 50               # the paper's fixed JPEG quality factor
+
+# Size grids per suite.  "smoke" = smallest point (CI / tests), "paper" =
+# the representative subset, "full" = the paper's complete grid.
+TABLE1_GRID = {
+    "smoke": [(200, 200)],
+    "paper": [(1024, 1024), (512, 512), (200, 200)],
+    "full": list(images.LENA_SIZES),
+}
+TABLE2_GRID = {
+    "smoke": [(320, 288)],
+    "paper": list(images.CABLECAR_SIZES[:3]),
+    "full": list(images.CABLECAR_SIZES),
+}
+TABLE3_GRID = {
+    "smoke": [(200, 200)],
+    "paper": [(200, 200), (512, 512)],
+    "full": [(200, 200), (512, 512), (2048, 2048), (3072, 3072)],
+}
+TABLE4_GRID = {
+    "smoke": [(320, 288)],
+    "paper": [(320, 288), (384, 352)],
+    "full": list(reversed(images.CABLECAR_SIZES)),
+}
+BATCH_GRID = {"smoke": 8, "paper": 64, "full": 256}
+
+
+def batch_sizes(max_batch: int) -> list:
+    """The power-of-two batch grid shared by the registry case and the
+    CI monotone gate (``benchmarks/bench_batch_throughput.py``)."""
+    return [b for b in (1, 2, 4, 8, 16, 32, 64, 128, 256) if b <= max_batch]
+
+
+def _grid(table: dict, suite: str) -> list:
+    return table.get(suite, table["paper"])
+
+
+# ---------------------------------------------------------------------------
+# Legs
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _serial_codec(img, q):
+    """The paper's CPU loop shape: per-block sequential three-pass codec."""
+    x = img.astype(jnp.float32) - 128.0
+    blocks = dct.to_blocks(x)
+    hb, wb = blocks.shape[0], blocks.shape[1]
+    flat = blocks.reshape(hb * wb, 8, 8)
+
+    def one(block):
+        coef = dct.dct2d(block)
+        qc = jnp.round(coef / q)
+        return dct.idct2d(qc * q)
+
+    out = jax.lax.map(one, flat)   # sequential over blocks
+    rec = dct.from_blocks(out.reshape(hb, wb, 8, 8))
+    return jnp.clip(jnp.round(rec + 128.0), 0, 255).astype(jnp.uint8)
+
+
+def _parallel_roundtrip(img: jnp.ndarray):
+    """The serving path on a batch of one (fused on TPU, staged on CPU)."""
+    from repro.serve import codec_engine
+    rec, _ = codec_engine.roundtrip_batch(img[None], QUALITY, "exact",
+                                          with_psnr=False)
+    return rec
+
+
+def _timing_records(sizes, image_fn, family: str, ctx: RunContext) -> list:
+    q = quant.qtable(QUALITY)
+    timer = ctx.timer.scaled(warmup=max(ctx.timer.warmup, 1))
+    records = []
+    for (h, w) in sizes:
+        img = jnp.asarray(image_fn(h, w))
+        t_par = measure(_parallel_roundtrip, img,
+                        warmup=timer.warmup, iters=timer.iters)
+        # the engine pads internally; the serial leg needs the same
+        # 8-multiple padding (the paper's 1024x814 is not block-aligned)
+        t_ser = measure(_serial_codec, codec.pad_to_block(img), q,
+                        warmup=timer.warmup, iters=timer.iters)
+        records.append(BenchRecord(
+            label=f"{family}_{h}x{w}",
+            params={"height": h, "width": w, "image": family,
+                    "transform": "exact", "quality": QUALITY},
+            timings_us={"parallel": t_par.to_json(),
+                        "serial": t_ser.to_json()},
+            metrics={"speedup": t_ser.median_us / t_par.median_us,
+                     "mpix_per_s": (h * w) / t_par.median_us}))
+    return records
+
+
+def _psnr_records(sizes, image_fn, family: str) -> list:
+    records = []
+    for (h, w) in sizes:
+        img = image_fn(h, w)
+        _, p_dct = codec.roundtrip(img, QUALITY, "exact")
+        _, p_cor = codec.roundtrip(img, QUALITY, "cordic")
+        records.append(BenchRecord(
+            label=f"{family}_{h}x{w}",
+            params={"height": h, "width": w, "image": family,
+                    "quality": QUALITY},
+            metrics={"psnr_db_exact": p_dct, "psnr_db_cordic": p_cor,
+                     "gap_db": p_dct - p_cor}))
+    return records
+
+
+# ---------------------------------------------------------------------------
+# Paper tables
+# ---------------------------------------------------------------------------
+
+@benchmark("table1_lena", suites=("smoke", "paper", "full"), table="Table 1",
+           description="DCT codec time vs Lena size, serial vs parallel leg")
+def table1_lena(ctx: RunContext) -> list:
+    return _timing_records(_grid(TABLE1_GRID, ctx.suite),
+                           images.lena_like, "lena", ctx)
+
+
+@benchmark("table2_cablecar", suites=("smoke", "paper", "full"),
+           table="Table 2",
+           description="DCT codec time vs Cable-car size, serial vs parallel")
+def table2_cablecar(ctx: RunContext) -> list:
+    return _timing_records(_grid(TABLE2_GRID, ctx.suite),
+                           images.cablecar_like, "cablecar", ctx)
+
+
+@benchmark("table3_psnr_lena", suites=("smoke", "paper", "full"),
+           table="Table 3",
+           description="PSNR of exact DCT vs Cordic-Loeffler DCT on Lena")
+def table3_psnr_lena(ctx: RunContext) -> list:
+    return _psnr_records(_grid(TABLE3_GRID, ctx.suite),
+                         images.lena_like, "lena")
+
+
+@benchmark("table4_psnr_cablecar", suites=("smoke", "paper", "full"),
+           table="Table 4",
+           description="PSNR of exact DCT vs Cordic-Loeffler on Cable-car")
+def table4_psnr_cablecar(ctx: RunContext) -> list:
+    return _psnr_records(_grid(TABLE4_GRID, ctx.suite),
+                         images.cablecar_like, "cablecar")
+
+
+# ---------------------------------------------------------------------------
+# Serving-layer coverage
+# ---------------------------------------------------------------------------
+
+def batch_throughput_grid(transforms, size: int, batches, iters: int) -> dict:
+    """Best-of-N images/sec per (transform, batch) via the serving engine.
+
+    The N timing rounds are *interleaved* across batch sizes so machine-
+    load drift (shared CI runners) biases every batch size equally
+    instead of whichever one it happened to land on.
+
+    Args:
+        transforms: iterable of codec transforms ("exact", "cordic", ...).
+        size: square image side per batch element.
+        batches: increasing batch sizes to sweep.
+        iters: timing rounds per (transform, batch) point.
+
+    Returns:
+        transform -> {batch: img_per_s} with the best round kept.
+    """
+    from repro.serve import codec_engine
+    batches = list(batches)
+    base = np.stack([images.lena_like(size, size, seed=i)
+                     for i in range(max(batches))])
+    out = {}
+    for transform in transforms:
+        def run(x, transform=transform):
+            rec, _ = codec_engine.roundtrip_batch(x, QUALITY, transform,
+                                                  with_psnr=False)
+            return rec
+
+        best = {b: float("inf") for b in batches}
+        for b in batches:                       # compile + warm every shape
+            for _ in range(2):
+                jax.block_until_ready(run(base[:b]))
+        for _ in range(iters):
+            for b in batches:
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(base[:b]))
+                best[b] = min(best[b], time.perf_counter() - t0)
+        out[transform] = {b: b / best[b] for b in batches}
+    return out
+
+
+def check_monotone(per_batch: dict, up_to: int = 64) -> list:
+    """Violations of strictly-increasing throughput for batches <= up_to.
+
+    Args:
+        per_batch: {batch: img_per_s} as one value of
+            :func:`batch_throughput_grid`'s result.
+        up_to: largest batch size the monotonicity claim covers (beyond
+            it the backend may saturate).
+
+    Returns:
+        (smaller_batch, larger_batch) pairs where throughput did not grow.
+    """
+    checked = sorted(b for b in per_batch if b <= up_to)
+    return [(a, b) for a, b in zip(checked, checked[1:])
+            if per_batch[b] <= per_batch[a]]
+
+
+@benchmark("serve_batch_throughput", suites=("smoke", "paper", "full"),
+           description="images/sec vs batch size through codec_engine")
+def serve_batch_throughput(ctx: RunContext) -> list:
+    batches = batch_sizes(BATCH_GRID.get(ctx.suite, BATCH_GRID["paper"]))
+    iters = {"smoke": 3, "paper": 8}.get(ctx.suite, 15)
+    size = 8    # the paper's atomic block: dispatch overhead dominates,
+    #             which is exactly what batching amortises
+    grid = batch_throughput_grid(("exact", "cordic"), size, batches, iters)
+    return [BenchRecord(
+        label=f"batch_{b}",
+        params={"batch": b, "size": size, "quality": QUALITY},
+        metrics={f"img_per_s_{t}": grid[t][b] for t in grid})
+        for b in batches]
+
+
+RAGGED_SHAPES = {
+    "smoke": [(200, 200), (96, 80), (200, 200)],
+    "paper": [(200, 200), (320, 288), (512, 480), (96, 80), (64, 48),
+              (200, 200), (1024, 814)],
+}
+RAGGED_SHAPES["full"] = RAGGED_SHAPES["paper"]
+
+
+@benchmark("serve_ragged", suites=("smoke", "paper", "full"),
+           description="ragged mixed-size batch through codec_engine "
+                       "bucketing")
+def serve_ragged(ctx: RunContext) -> list:
+    """Mixed-size list in one call: bucketed shapes, grouped compilation."""
+    from repro.serve import codec_engine
+    shapes = RAGGED_SHAPES.get(ctx.suite, RAGGED_SHAPES["paper"])
+    imgs = [images.lena_like(h, w, seed=i)
+            for i, (h, w) in enumerate(shapes)]
+    cb = codec_engine.compress_batch(imgs, QUALITY, "exact")
+    n_buckets = len(cb.groups)
+
+    def run():
+        rec, _ = codec_engine.roundtrip_batch(imgs, QUALITY, "exact",
+                                              with_psnr=False)
+        return rec
+
+    t = measure(run, warmup=max(ctx.timer.warmup, 1), iters=ctx.timer.iters)
+    return [BenchRecord(
+        label=f"ragged_{len(imgs)}imgs",
+        params={"n_images": len(imgs), "quality": QUALITY,
+                "shapes": [list(s) for s in shapes],
+                "bucket": codec_engine.SHAPE_BUCKET},
+        timings_us={"roundtrip": t.to_json()},
+        metrics={"n_buckets": n_buckets,
+                 "img_per_s": len(imgs) / (t.median_us / 1e6)})]
+
+
+# ---------------------------------------------------------------------------
+# Framework micro-benches (suite "micro"; also in --full runs)
+# ---------------------------------------------------------------------------
+
+@benchmark("framework_micro", suites=("micro", "full"),
+           description="fusion win, grad/KV DCT compression, decode step")
+def framework_micro(ctx: RunContext) -> list:
+    """Micro-benches of the framework pieces built around the codec."""
+    import functools
+
+    from repro.kernels import grad_dct
+
+    records = []
+
+    # --- fusion: unfused 3-pass (paper's kernel structure) vs fused 1-pass
+    img = jnp.asarray(images.lena_like(1024, 1024), jnp.float32)
+    q = quant.qtable(QUALITY)
+
+    @jax.jit
+    def unfused(img):
+        x = img - 128.0
+        coef = dct.blockwise_dct2d_kron(x)          # pass 1 (DCT kernel)
+        qc = jnp.round(coef / q) * q                # pass 2 (quantiser)
+        return dct.blockwise_idct2d_kron(qc) + 128  # pass 3 (IDCT kernel)
+
+    @jax.jit
+    def fused(img):
+        x = img - 128.0
+        t = dct.kron_dct_matrix(8)
+        blocks = dct.to_blocks(x).reshape(-1, 64)
+        coef = blocks @ t.T
+        qv = q.reshape(64)
+        qc = jnp.round(coef / qv) * qv
+        rec = (qc @ t).reshape(128, 128, 8, 8)
+        return dct.from_blocks(rec) + 128.0
+
+    t_u = measure(unfused, img, warmup=1, iters=5)
+    t_f = measure(fused, img, warmup=1, iters=5)
+    records.append(BenchRecord(
+        label="fused_codec_1024",
+        params={"height": 1024, "width": 1024, "quality": QUALITY},
+        timings_us={"fused": t_f.to_json(), "unfused": t_u.to_json()},
+        metrics={"fusion_speedup": t_u.median_us / t_f.median_us}))
+
+    # --- gradient DCT compression roundtrip
+    g = jax.random.normal(jax.random.key(0), (4 * 1024 * 1024,))
+    fn = jax.jit(functools.partial(grad_dct.roundtrip, keep=16,
+                                   interpret=True))
+    t_g = measure(fn, g, warmup=1, iters=3)
+    cg = grad_dct.encode(g, keep=16)
+    mb = g.size * 4 / 1e6
+    records.append(BenchRecord(
+        label="grad_dct_roundtrip_16MB",
+        params={"elements": g.size, "keep": 16},
+        timings_us={"roundtrip": t_g.to_json()},
+        metrics={"mb_per_s": mb / (t_g.median_us / 1e6),
+                 "wire_ratio": g.size * 4 / cg.wire_bytes()}))
+
+    # --- KV-cache DCT compression roundtrip
+    from repro.serve import kv_compress
+    cache = {"k": jax.random.normal(jax.random.key(1),
+                                    (4, 2, 512, 4, 32), jnp.bfloat16),
+             "v": jax.random.normal(jax.random.key(2),
+                                    (4, 2, 512, 4, 32), jnp.bfloat16)}
+    raw = sum(v.size * v.dtype.itemsize for v in cache.values())
+
+    def kv_roundtrip(c):
+        ckv, tails = kv_compress.compress_cache(c, keep=16, prefix_len=512)
+        return kv_compress.reconstruct_cache(ckv, tails)
+
+    t_kv = measure(kv_roundtrip, cache, warmup=1, iters=3)
+    ckv, tails = kv_compress.compress_cache(cache, keep=16, prefix_len=512)
+    comp = kv_compress.wire_bytes(ckv, tails)
+    records.append(BenchRecord(
+        label="kv_dct_roundtrip",
+        params={"keep": 16, "prefix_len": 512},
+        timings_us={"roundtrip": t_kv.to_json()},
+        metrics={"hbm_ratio": raw / comp}))
+
+    # --- LM decode-step throughput (reduced config)
+    from repro.configs import registry as R
+    from repro.models import registry as M
+    from repro.serve import engine
+    cfg = R.reduced("smollm-360m", n_layers=4, d_model=128, vocab_size=1024)
+    params = M.init_params(cfg, jax.random.key(0))
+    cache = M.init_cache(cfg, batch=8, max_len=256)
+    step = engine.make_decode_step(cfg)
+    tok = jnp.zeros((8, 1), jnp.int32)
+    key = jax.random.key(0)
+    fn = lambda: step(params, tok, cache, jnp.asarray(128, jnp.int32), key)
+    t_d = measure(fn, warmup=2, iters=5)
+    records.append(BenchRecord(
+        label="decode_step_b8_reduced",
+        params={"batch": 8, "n_layers": 4, "d_model": 128},
+        timings_us={"step": t_d.to_json()},
+        metrics={"tok_per_s": 8 / (t_d.median_us / 1e6)}))
+    return records

@@ -1,0 +1,99 @@
+"""``python -m repro.bench`` — run suites, render RESULTS.md.
+
+    python -m repro.bench run --suite paper --out results/
+    python -m repro.bench report results/*.json --md RESULTS.md
+    python -m repro.bench list
+
+``report`` with no artifact arguments picks up ``results/*.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _cmd_run(args) -> int:
+    from repro.bench import runner
+    from repro.bench.timer import TimerConfig
+    timer = None
+    if args.warmup is not None or args.iters is not None:
+        base = runner.SUITE_TIMERS.get(args.suite, TimerConfig())
+        timer = base.scaled(warmup=args.warmup, iters=args.iters)
+    runner.run_suite(args.suite, out_dir=args.out, cases=args.cases,
+                     timer=timer)
+    return 0
+
+
+def _cmd_report(args) -> int:
+    from repro.bench import report, runner, schema
+    paths = args.artifacts or runner.default_artifacts(args.results_dir)
+    if not paths:
+        print(f"no artifacts found (looked for {args.results_dir}/*.json); "
+              f"run `python -m repro.bench run --suite paper` first",
+              file=sys.stderr)
+        return 1
+    results = schema.load_many(paths)
+    if args.stdout:
+        print(report.render(results), end="")
+    else:
+        path = report.write_results(results, args.md)
+        print(f"wrote {path} from {len(results)} artifacts")
+    return 0
+
+
+def _cmd_list(args) -> int:
+    from repro.bench import registry
+    cases = registry.all_cases()
+    width = max(len(n) for n in cases)
+    for name, case in sorted(cases.items()):
+        table = f" [{case.table}]" if case.table else ""
+        print(f"{name:<{width}}  suites={','.join(case.suites)}{table}  "
+              f"{case.description}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI parser (exposed for --help snapshotting in tests)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench",
+        description="benchmark suites + RESULTS.md renderer")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    run = sub.add_parser("run", help="run a suite, write JSON artifacts")
+    run.add_argument("--suite", default="paper",
+                     choices=("smoke", "paper", "full", "micro"),
+                     help="size grid + case set (default: paper)")
+    run.add_argument("--out", default="results",
+                     help="artifact directory (default: results/)")
+    run.add_argument("--cases", nargs="*", default=None,
+                     help="restrict to these case names")
+    run.add_argument("--warmup", type=int, default=None,
+                     help="override warmup iterations")
+    run.add_argument("--iters", type=int, default=None,
+                     help="override timed iterations")
+    run.set_defaults(fn=_cmd_run)
+
+    rep = sub.add_parser("report", help="render RESULTS.md from artifacts")
+    rep.add_argument("artifacts", nargs="*",
+                     help="artifact JSON files (default: results/*.json)")
+    rep.add_argument("--results-dir", default="results",
+                     help="where to glob artifacts when none are given")
+    rep.add_argument("--md", default="RESULTS.md",
+                     help="output path (default: RESULTS.md)")
+    rep.add_argument("--stdout", action="store_true",
+                     help="print the report instead of writing --md")
+    rep.set_defaults(fn=_cmd_report)
+
+    ls = sub.add_parser("list", help="list registered benchmark cases")
+    ls.set_defaults(fn=_cmd_list)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

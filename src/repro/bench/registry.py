@@ -1,0 +1,134 @@
+"""Declarative benchmark registry.
+
+A benchmark *case* is a function decorated with :func:`benchmark` that
+takes a :class:`RunContext` and returns a list of
+:class:`~repro.bench.schema.BenchRecord`.  The decorator declares which
+*suites* include the case (``smoke`` / ``paper`` / ``full`` / ``micro``)
+and which paper table (if any) its records feed, so the runner and the
+renderer never hard-code script names.
+
+    @benchmark("table1_lena", suites=("smoke", "paper", "full"),
+               table="Table 1", description="...")
+    def table1_lena(ctx: RunContext) -> list[BenchRecord]:
+        ...
+
+Suites are size grids, not different code: every case reads
+``ctx.suite`` to pick its grid (``smoke`` = smallest point only,
+``paper`` = the representative subset, ``full`` = the paper's complete
+grid).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.bench.timer import TimerConfig
+
+SUITES = ("smoke", "paper", "full", "micro")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunContext:
+    """Everything a case needs to size and time itself.
+
+    Attributes:
+        suite: grid selector — one of :data:`SUITES`.
+        timer: default warmup/iteration counts; cases may scale it down
+            for expensive legs via :meth:`TimerConfig.scaled`.
+    """
+    suite: str = "paper"
+    timer: TimerConfig = TimerConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchCase:
+    """A registered benchmark: callable + the declarative envelope."""
+    name: str
+    fn: object                 # (RunContext) -> list[BenchRecord]
+    suites: tuple
+    table: str | None          # paper table this feeds, e.g. "Table 1"
+    description: str
+
+    def run(self, ctx: RunContext) -> list:
+        """Execute the case; returns its records."""
+        return self.fn(ctx)
+
+
+_REGISTRY: dict = {}
+
+
+def benchmark(name: str, suites=("paper", "full"), table: str | None = None,
+              description: str = ""):
+    """Class-method-free registration decorator for benchmark cases.
+
+    Args:
+        name: unique case name; becomes the artifact filename stem.
+        suites: suite names that include this case (subset of
+            :data:`SUITES`).
+        table: paper table the case reproduces ("Table 1".."Table 4"),
+            or None for framework/serving benches.
+        description: one-liner shown by ``python -m repro.bench list``.
+
+    Returns:
+        The decorator; the wrapped function is returned unchanged.
+    """
+    unknown = set(suites) - set(SUITES)
+    if unknown:
+        raise ValueError(f"unknown suites {sorted(unknown)}; "
+                         f"pick from {SUITES}")
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"benchmark {name!r} registered twice")
+        _REGISTRY[name] = BenchCase(name=name, fn=fn, suites=tuple(suites),
+                                    table=table,
+                                    description=description or
+                                    (fn.__doc__ or "").strip().split("\n")[0])
+        return fn
+    return deco
+
+
+def _ensure_cases_loaded() -> None:
+    # cases.py self-registers on import; deferred so registry.py has no
+    # jax-touching import cost for pure schema/report users.
+    from repro.bench import cases  # noqa: F401
+
+
+def all_cases() -> dict:
+    """name -> BenchCase for every registered benchmark."""
+    _ensure_cases_loaded()
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> BenchCase:
+    """Look up one case by name; raises KeyError listing valid names."""
+    cases = all_cases()
+    if name not in cases:
+        raise KeyError(f"unknown benchmark {name!r}; "
+                       f"registered: {sorted(cases)}")
+    return cases[name]
+
+
+def resolve(suite: str, names=None) -> list:
+    """Cases to run: a suite's members, optionally filtered by name.
+
+    Args:
+        suite: one of :data:`SUITES`.
+        names: optional iterable of case names restricting the selection;
+            each must exist and belong to ``suite``.
+
+    Returns:
+        BenchCase list in registration order.
+    """
+    if suite not in SUITES:
+        raise KeyError(f"unknown suite {suite!r}; pick from {SUITES}")
+    cases = [c for c in all_cases().values() if suite in c.suites]
+    if names is not None:
+        wanted = list(names)
+        by_name = {c.name: c for c in cases}
+        missing = [n for n in wanted if n not in by_name]
+        if missing:
+            raise KeyError(f"cases {missing} not in suite {suite!r}; "
+                           f"members: {sorted(by_name)}")
+        cases = [by_name[n] for n in wanted]
+    return cases

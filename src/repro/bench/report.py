@@ -1,0 +1,202 @@
+"""Render ``RESULTS.md`` — the paper's Tables 1-4 and the serving
+curves — from benchmark JSON artifacts alone.
+
+The renderer is a pure function of the artifacts: no benchmark re-runs,
+no imports of jax.  ``render(results)`` returns the markdown;
+:func:`write_results` places it at ``RESULTS.md``.  Section <-> artifact
+mapping (see docs/benchmarks.md):
+
+========================  =========================================
+artifact (case name)      RESULTS.md section
+========================  =========================================
+table1_lena               Table 1 — codec time vs Lena size
+table2_cablecar           Table 2 — codec time vs Cable-car size
+table3_psnr_lena          Table 3 — PSNR exact vs Cordic (Lena)
+table4_psnr_cablecar      Table 4 — PSNR exact vs Cordic (Cable-car)
+serve_batch_throughput    Batch throughput curve (serving engine)
+serve_ragged              Ragged mixed-size batches (serving engine)
+framework_micro           Framework micro-benches
+========================  =========================================
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+
+def _ms(timing: dict) -> str:
+    return f"{timing['median_us'] / 1e3:.3f}"
+
+
+def _size(rec) -> str:
+    return f"{rec.params.get('height', '?')}x{rec.params.get('width', '?')}"
+
+
+def _timing_table(result, title: str, blurb: str) -> str:
+    lines = [f"## {title}", "", blurb, "",
+             "| image | size | serial (ms) | parallel (ms) | speedup "
+             "| MPix/s |",
+             "|---|---|---|---|---|---|"]
+    for r in result.records:
+        lines.append(
+            f"| {r.params.get('image', result.name)} | {_size(r)} "
+            f"| {_ms(r.timings_us['serial'])} "
+            f"| {_ms(r.timings_us['parallel'])} "
+            f"| {r.metrics['speedup']:.1f}x "
+            f"| {r.metrics['mpix_per_s']:.1f} |")
+    return "\n".join(lines)
+
+
+def _psnr_table(result, title: str, blurb: str) -> str:
+    lines = [f"## {title}", "", blurb, "",
+             "| image | size | exact DCT (dB) | Cordic-Loeffler (dB) "
+             "| gap (dB) |",
+             "|---|---|---|---|---|"]
+    for r in result.records:
+        lines.append(
+            f"| {r.params.get('image', result.name)} | {_size(r)} "
+            f"| {r.metrics['psnr_db_exact']:.3f} "
+            f"| {r.metrics['psnr_db_cordic']:.3f} "
+            f"| {r.metrics['gap_db']:.3f} |")
+    return "\n".join(lines)
+
+
+def _throughput_table(result) -> str:
+    transforms = sorted({k[len("img_per_s_"):]
+                         for r in result.records for k in r.metrics
+                         if k.startswith("img_per_s_")})
+    head = " | ".join(f"{t} (img/s)" for t in transforms)
+    lines = ["## Batch throughput (serving engine)", "",
+             "Images/sec vs batch size through "
+             "`codec_engine.roundtrip_batch` — the paper's GPU-saturation "
+             "win, realised here as dispatch-overhead amortisation; one "
+             f"image is {result.records[0].params.get('size', 8)}px square.",
+             "",
+             f"| batch | {head} |",
+             "|---|" + "---|" * len(transforms)]
+    for r in result.records:
+        cells = " | ".join(f"{r.metrics[f'img_per_s_{t}']:.1f}"
+                           for t in transforms)
+        lines.append(f"| {r.params['batch']} | {cells} |")
+    return "\n".join(lines)
+
+
+def _ragged_table(result) -> str:
+    lines = ["## Ragged mixed-size batches (serving engine)", "",
+             "A list of mixed-size images in one `roundtrip_batch` call: "
+             "shapes bucket up to multiples of "
+             f"{result.records[0].params.get('bucket', 64)}px, equal "
+             "buckets compile once and run together.", "",
+             "| images | distinct buckets | roundtrip (ms) | img/s |",
+             "|---|---|---|---|"]
+    for r in result.records:
+        lines.append(
+            f"| {r.params['n_images']} | {r.metrics['n_buckets']:.0f} "
+            f"| {_ms(r.timings_us['roundtrip'])} "
+            f"| {r.metrics['img_per_s']:.1f} |")
+    return "\n".join(lines)
+
+
+def _micro_table(result) -> str:
+    lines = ["## Framework micro-benches", "",
+             "| bench | time (ms) | derived |",
+             "|---|---|---|"]
+    for r in result.records:
+        leg, timing = next(iter(r.timings_us.items()))
+        derived = "; ".join(f"{k}={v:.2f}" for k, v in r.metrics.items())
+        lines.append(f"| {r.label} ({leg}) | {_ms(timing)} | {derived} |")
+    return "\n".join(lines)
+
+
+_TIMING_BLURBS = {
+    "table1_lena": ("Paper Table 1 (Lena): per-block sequential codec (the "
+                    "paper's CPU code shape) vs the batched serving path "
+                    "(fused kernel on TPU, staged batch path elsewhere)."),
+    "table2_cablecar": ("Paper Table 2 (Cable-car): same legs as Table 1 on "
+                        "the paper's Cable-car sizes."),
+}
+_PSNR_BLURBS = {
+    "table3_psnr_lena": ("Paper Table 3 (Lena): reconstruction quality of "
+                         "the exact DCT vs the Cordic-based Loeffler DCT at "
+                         "quality 50; the ~2 dB ordering and the size trend "
+                         "are the reproduction targets."),
+    "table4_psnr_cablecar": ("Paper Table 4 (Cable-car): as Table 3 on the "
+                             "edge-rich Cable-car image (lower PSNR at equal "
+                             "quality, matching the paper's ordering)."),
+}
+
+_SECTIONS = (
+    ("table1_lena", "Table 1 — DCT codec time vs Lena image size"),
+    ("table2_cablecar", "Table 2 — DCT codec time vs Cable-car image size"),
+    ("table3_psnr_lena", "Table 3 — PSNR, exact DCT vs Cordic-Loeffler "
+                         "(Lena)"),
+    ("table4_psnr_cablecar", "Table 4 — PSNR, exact DCT vs Cordic-Loeffler "
+                             "(Cable-car)"),
+    ("serve_batch_throughput", None),
+    ("serve_ragged", None),
+    ("framework_micro", None),
+)
+
+
+def render(results) -> str:
+    """Markdown report from loaded artifacts.
+
+    Args:
+        results: iterable of :class:`repro.bench.schema.BenchResult`
+            (any subset; sections render only for present artifacts,
+            always in paper-table order).
+
+    Returns:
+        The full RESULTS.md text, environment header included.
+    """
+    by_name = {r.name: r for r in results}
+    if not by_name:
+        raise ValueError("no artifacts to render; run "
+                         "`python -m repro.bench run --suite paper` first")
+    env = next(iter(by_name.values())).environment
+    suites = sorted({r.suite for r in by_name.values() if r.suite})
+    parts = [
+        "# RESULTS",
+        "Regenerated from benchmark JSON artifacts by "
+        "`python -m repro.bench report` — do not edit by hand; see "
+        "docs/benchmarks.md for the artifact schema and the "
+        "section-to-artifact mapping.",
+        f"*Environment:* backend=`{env.get('backend', '?')}` "
+        f"devices={env.get('device_count', '?')} "
+        f"jax={env.get('jax_version', '?')} "
+        f"git=`{env.get('git_sha', '?')}` "
+        f"at {env.get('timestamp_utc', '?')} "
+        f"(suite{'s' if len(suites) != 1 else ''}: "
+        f"{', '.join(suites) or '?'})",
+        "Absolute times are whatever this backend delivers (the paper "
+        "measured a Core i7 vs a GTX 480); the reproduction targets are "
+        "the *trends* — time growth with image size, serial/parallel "
+        "ratio, PSNR ordering and the exact-vs-Cordic gap.",
+    ]
+    for name, title in _SECTIONS:
+        if name not in by_name:
+            continue
+        result = by_name[name]
+        if name in _TIMING_BLURBS:
+            parts.append(_timing_table(result, title, _TIMING_BLURBS[name]))
+        elif name in _PSNR_BLURBS:
+            parts.append(_psnr_table(result, title, _PSNR_BLURBS[name]))
+        elif name == "serve_batch_throughput":
+            parts.append(_throughput_table(result))
+        elif name == "serve_ragged":
+            parts.append(_ragged_table(result))
+        elif name == "framework_micro":
+            parts.append(_micro_table(result))
+    extra = sorted(set(by_name) - {n for n, _ in _SECTIONS})
+    if extra:
+        parts.append("## Other artifacts\n\n" + "\n".join(
+            f"- `{n}`: {len(by_name[n].records)} records "
+            f"(no renderer section)" for n in extra))
+    return "\n\n".join(parts) + "\n"
+
+
+def write_results(results, out_path: str = "RESULTS.md") -> pathlib.Path:
+    """Render and write the report; returns the written path."""
+    path = pathlib.Path(out_path)
+    path.write_text(render(results))
+    return path

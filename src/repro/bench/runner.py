@@ -1,0 +1,67 @@
+"""Suite runner: resolve registry cases, execute, write JSON artifacts.
+
+The runner is the only writer of benchmark artifacts; the renderer
+(:mod:`repro.bench.report`) is the only reader.  Everything between them
+travels through :mod:`repro.bench.schema`.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import time
+
+from repro.bench import registry, schema
+from repro.bench.timer import TimerConfig
+
+# Default warmup/iteration counts per suite: smoke exists to prove the
+# pipeline end-to-end quickly; paper/full trade wall time for stability.
+SUITE_TIMERS = {
+    "smoke": TimerConfig(warmup=1, iters=2),
+    "paper": TimerConfig(warmup=1, iters=3),
+    "full": TimerConfig(warmup=1, iters=3),
+    "micro": TimerConfig(warmup=2, iters=5),
+}
+
+
+def run_suite(suite: str, out_dir: str = "results", cases=None,
+              timer: TimerConfig | None = None, log=print) -> list:
+    """Run every case a suite selects and write one artifact per case.
+
+    Args:
+        suite: one of :data:`repro.bench.registry.SUITES`; picks both the
+            case set and each case's size grid.
+        out_dir: directory receiving ``<case>.json`` artifacts
+            (created if missing).
+        cases: optional case-name filter (must be members of the suite).
+        timer: override the suite's default :class:`TimerConfig`.
+        log: progress sink (``print`` by default, silence with
+            ``lambda *_: None``).
+
+    Returns:
+        List of written artifact paths, in execution order.
+    """
+    selected = registry.resolve(suite, cases)
+    if not selected:
+        raise KeyError(f"suite {suite!r} selects no cases")
+    ctx = registry.RunContext(
+        suite=suite, timer=timer or SUITE_TIMERS.get(suite, TimerConfig()))
+    env = schema.capture_environment()
+    log(f"# suite={suite} backend={env['backend']} "
+        f"devices={env['device_count']} git={env['git_sha']}")
+
+    paths = []
+    for case in selected:
+        t0 = time.monotonic()
+        records = case.run(ctx)
+        result = schema.BenchResult(name=case.name, suite=suite,
+                                    records=records, environment=env)
+        path = schema.save(result, out_dir)
+        paths.append(path)
+        log(f"{case.name}: {len(records)} records "
+            f"({time.monotonic() - t0:.1f}s) -> {path}")
+    return paths
+
+
+def default_artifacts(out_dir: str = "results") -> list:
+    """All ``*.json`` artifacts under ``out_dir``, sorted by name."""
+    return sorted(pathlib.Path(out_dir).glob("*.json"))

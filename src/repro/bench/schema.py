@@ -1,0 +1,152 @@
+"""Versioned JSON artifact schema for benchmark results.
+
+One benchmark case run produces one :class:`BenchResult`, saved as one
+JSON file (``<out>/<case>.json``).  The renderer
+(:mod:`repro.bench.report`) regenerates ``RESULTS.md`` — including the
+paper's Tables 1-4 — from these artifacts alone, so a result file must
+carry everything a table needs: the measured numbers, the case
+parameters that label them, and the environment that produced them.
+
+Schema (version 1)::
+
+    {
+      "schema_version": 1,
+      "name": "table1_lena",          # registry case name
+      "suite": "paper",               # suite the run was invoked with
+      "records": [                    # one entry per measured point
+        {"label": "lena_512x512",
+         "params":     {"height": 512, "width": 512, ...},
+         "timings_us": {"parallel": {"median_us":..,"best_us":..,"iters":..},
+                        "serial": {...}},
+         "metrics":    {"speedup": 12.3, "psnr_db": ...}},
+      ],
+      "environment": {"backend": "cpu", "device_count": 1,
+                      "jax_version": "...", "git_sha": "...",
+                      "timestamp_utc": "..."}
+    }
+
+Loading rejects artifacts whose ``schema_version`` differs so a renderer
+never silently mis-reads an old layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import subprocess
+import time
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class BenchRecord:
+    """One measured point of a benchmark case (one table row).
+
+    Attributes:
+        label: unique-within-case row id, e.g. ``"lena_512x512"``.
+        params: declarative case parameters for this point
+            (sizes, transform, quality, batch, ...) — JSON scalars only.
+        timings_us: leg name -> timing dict (``median_us``/``best_us``/
+            ``iters`` as produced by :meth:`repro.bench.timer.Timing.to_json`).
+            Empty for quality-only cases (Tables 3-4).
+        metrics: derived numbers (``speedup``, ``psnr_db_exact``,
+            ``img_per_s``, ...) keyed by metric name.
+    """
+    label: str
+    params: dict = dataclasses.field(default_factory=dict)
+    timings_us: dict = dataclasses.field(default_factory=dict)
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "BenchRecord":
+        return cls(label=d["label"], params=dict(d.get("params", {})),
+                   timings_us=dict(d.get("timings_us", {})),
+                   metrics=dict(d.get("metrics", {})))
+
+
+@dataclasses.dataclass
+class BenchResult:
+    """Artifact for one case run: records + provenance.
+
+    Attributes:
+        name: registry case name (also the artifact filename stem).
+        suite: suite name the runner was invoked with (sets the size grid).
+        records: measured points, in presentation order.
+        environment: backend/device/git provenance
+            (see :func:`capture_environment`).
+        schema_version: artifact layout version; loaders reject mismatches.
+    """
+    name: str
+    suite: str
+    records: list
+    environment: dict = dataclasses.field(default_factory=dict)
+    schema_version: int = SCHEMA_VERSION
+
+    def to_json(self) -> dict:
+        return {"schema_version": self.schema_version, "name": self.name,
+                "suite": self.suite,
+                "records": [r.to_json() for r in self.records],
+                "environment": self.environment}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "BenchResult":
+        version = d.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"artifact schema_version={version!r} but this reader "
+                f"understands {SCHEMA_VERSION}; re-run "
+                f"`python -m repro.bench run` to regenerate it")
+        return cls(name=d["name"], suite=d.get("suite", ""),
+                   records=[BenchRecord.from_json(r) for r in d["records"]],
+                   environment=dict(d.get("environment", {})),
+                   schema_version=version)
+
+
+def git_sha(repo_root: str | None = None) -> str:
+    """Short git sha of the working tree, or ``"unknown"`` outside git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=repo_root,
+            capture_output=True, text=True, timeout=5)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def capture_environment() -> dict:
+    """Provenance stamped into every artifact: backend, devices, git sha."""
+    import jax
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.local_device_count(),
+        "jax_version": jax.__version__,
+        "git_sha": git_sha(),
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+
+
+def save(result: BenchResult, out_dir: str | pathlib.Path) -> pathlib.Path:
+    """Write ``<out_dir>/<result.name>.json``; returns the path."""
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{result.name}.json"
+    path.write_text(json.dumps(result.to_json(), indent=1) + "\n")
+    return path
+
+
+def load(path: str | pathlib.Path) -> BenchResult:
+    """Read one artifact; raises ValueError on schema-version mismatch."""
+    with open(path) as f:
+        return BenchResult.from_json(json.load(f))
+
+
+def load_many(paths) -> list:
+    """Load artifacts in name order (stable table order in the report)."""
+    results = [load(p) for p in paths]
+    results.sort(key=lambda r: r.name)
+    return results

@@ -1,0 +1,85 @@
+"""Warmup/steady-state wall-clock timer for jax callables.
+
+All benchmark timing in the repo goes through :func:`measure` so every
+number in a :class:`~repro.bench.schema.BenchResult` artifact means the
+same thing: *wall time of one blocking call, after the compile and cache
+warmup iterations have been discarded*.
+
+Conventions
+-----------
+* the timed callable is invoked as ``fn(*args)`` and its result is passed
+  to ``jax.block_until_ready`` — async dispatch never leaks into a number,
+* ``warmup`` calls run (and block) first, absorbing compilation and any
+  first-touch allocation,
+* ``iters`` timed calls follow; the artifact keeps the median (robust to
+  scheduler noise) and the best (the steady-state floor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class TimerConfig:
+    """How many untimed/timed iterations a measurement runs.
+
+    Attributes:
+        warmup: blocking calls discarded before timing starts (absorbs jit
+            compilation; >= 1 for anything jitted).
+        iters: timed blocking calls kept for the statistics.
+    """
+    warmup: int = 2
+    iters: int = 5
+
+    def scaled(self, warmup: int | None = None,
+               iters: int | None = None) -> "TimerConfig":
+        """Copy with per-case overrides (None keeps the suite default)."""
+        return TimerConfig(self.warmup if warmup is None else warmup,
+                           self.iters if iters is None else iters)
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """One measurement: microseconds per blocking call.
+
+    Attributes:
+        median_us: median of the timed iterations — the headline number.
+        best_us: fastest timed iteration — the steady-state floor.
+        iters: how many timed iterations produced the statistics.
+    """
+    median_us: float
+    best_us: float
+    iters: int
+
+    def to_json(self) -> dict:
+        return {"median_us": self.median_us, "best_us": self.best_us,
+                "iters": self.iters}
+
+
+def measure(fn, *args, warmup: int = 2, iters: int = 5) -> Timing:
+    """Time ``fn(*args)`` with warmup discarded and results blocked on.
+
+    Args:
+        fn: callable; its return value (any pytree) is blocked on with
+            ``jax.block_until_ready`` so device work is included.
+        *args: positional arguments forwarded to ``fn`` every call.
+        warmup: untimed leading calls (compile + cache warm).
+        iters: timed calls.
+
+    Returns:
+        A :class:`Timing` with median/best wall microseconds per call.
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return Timing(median_us=times[len(times) // 2] * 1e6,
+                  best_us=times[0] * 1e6, iters=len(times))

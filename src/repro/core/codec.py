@@ -45,6 +45,16 @@ class CompressedImage:
 
 
 def pad_to_block(img: jnp.ndarray, block: int = 8) -> jnp.ndarray:
+    """Edge-replicate the trailing (H, W) axes up to block multiples.
+
+    Args:
+        img: (..., H, W) array; leading axes (e.g. batch) pass through.
+        block: tile size; output H and W are the next multiples of it.
+
+    Returns:
+        (..., H', W') array with H' = ceil(H/block)*block (same for W);
+        the input object itself when no padding is needed.
+    """
     h, w = img.shape[-2:]
     ph = (-h) % block
     pw = (-w) % block
@@ -91,6 +101,17 @@ def compress_batch_blocks(imgs: jnp.ndarray, transform: Transform,
 
     Plain (unjitted) so serve.codec_engine can trace it inside shard_map;
     ``_compress_jit`` is its jitted single-host form.
+
+    Args:
+        imgs: (B, H, W) uint8/float batch, H and W already multiples of 8
+            (see :func:`pad_to_block`).
+        transform: forward transform — "exact", "cordic" or "loeffler".
+        quality: JPEG quality factor in [1, 100] selecting the qtable.
+        cordic_config: CORDIC iteration/width config (used only when
+            ``transform == "cordic"``).
+
+    Returns:
+        (B, H/8, W/8, 8, 8) int32 quantised coefficient levels.
     """
     def one(img):
         # level-shift to signed range as in JPEG
@@ -104,7 +125,20 @@ def decompress_batch_blocks(qcoeffs: jnp.ndarray, transform: Transform,
                             quality: int,
                             cordic_config: cordic.CordicConfig
                             ) -> jnp.ndarray:
-    """Batch-first body: (B, H/8, W/8, 8, 8) levels -> (B, H, W) uint8."""
+    """Batch-first body: (B, H/8, W/8, 8, 8) levels -> (B, H, W) uint8.
+
+    Args:
+        qcoeffs: (B, H/8, W/8, 8, 8) int32 quantised levels as produced
+            by :func:`compress_batch_blocks`.
+        transform: inverse transform to apply ("exact"/"cordic"/
+            "loeffler") — the *decoder's* transform, which a standards-
+            compliant decode keeps "exact" regardless of the encoder.
+        quality: JPEG quality factor; must match the encoder's.
+        cordic_config: CORDIC config for ``transform == "cordic"``.
+
+    Returns:
+        (B, H, W) uint8 reconstruction, level-shifted back to [0, 255].
+    """
     coeffs = quant.dequantize(qcoeffs, quant.qtable(quality))
     x = jax.vmap(lambda c: _inverse(c, transform, cordic_config))(coeffs)
     return jnp.clip(jnp.round(x + 128.0), 0.0, 255.0).astype(jnp.uint8)
@@ -127,6 +161,20 @@ def compress(img, quality: int = 50, transform: Transform = "exact",
     Thin wrapper over the batch-first jit: a single image is a batch of
     one.  ``repro.serve.codec_engine`` drives the same jits with real
     batches (and shards them across devices).
+
+    Args:
+        img: (H, W) grayscale image; sizes not divisible by 8 (e.g. the
+            paper's 1024x814) are edge-padded and cropped back on
+            reconstruction.
+        quality: JPEG quality factor in [1, 100].
+        transform: "exact" (paper's reference DCT), "cordic" (the
+            paper's subject) or "loeffler" (exact-rotation sanity
+            bridge).
+        cordic_config: CORDIC iteration/width config.
+
+    Returns:
+        A :class:`CompressedImage` carrying the (H/8, W/8, 8, 8) int32
+        quantised levels plus everything needed to decode.
     """
     img = jnp.asarray(img)
     orig_shape = tuple(img.shape[-2:])
@@ -147,6 +195,13 @@ def decompress(c: CompressedImage, mode: str = "standard") -> jnp.ndarray:
     mode="matched": the decoder applies the adjoint of the encoder's own
       (approximate) transform.  CORDIC angle errors then largely cancel —
       a finding we report alongside the reproduction (EXPERIMENTS.md).
+
+    Args:
+        c: a :class:`CompressedImage` from :func:`compress`.
+        mode: "standard" or "matched" as above.
+
+    Returns:
+        (H, W) uint8 reconstruction cropped to ``c.orig_shape``.
     """
     cfg = c.cordic_config or cordic.PAPER_CONFIG
     dec_transform = "exact" if mode == "standard" else c.transform
@@ -158,7 +213,19 @@ def decompress(c: CompressedImage, mode: str = "standard") -> jnp.ndarray:
 def roundtrip(img, quality: int = 50, transform: Transform = "exact",
               cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG,
               mode: str = "standard"):
-    """The paper's experiment: returns (reconstructed, psnr_dB)."""
+    """The paper's experiment: compress, reconstruct, score.
+
+    Args:
+        img: (H, W) grayscale image (uint8 or float).
+        quality: JPEG quality factor in [1, 100].
+        transform: encoder transform ("exact"/"cordic"/"loeffler").
+        cordic_config: CORDIC config for ``transform == "cordic"``.
+        mode: decode mode, see :func:`decompress`.
+
+    Returns:
+        ``(reconstructed, psnr_db)`` — the (H, W) uint8 reconstruction
+        and its PSNR in dB against ``img`` (paper eq. 23).
+    """
     c = compress(img, quality, transform, cordic_config)
     rec = decompress(c, mode=mode)
     return rec, float(metrics.psnr(jnp.asarray(img), rec))

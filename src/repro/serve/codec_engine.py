@@ -199,7 +199,22 @@ def compress_batch(imgs, quality: int = 50,
                    transform: codec.Transform = "exact",
                    cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG
                    ) -> CompressedBatch:
-    """Compress a (B, H, W) batch or ragged list of grayscale images."""
+    """Compress a (B, H, W) batch or ragged list of grayscale images.
+
+    Args:
+        imgs: either a stacked (B, H, W) uint8/float array (one compiled
+            shape) or a list of 2-D (H, W) images of mixed sizes; ragged
+            sizes bucket up to multiples of :data:`SHAPE_BUCKET` and
+            equal buckets are compressed together.
+        quality: JPEG quality factor in [1, 100].
+        transform: encoder transform, see :data:`repro.core.codec.Transform`.
+        cordic_config: CORDIC config for ``transform == "cordic"``.
+
+    Returns:
+        A :class:`CompressedBatch` whose groups hold (n, bh/8, bw/8, 8, 8)
+        int32 quantised levels per bucket shape, plus the bookkeeping to
+        restore input order and crop back to original sizes.
+    """
     groups, stacked = _group_inputs(imgs)
     fn = functools.partial(_compress_sharded, transform=transform,
                            quality=quality, cordic_config=cordic_config)
@@ -222,6 +237,15 @@ def decompress_batch(cb: CompressedBatch, mode: str = "standard"):
 
     ``mode`` follows :func:`repro.core.codec.decompress`: "standard" decodes
     with the exact IDCT, "matched" with the encoder's adjoint.
+
+    Args:
+        cb: a :class:`CompressedBatch` from :func:`compress_batch`.
+        mode: "standard" (exact IDCT, standards-compliant) or "matched"
+            (encoder's adjoint; CORDIC angle error largely cancels).
+
+    Returns:
+        (B, H, W) uint8 array when the input was stacked, else a list of
+        (H, W) uint8 arrays, each cropped to its original size.
     """
     dec_transform = "exact" if mode == "standard" else cb.transform
     fn = functools.partial(_decompress_sharded, transform=dec_transform,
@@ -249,12 +273,25 @@ def roundtrip_batch(imgs, quality: int = 50,
                     mode: str = "standard", with_psnr: bool = True):
     """Batched form of :func:`repro.core.codec.roundtrip`.
 
-    Returns (reconstructed, psnr) where ``reconstructed`` is (B, H, W)
-    uint8 for stacked input (list otherwise) and ``psnr`` is a (B,) numpy
-    array (None when ``with_psnr=False``).  On TPU the one-pass fused
-    Pallas kernel serves compatible (transform, mode) combinations; the
-    staged compress+decompress path is the CPU fallback and the bit-exact
-    reference.
+    On TPU the one-pass fused Pallas kernel serves compatible
+    (transform, mode) combinations — ``transform == "exact"`` or
+    ``mode == "matched"`` (the kernel reconstructs with the matched
+    adjoint); the staged compress+decompress path is the CPU fallback
+    and the bit-exact reference (docs/architecture.md).
+
+    Args:
+        imgs: stacked (B, H, W) array or ragged list of (H, W) images,
+            as in :func:`compress_batch`.
+        quality: JPEG quality factor in [1, 100].
+        transform: encoder transform ("exact"/"cordic"/"loeffler").
+        cordic_config: CORDIC config for ``transform == "cordic"``.
+        mode: decode mode, see :func:`decompress_batch`.
+        with_psnr: also score each reconstruction against its input.
+
+    Returns:
+        ``(reconstructed, psnr)``: ``reconstructed`` is (B, H, W) uint8
+        for stacked input (a list for ragged input); ``psnr`` is a (B,)
+        numpy array of dB values, or None when ``with_psnr=False``.
     """
     if _fused_ok(transform, mode):
         groups, stacked = _group_inputs(imgs)

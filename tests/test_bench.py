@@ -1,0 +1,217 @@
+"""Benchmark subsystem: registry resolution, artifact schema round-trip,
+RESULTS.md golden snippets, and an end-to-end smoke run of the paper
+pipeline at its smallest grid."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.bench import registry, report, runner, schema
+from repro.bench.cases import check_monotone
+from repro.bench.timer import TimerConfig, Timing, measure
+
+PAPER_TABLE_CASES = ("table1_lena", "table2_cablecar", "table3_psnr_lena",
+                     "table4_psnr_cablecar")
+
+
+# ---------------------------------------------------------------------------
+# Registry resolution
+# ---------------------------------------------------------------------------
+
+def test_registry_has_paper_tables_and_serve_cases():
+    cases = registry.all_cases()
+    for name in PAPER_TABLE_CASES + ("serve_batch_throughput",
+                                     "serve_ragged", "framework_micro"):
+        assert name in cases
+    # each paper table declares which table it feeds
+    assert cases["table1_lena"].table == "Table 1"
+    assert cases["table4_psnr_cablecar"].table == "Table 4"
+
+
+@pytest.mark.parametrize("suite", ("smoke", "paper", "full"))
+def test_suites_contain_all_paper_tables(suite):
+    names = {c.name for c in registry.resolve(suite)}
+    assert set(PAPER_TABLE_CASES) <= names
+
+
+def test_smoke_excludes_micro_and_micro_excludes_tables():
+    assert "framework_micro" not in {
+        c.name for c in registry.resolve("smoke")}
+    assert {c.name for c in registry.resolve("micro")} == {"framework_micro"}
+
+
+def test_resolve_unknown_suite_and_case():
+    with pytest.raises(KeyError):
+        registry.resolve("nope")
+    with pytest.raises(KeyError):
+        registry.get("not_a_benchmark")
+    with pytest.raises(KeyError):
+        registry.resolve("smoke", names=["framework_micro"])  # not a member
+
+
+def test_name_filter_preserves_request_order():
+    picked = registry.resolve("paper", names=["table2_cablecar",
+                                              "table1_lena"])
+    assert [c.name for c in picked] == ["table2_cablecar", "table1_lena"]
+
+
+def test_duplicate_registration_rejected():
+    registry.all_cases()        # ensure cases.py has self-registered
+    with pytest.raises(ValueError):
+        registry.benchmark("table1_lena")(lambda ctx: [])
+    with pytest.raises(ValueError):
+        registry.benchmark("x", suites=("paper", "bogus"))
+
+
+# ---------------------------------------------------------------------------
+# Timer
+# ---------------------------------------------------------------------------
+
+def test_measure_counts_calls_and_blocks():
+    calls = []
+    t = measure(lambda: calls.append(1), warmup=2, iters=3)
+    assert len(calls) == 5
+    assert isinstance(t, Timing) and t.iters == 3
+    assert t.best_us <= t.median_us
+
+
+def test_timer_config_scaled():
+    base = TimerConfig(warmup=2, iters=5)
+    assert base.scaled(iters=1) == TimerConfig(2, 1)
+    assert base.scaled() == base
+
+
+# ---------------------------------------------------------------------------
+# Artifact schema round-trip
+# ---------------------------------------------------------------------------
+
+def _fake_result(name="table1_lena", suite="paper"):
+    rec = schema.BenchRecord(
+        label="lena_512x512",
+        params={"height": 512, "width": 512, "image": "lena",
+                "transform": "exact", "quality": 50},
+        timings_us={"parallel": {"median_us": 3902.7, "best_us": 3800.1,
+                                 "iters": 3},
+                    "serial": {"median_us": 28865.0, "best_us": 28001.5,
+                               "iters": 3}},
+        metrics={"speedup": 7.4, "mpix_per_s": 67.2})
+    return schema.BenchResult(
+        name=name, suite=suite, records=[rec],
+        environment={"backend": "cpu", "device_count": 1,
+                     "jax_version": "0", "git_sha": "abc1234",
+                     "timestamp_utc": "2026-07-30T00:00:00Z"})
+
+
+def test_schema_write_load_roundtrip(tmp_path):
+    result = _fake_result()
+    path = schema.save(result, tmp_path)
+    assert path == tmp_path / "table1_lena.json"
+    loaded = schema.load(path)
+    assert loaded.to_json() == result.to_json()
+    # and the round-tripped artifact still renders
+    assert "Table 1" in report.render([loaded])
+
+
+def test_schema_version_mismatch_rejected(tmp_path):
+    blob = _fake_result().to_json()
+    blob["schema_version"] = 999
+    p = tmp_path / "old.json"
+    p.write_text(json.dumps(blob))
+    with pytest.raises(ValueError, match="schema_version"):
+        schema.load(p)
+
+
+def test_load_many_sorts_by_name(tmp_path):
+    for name in ("zzz_case", "aaa_case"):
+        schema.save(_fake_result(name=name), tmp_path)
+    names = [r.name for r in schema.load_many(
+        sorted(tmp_path.glob("*.json")))]
+    assert names == ["aaa_case", "zzz_case"]
+
+
+# ---------------------------------------------------------------------------
+# RESULTS.md rendering (golden snippets)
+# ---------------------------------------------------------------------------
+
+def test_render_golden_snippet_timing_table():
+    md = report.render([_fake_result()])
+    assert "## Table 1 — DCT codec time vs Lena image size" in md
+    # 28865.0us -> 28.865ms, 3902.7us -> 3.903ms
+    assert "| lena | 512x512 | 28.865 | 3.903 | 7.4x | 67.2 |" in md
+    assert "backend=`cpu`" in md and "git=`abc1234`" in md
+
+
+def test_render_golden_snippet_psnr_table():
+    rec = schema.BenchRecord(
+        label="cablecar_320x288",
+        params={"height": 320, "width": 288, "image": "cablecar",
+                "quality": 50},
+        metrics={"psnr_db_exact": 33.682, "psnr_db_cordic": 31.2,
+                 "gap_db": 2.482})
+    result = schema.BenchResult(name="table4_psnr_cablecar", suite="paper",
+                                records=[rec], environment={})
+    md = report.render([result])
+    assert "## Table 4 — PSNR, exact DCT vs Cordic-Loeffler (Cable-car)" \
+        in md
+    assert "| cablecar | 320x288 | 33.682 | 31.200 | 2.482 |" in md
+
+
+def test_render_empty_rejected_and_unknown_listed():
+    with pytest.raises(ValueError):
+        report.render([])
+    odd = schema.BenchResult(name="mystery", suite="paper",
+                             records=[], environment={})
+    assert "`mystery`" in report.render([odd])
+
+
+def test_timing_legs_handle_non_block_aligned_sizes():
+    # the paper's full Lena grid includes 1024x814 (not divisible by 8);
+    # both legs must pad rather than crash
+    from repro.bench.cases import _timing_records
+    recs = _timing_records(
+        [(40, 26)], lambda h, w: np.zeros((h, w), "uint8"), "lena",
+        registry.RunContext(suite="full", timer=TimerConfig(0, 1)))
+    assert recs[0].label == "lena_40x26"
+    assert recs[0].metrics["speedup"] > 0
+
+
+def test_check_monotone():
+    assert check_monotone({1: 10.0, 2: 20.0, 4: 30.0, 128: 1.0}) == []
+    assert check_monotone({1: 10.0, 2: 5.0, 4: 30.0}) == [(1, 2)]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: smoke run of the paper pipeline at its smallest grid
+# ---------------------------------------------------------------------------
+
+def test_smoke_suite_end_to_end(tmp_path):
+    out = tmp_path / "results"
+    paths = runner.run_suite("smoke", out_dir=out, log=lambda *_: None)
+    assert {p.name for p in paths} >= {f"{n}.json"
+                                       for n in PAPER_TABLE_CASES}
+    results = schema.load_many(paths)
+    for r in results:
+        assert r.suite == "smoke"
+        assert r.records, f"{r.name} produced no records"
+        assert r.environment["device_count"] >= 1
+
+    md_path = report.write_results(results, tmp_path / "RESULTS.md")
+    md = md_path.read_text()
+    for title in ("## Table 1", "## Table 2", "## Table 3", "## Table 4",
+                  "## Batch throughput", "## Ragged mixed-size batches"):
+        assert title in md, f"missing section {title}"
+    # sanity on reproduced physics: PSNR gap is positive (exact > cordic)
+    t3 = next(r for r in results if r.name == "table3_psnr_lena")
+    assert t3.records[0].metrics["gap_db"] > 0
+
+
+def test_cli_report_from_artifacts(tmp_path, capsys):
+    from repro.bench import cli
+    schema.save(_fake_result(), tmp_path)
+    md = tmp_path / "R.md"
+    rc = cli.main(["report", str(tmp_path / "table1_lena.json"),
+                   "--md", str(md)])
+    assert rc == 0 and "Table 1" in md.read_text()
+    rc = cli.main(["report", "--results-dir", str(tmp_path / "empty")])
+    assert rc == 1
