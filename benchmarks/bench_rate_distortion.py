@@ -1,0 +1,71 @@
+"""Rate–distortion sweep over the entropy-coded byte path — thin
+entrypoint over ``repro.bench``.
+
+The sweep itself is :func:`repro.bench.cases.rate_distortion_points`
+(shared with the ``rate_distortion`` registry case that feeds
+RESULTS.md); this script keeps the CSV interface and the
+``--check-monotone`` CI gate: higher quality must cost strictly more
+*measured* bits-per-pixel and buy strictly more PSNR.
+
+    PYTHONPATH=src python benchmarks/bench_rate_distortion.py
+    PYTHONPATH=src python benchmarks/bench_rate_distortion.py --size 200 \
+        --qualities 10 50 90 --check-monotone
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.bench.cases import check_rd_monotone, rate_distortion_points
+from repro.core import images
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=256,
+                    help="square image side for the sweep")
+    ap.add_argument("--image", default="lena",
+                    choices=["lena", "cablecar"])
+    ap.add_argument("--qualities", type=int, nargs="+",
+                    default=[10, 30, 50, 70, 90])
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--check-monotone", action="store_true",
+                    help="exit 1 unless bits-per-pixel and PSNR both "
+                         "strictly increase with quality")
+    args = ap.parse_args()
+
+    image_fn = (images.lena_like if args.image == "lena"
+                else images.cablecar_like)
+    print(f"# backend={jax.default_backend()} "
+          f"devices={jax.local_device_count()} "
+          f"image={args.image} size={args.size}")
+    print("quality,nbytes,bits_per_px,psnr_db,encode_ms,decode_ms")
+
+    records = rate_distortion_points(
+        image_fn, args.image, args.size, args.size,
+        sorted(args.qualities), warmup=1, iters=args.iters)
+    points = []
+    for r in records:
+        q = r.params["quality"]
+        points.append((q, r.metrics["bpp"], r.metrics["psnr_db"]))
+        print(f"{q},{r.params['nbytes']},{r.metrics['bpp']:.4f},"
+              f"{r.metrics['psnr_db']:.3f},"
+              f"{r.timings_us['encode']['median_us'] / 1e3:.3f},"
+              f"{r.timings_us['decode']['median_us'] / 1e3:.3f}")
+
+    if args.check_monotone:
+        bad = check_rd_monotone(points)
+        if bad:
+            print(f"MONOTONICITY VIOLATIONS: {bad}", file=sys.stderr)
+            return 1
+        lo, hi = min(p[0] for p in points), max(p[0] for p in points)
+        print(f"monotone OK: bpp and PSNR strictly increase from "
+              f"quality {lo} to {hi}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,10 +3,10 @@ through the multi-device codec engine.
 
 A batch of images arrives (optionally mixed sizes, as a real service would
 see), the engine buckets + pads them, shards the batch over every local
-device, compresses at a target quality and reports PSNR / ratio /
-throughput.  On TPU the roundtrip runs the one-pass fused Pallas kernel;
-on CPU it runs the batch-first core codec, bit-identical to the
-single-image API.
+device, compresses at a target quality and reports PSNR, *measured*
+entropy-coded bytes per image, and throughput.  On TPU the roundtrip runs
+the one-pass fused Pallas kernel; on CPU it runs the batch-first core
+codec, bit-identical to the single-image API.
 
     PYTHONPATH=src python examples/image_codec_service.py --batch 8
     PYTHONPATH=src python examples/image_codec_service.py --batch 8 --ragged
@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import images, metrics, quant
+from repro.core import images, metrics
 from repro.serve import codec_engine
 
 
@@ -59,6 +59,7 @@ def main():
     rec = codec_engine.decompress_batch(cb)
     jax.block_until_ready(rec)
     dt = time.monotonic() - t0
+    blobs = cb.to_bytes_list()      # real entropy-coded bytes per image
 
     imgs = list(batch) if args.ragged else [batch[i]
                                             for i in range(args.batch)]
@@ -69,22 +70,12 @@ def main():
           f"{args.batch / dt:.1f} img/s")
 
     recs = rec if args.ragged else [rec[i] for i in range(args.batch)]
-    for i, (im, r, grp) in enumerate(zip(imgs, recs, _flat_groups(cb))):
+    for i, (im, r, blob) in enumerate(zip(imgs, recs, blobs)):
         p = float(metrics.psnr(jnp.asarray(im), r))
-        ratio = float(quant.compression_ratio(grp, *im.shape))
+        ratio = im.shape[0] * im.shape[1] / len(blob)   # measured bytes
         kind = "lena" if i % 2 == 0 else "cablecar"
         print(f"  img{i} ({kind:8s} {im.shape[0]:4d}x{im.shape[1]:<4d}): "
-              f"{p:6.2f} dB, {ratio:5.1f}x")
-
-
-def _flat_groups(cb):
-    """Per-image qcoeff blocks in input order, cropped to the image's own
-    blocks (ragged buckets carry padding blocks that would skew ratios)."""
-    out = [None] * cb.n_images
-    for g in cb.groups:
-        for j, (idx, (h, w)) in enumerate(zip(g.indices, g.orig_shapes)):
-            out[idx] = g.qcoeffs[j, :(h + 7) // 8, :(w + 7) // 8]
-    return out
+              f"{p:6.2f} dB, {len(blob):6d} B, {ratio:5.1f}x")
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ import numpy as np
 from repro.bench.registry import RunContext, benchmark
 from repro.bench.schema import BenchRecord
 from repro.bench.timer import measure
-from repro.core import codec, dct, images, quant
+from repro.core import codec, dct, images, metrics, quant
 
 QUALITY = 50               # the paper's fixed JPEG quality factor
 
@@ -171,6 +171,113 @@ def table3_psnr_lena(ctx: RunContext) -> list:
 def table4_psnr_cablecar(ctx: RunContext) -> list:
     return _psnr_records(_grid(TABLE4_GRID, ctx.suite),
                          images.cablecar_like, "cablecar")
+
+
+# ---------------------------------------------------------------------------
+# Rate–distortion (measured bytes through the entropy stage)
+# ---------------------------------------------------------------------------
+
+RD_QUALITIES = {
+    "smoke": [10, 50, 90],
+    "paper": [10, 30, 50, 70, 90],
+    "full": [10, 20, 30, 40, 50, 60, 70, 80, 90],
+}
+RD_IMAGES = {
+    "smoke": [("lena", images.lena_like, (200, 200))],
+    "paper": [("lena", images.lena_like, (512, 512)),
+              ("cablecar", images.cablecar_like, (320, 288))],
+}
+RD_IMAGES["full"] = RD_IMAGES["paper"]
+
+
+def rate_distortion_points(image_fn, family: str, h: int, w: int,
+                           qualities, warmup: int, iters: int) -> list:
+    """Measured rate–distortion sweep for one image: one record per
+    quality with real container bytes, PSNR, and encode/decode timings.
+
+    Shared by the ``rate_distortion`` registry case and the
+    ``benchmarks/bench_rate_distortion.py`` CI gate.
+
+    Args:
+        image_fn: (h, w) -> uint8 image generator.
+        family: label prefix ("lena"/"cablecar").
+        h, w: image size.
+        qualities: JPEG quality factors to sweep.
+        warmup: untimed leading calls per leg (compile + cache warm).
+        iters: timed calls per leg.
+
+    Returns:
+        BenchRecord list; ``metrics["bpp"]`` is *measured*
+        bits-per-pixel (``8 * len(stream) / (h * w)``), not the
+        ``estimate_bits`` proxy.
+    """
+    from repro.core import entropy
+    img = image_fn(h, w)
+    records = []
+    for q in qualities:
+        blob = entropy.encode_image(img, q)
+        rec = entropy.decode_image(blob)
+        psnr = float(metrics.psnr(jnp.asarray(img), rec))
+        t_enc = measure(entropy.encode_image, img, q,
+                        warmup=warmup, iters=iters)
+        t_dec = measure(entropy.decode_image, blob,
+                        warmup=warmup, iters=iters)
+        bpp = len(blob) * 8 / (h * w)
+        records.append(BenchRecord(
+            label=f"{family}_{h}x{w}_q{q}",
+            params={"height": h, "width": w, "image": family,
+                    "quality": q, "transform": "exact",
+                    "nbytes": len(blob)},
+            timings_us={"encode": t_enc.to_json(),
+                        "decode": t_dec.to_json()},
+            metrics={"bpp": bpp, "compression_ratio": 8.0 / bpp,
+                     "psnr_db": psnr,
+                     "enc_mpix_per_s": (h * w) / t_enc.median_us,
+                     "dec_mpix_per_s": (h * w) / t_dec.median_us}))
+    return records
+
+
+def check_rd_monotone(points) -> list:
+    """Rate–distortion monotonicity violations over (quality, bpp, psnr).
+
+    Higher quality must cost more measured bits-per-pixel and buy more
+    PSNR; that joint ordering is the CI gate for the entropy stage.
+
+    Args:
+        points: iterable of (quality, bpp, psnr_db) tuples (any order;
+            duplicate qualities collapse to one point — re-measuring
+            the same quality is not a violation).
+
+    Returns:
+        ``(metric_name, lower_quality, higher_quality)`` tuples where
+        the metric failed to strictly increase with quality.
+    """
+    pts = sorted({q: (q, b, p) for q, b, p in sorted(points)}.values())
+    bad = []
+    for (q1, b1, p1), (q2, b2, p2) in zip(pts, pts[1:]):
+        if b2 <= b1:
+            bad.append(("bpp", q1, q2))
+        if p2 <= p1:
+            bad.append(("psnr", q1, q2))
+    return bad
+
+
+@benchmark("rate_distortion", suites=("smoke", "paper", "full"),
+           description="measured bits-per-pixel, PSNR and encode/decode "
+                       "throughput vs quality (entropy-coded bytes)")
+def rate_distortion(ctx: RunContext) -> list:
+    """Quality sweep through the full codec: DCT -> quantise -> zig-zag
+    -> RLE -> canonical Huffman -> ``DCTZ`` container, sizes measured
+    from the real stream."""
+    qualities = RD_QUALITIES.get(ctx.suite, RD_QUALITIES["paper"])
+    grid = RD_IMAGES.get(ctx.suite, RD_IMAGES["paper"])
+    timer = ctx.timer.scaled(warmup=max(ctx.timer.warmup, 1))
+    records = []
+    for family, image_fn, (h, w) in grid:
+        records.extend(rate_distortion_points(
+            image_fn, family, h, w, qualities,
+            warmup=timer.warmup, iters=timer.iters))
+    return records
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,7 @@ table1_lena               Table 1 — codec time vs Lena size
 table2_cablecar           Table 2 — codec time vs Cable-car size
 table3_psnr_lena          Table 3 — PSNR exact vs Cordic (Lena)
 table4_psnr_cablecar      Table 4 — PSNR exact vs Cordic (Cable-car)
+rate_distortion           Rate–distortion (measured bytes)
 serve_batch_throughput    Batch throughput curve (serving engine)
 serve_ragged              Ragged mixed-size batches (serving engine)
 framework_micro           Framework micro-benches
@@ -58,6 +59,29 @@ def _psnr_table(result, title: str, blurb: str) -> str:
             f"| {r.metrics['psnr_db_exact']:.3f} "
             f"| {r.metrics['psnr_db_cordic']:.3f} "
             f"| {r.metrics['gap_db']:.3f} |")
+    return "\n".join(lines)
+
+
+def _rd_table(result) -> str:
+    lines = ["## Rate–distortion (measured bytes)", "",
+             "Quality sweep through the complete codec — DCT, quantise, "
+             "zig-zag, run-length, canonical Huffman, `DCTZ` container "
+             "(`repro.core.entropy`).  Bits-per-pixel are *measured* "
+             "from the entropy-coded stream, not the old "
+             "`estimate_bits` proxy; encode is image→bytes, decode is "
+             "bytes→image.", "",
+             "| image | size | quality | bits/px | ratio | PSNR (dB) "
+             "| encode (ms) | decode (ms) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in result.records:
+        lines.append(
+            f"| {r.params.get('image', result.name)} | {_size(r)} "
+            f"| {r.params['quality']} "
+            f"| {r.metrics['bpp']:.3f} "
+            f"| {r.metrics['compression_ratio']:.1f}x "
+            f"| {r.metrics['psnr_db']:.2f} "
+            f"| {_ms(r.timings_us['encode'])} "
+            f"| {_ms(r.timings_us['decode'])} |")
     return "\n".join(lines)
 
 
@@ -132,6 +156,7 @@ _SECTIONS = (
                          "(Lena)"),
     ("table4_psnr_cablecar", "Table 4 — PSNR, exact DCT vs Cordic-Loeffler "
                              "(Cable-car)"),
+    ("rate_distortion", None),
     ("serve_batch_throughput", None),
     ("serve_ragged", None),
     ("framework_micro", None),
@@ -181,6 +206,8 @@ def render(results) -> str:
             parts.append(_timing_table(result, title, _TIMING_BLURBS[name]))
         elif name in _PSNR_BLURBS:
             parts.append(_psnr_table(result, title, _PSNR_BLURBS[name]))
+        elif name == "rate_distortion":
+            parts.append(_rd_table(result))
         elif name == "serve_batch_throughput":
             parts.append(_throughput_table(result))
         elif name == "serve_ragged":

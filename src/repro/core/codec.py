@@ -29,19 +29,62 @@ Transform = Literal["exact", "cordic", "loeffler"]
 
 @dataclasses.dataclass
 class CompressedImage:
-    """Quantised DCT representation of a single grayscale image."""
+    """Quantised DCT representation of a single grayscale image.
+
+    ``to_bytes``/``from_bytes`` round-trip through the entropy-coded
+    ``DCTZ`` container (:mod:`repro.core.entropy`) losslessly, so the
+    ``nbytes`` property is the *measured* compressed size; the old
+    ``nbytes_estimate`` heuristic remains only as a cheap device-side
+    proxy.
+    """
     qcoeffs: jnp.ndarray          # (H/8, W/8, 8, 8) int32 quantised levels
     quality: int
     transform: str
     orig_shape: tuple             # (H, W) before padding
     cordic_config: cordic.CordicConfig | None = None
+    _nbytes_cache: int | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def to_bytes(self) -> bytes:
+        """Serialise as one entropy-coded ``DCTZ`` stream (lossless over
+        the quantised levels; layout in docs/bitstream.md)."""
+        from repro.core import entropy
+        return entropy.encode_qcoeffs(self.qcoeffs, self.quality,
+                                      self.transform, self.orig_shape)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "CompressedImage":
+        """Parse a ``DCTZ`` stream back into a :class:`CompressedImage`.
+
+        The stream does not carry a CORDIC config (it only matters for
+        ``mode="matched"`` decodes); the paper's config is assumed.
+
+        Raises:
+            repro.core.entropy.BitstreamError: malformed stream.
+        """
+        from repro.core import entropy
+        qcoeffs, hdr = entropy.decode_qcoeffs(data)
+        return cls(qcoeffs=qcoeffs, quality=hdr["quality"],
+                   transform=hdr["transform"],
+                   orig_shape=(hdr["height"], hdr["width"]),
+                   cordic_config=None, _nbytes_cache=len(data))
+
+    @property
+    def nbytes(self) -> int:
+        """Measured size in bytes of the entropy-coded stream (cached)."""
+        if self._nbytes_cache is None:
+            self._nbytes_cache = len(self.to_bytes())
+        return self._nbytes_cache
 
     def nbytes_estimate(self) -> float:
+        """Heuristic size proxy; superseded by the measured ``nbytes``
+        (kept for device-side telemetry that cannot afford bit packing)."""
         return float(quant.estimate_bits(self.qcoeffs)) / 8.0
 
     def compression_ratio(self) -> float:
+        """original bytes / *measured* entropy-coded bytes."""
         h, w = self.orig_shape
-        return float(quant.compression_ratio(self.qcoeffs, h, w))
+        return (h * w) / float(self.nbytes)
 
 
 def pad_to_block(img: jnp.ndarray, block: int = 8) -> jnp.ndarray:

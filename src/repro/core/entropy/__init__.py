@@ -1,0 +1,29 @@
+"""Entropy-coded bitstream stage: quantised blocks -> real bytes.
+
+Completes the paper's pipeline (DCT -> quantise -> IDCT) with a
+JPEG-style lossless entropy stage so compression ratios are *measured*
+bytes, not the :func:`repro.core.quant.estimate_bits` proxy:
+
+* :mod:`scan`      — zig-zag scan + DC differential, vectorised in JAX
+  (vmappable per block; this half rides the accelerator),
+* :mod:`rle`       — run-length symbolisation of the zig-zag AC tail and
+  magnitude-category coding, NumPy at the host edge,
+* :mod:`huffman`   — canonical, length-limited Huffman codes built from
+  per-stream symbol frequencies,
+* :mod:`bitio`     — MSB-first bit packing/unpacking (NumPy),
+* :mod:`container` — the versioned ``DCTZ`` container (magic, version,
+  shape, quality, transform, table ids, CRC) with
+  :func:`encode_image` / :func:`decode_image`.
+
+The stage is exactly lossless over the quantised levels, so
+``decode_image(encode_image(img, q))`` reproduces the quantised
+round-trip reconstruction bit-exactly.  The byte layout a third-party
+decoder needs is specified in ``docs/bitstream.md``.
+"""
+
+from repro.core.entropy.container import (BitstreamError, decode_image,
+                                          decode_qcoeffs, encode_image,
+                                          encode_qcoeffs, read_header)
+
+__all__ = ["BitstreamError", "decode_image", "decode_qcoeffs",
+           "encode_image", "encode_qcoeffs", "read_header"]

@@ -1,0 +1,103 @@
+"""MSB-first bit packing and unpacking at the host edge (pure NumPy).
+
+The writer side is fully vectorised: the entropy encoder accumulates
+``(code, length)`` pairs in stream order and :func:`pack_bits` turns them
+into bytes in one shot (repeat/shift/packbits — no Python per-bit loop).
+The reader exposes the next 16-bit window of the payload on demand
+(O(1) time and memory per symbol) so a canonical-Huffman decoder can
+consume one symbol per prefix-LUT lookup.
+
+Conventions (see docs/bitstream.md):
+
+* bits are written MSB-first within each code and within each byte,
+* the final partial byte is padded with 1-bits (JPEG's convention),
+* no code or amplitude field is longer than 16 bits.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MAX_FIELD_BITS = 16
+
+
+class TruncatedStream(ValueError):
+    """Raised by :class:`BitReader` when a read runs past the payload."""
+
+
+def pack_bits(codes: np.ndarray, lengths: np.ndarray) -> bytes:
+    """Concatenate MSB-first bit fields into padded bytes.
+
+    Args:
+        codes: (M,) non-negative ints; field k contributes its low
+            ``lengths[k]`` bits, most significant first.
+        lengths: (M,) field widths in [0, 16]; zero-width fields are
+            skipped (convenient for absent amplitude fields).
+
+    Returns:
+        The packed payload, final byte padded with 1-bits.
+    """
+    codes = np.asarray(codes, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    if lengths.size and int(lengths.max()) > MAX_FIELD_BITS:
+        raise ValueError(f"bit field wider than {MAX_FIELD_BITS} bits")
+    keep = lengths > 0
+    codes, lengths = codes[keep], lengths[keep]
+    total = int(lengths.sum())
+    if total == 0:
+        return b""
+    # per-bit shift amounts: for a field of length L the bits come out at
+    # shifts L-1, L-2, ..., 0 (MSB first); at global bit position p inside
+    # field k that shift is (ends[k] - 1) - p
+    ends = np.cumsum(lengths)
+    shifts = (np.repeat(ends - 1, lengths)
+              - np.arange(total, dtype=np.int64))
+    bits = ((np.repeat(codes, lengths) >> shifts) & 1).astype(np.uint8)
+    pad = (-total) % 8
+    if pad:
+        bits = np.concatenate([bits, np.ones(pad, np.uint8)])
+    return np.packbits(bits).tobytes()
+
+
+class BitReader:
+    """Sequential MSB-first reader over a packed payload.
+
+    ``peek16()`` returns the next 16 bits (1-padded past the end, like
+    the writer's padding) without consuming them — the shape a canonical
+    Huffman prefix-LUT wants — and ``skip``/``take`` advance the cursor.
+    """
+
+    _POW16 = (1 << np.arange(15, -1, -1)).astype(np.int32)
+
+    def __init__(self, payload: bytes):
+        bits = np.unpackbits(np.frombuffer(payload, dtype=np.uint8))
+        self.nbits = bits.size
+        # 1-padding tail so peek16 near the end needs no branching; the
+        # window is computed on demand (O(1) memory beyond the bits)
+        self._bits = np.concatenate(
+            [bits, np.ones(MAX_FIELD_BITS, np.uint8)])
+        self.pos = 0
+
+    def peek16(self) -> int:
+        """Next 16 bits as an int (1-padded past the payload end)."""
+        if self.pos > self.nbits:
+            raise TruncatedStream("bit reader ran past end of payload")
+        return int(self._bits[self.pos:self.pos + MAX_FIELD_BITS]
+                   @ self._POW16)
+
+    def skip(self, n: int) -> None:
+        """Consume ``n`` bits; raises :class:`TruncatedStream` if the
+        cursor would pass the payload end."""
+        self.pos += n
+        if self.pos > self.nbits:
+            raise TruncatedStream(
+                f"entropy payload truncated: needed bit {self.pos} "
+                f"of {self.nbits}")
+
+    def take(self, n: int) -> int:
+        """Consume and return ``n`` bits (MSB-first), n in [0, 16]."""
+        if n == 0:
+            return 0
+        v = self.peek16() >> (MAX_FIELD_BITS - n)
+        self.skip(n)
+        return v

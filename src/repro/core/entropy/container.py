@@ -1,0 +1,267 @@
+"""The ``DCTZ`` container: a versioned bitstream around the entropy stage.
+
+Layout (all integers little-endian; full spec in docs/bitstream.md)::
+
+    offset size field
+    0      4    magic  b"DCTZ"
+    4      1    version (currently 1)
+    5      1    flags (reserved, must be 0)
+    6      1    quality (1..100, IJG scaling)
+    7      1    transform code (0 exact / 1 cordic / 2 loeffler)
+    8      4    height  u32 (original, pre-padding)
+    12     4    width   u32
+    16     1    dc_table_id (0 = table embedded in this stream)
+    17     1    ac_table_id (0 = table embedded in this stream)
+    18     2    reserved (must be 0)
+    20     4    payload_nbytes u32
+    24     4    crc32 over (header bytes 4..23 ‖ tables ‖ payload)
+    28     ...  DC table segment, AC table segment (id 0 only)
+    ...    ...  entropy-coded payload (payload_nbytes bytes)
+
+The encoder always derives per-stream canonical Huffman tables from the
+actual symbol frequencies and embeds them (table id 0); nonzero table
+ids are reserved for future shared tables and must be rejected.
+Decoders must reject unknown magic/version/transform/table ids and
+trailing bytes — the format versions by replacement, not extension.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec, cordic
+from repro.core.entropy import bitio, huffman, rle, scan
+
+MAGIC = b"DCTZ"
+VERSION = 1
+TABLE_EMBEDDED = 0
+
+_HEADER = struct.Struct("<4sBBBBIIBBHII")
+HEADER_NBYTES = _HEADER.size            # 28
+
+TRANSFORM_CODES = {"exact": 0, "cordic": 1, "loeffler": 2}
+_TRANSFORM_NAMES = {v: k for k, v in TRANSFORM_CODES.items()}
+
+
+class BitstreamError(ValueError):
+    """A ``DCTZ`` stream is malformed: bad magic/version/field values,
+    truncated data, CRC mismatch, or an invalid entropy payload."""
+
+
+def _grid_shape(height: int, width: int) -> tuple:
+    return (height + 7) // 8, (width + 7) // 8
+
+
+def encode_qcoeffs(qcoeffs, quality: int, transform: str,
+                   orig_shape: tuple) -> bytes:
+    """Entropy-code one image's quantised levels into a ``DCTZ`` stream.
+
+    Args:
+        qcoeffs: (gh, gw, 8, 8) int quantised levels, raster block
+            order; ``(gh, gw)`` must equal the block grid of
+            ``orig_shape`` padded to 8.
+        quality: JPEG quality factor in [1, 100] (stored so the decoder
+            rebuilds the same quantisation table).
+        transform: encoder transform name (see
+            :data:`TRANSFORM_CODES`); stored for provenance and for
+            ``mode="matched"`` decodes.
+        orig_shape: (H, W) of the image before block padding.
+
+    Returns:
+        The complete container as bytes.
+
+    Raises:
+        ValueError: shape/quality/transform out of range, or a level too
+            large for a 15-bit amplitude (:class:`repro.core.entropy.
+            rle.RangeError`).
+    """
+    h, w = int(orig_shape[0]), int(orig_shape[1])
+    if transform not in TRANSFORM_CODES:
+        raise ValueError(f"unknown transform {transform!r}; "
+                         f"expected one of {sorted(TRANSFORM_CODES)}")
+    if not 1 <= int(quality) <= 100:
+        raise ValueError(f"quality {quality} outside [1, 100]")
+    gh, gw = _grid_shape(h, w)
+    qcoeffs = jnp.asarray(qcoeffs)
+    if qcoeffs.shape != (gh, gw, 8, 8):
+        raise ValueError(f"qcoeffs shape {qcoeffs.shape} does not match "
+                         f"the {gh}x{gw} block grid of a {h}x{w} image")
+
+    # accelerated half: zig-zag + DC differential (jnp, vmappable)
+    z = scan.block_stream(qcoeffs)
+    dc_diff, ac = scan.dc_differential(z)
+    dc_diff = np.asarray(dc_diff)
+    ac = np.asarray(ac)
+
+    # host edge: symbolise, build canonical tables, pack bits
+    is_dc, syms, amp_vals, amp_lens = rle.symbolize(dc_diff, ac)
+    dc_freq, ac_freq = rle.symbol_frequencies(is_dc, syms)
+    dc_table = huffman.build_table(dc_freq)
+    ac_table = huffman.build_table(ac_freq)
+    payload = rle.encode_payload(is_dc, syms, amp_vals, amp_lens,
+                                 dc_table, ac_table)
+
+    tables = dc_table.to_segment() + ac_table.to_segment()
+    header = _HEADER.pack(MAGIC, VERSION, 0, int(quality),
+                          TRANSFORM_CODES[transform], h, w,
+                          TABLE_EMBEDDED, TABLE_EMBEDDED, 0,
+                          len(payload), 0)
+    # CRC protects every header field after the magic (a flipped quality
+    # or shape byte must not decode plausibly) plus tables and payload
+    crc = zlib.crc32(header[4:24] + tables + payload) & 0xFFFFFFFF
+    return header[:24] + struct.pack("<I", crc) + tables + payload
+
+
+def read_header(data: bytes) -> dict:
+    """Parse and validate the fixed 28-byte header.
+
+    Args:
+        data: at least the first 28 bytes of a stream.
+
+    Returns:
+        Dict with ``version``, ``quality``, ``transform``, ``height``,
+        ``width``, ``dc_table_id``, ``ac_table_id``, ``payload_nbytes``,
+        ``crc32``.
+
+    Raises:
+        BitstreamError: short data, bad magic, unsupported version,
+            or any field outside its valid range.
+    """
+    if len(data) < HEADER_NBYTES:
+        raise BitstreamError(
+            f"truncated header: got {len(data)} bytes, need "
+            f"{HEADER_NBYTES}")
+    (magic, version, flags, quality, tcode, height, width,
+     dc_id, ac_id, reserved, payload_nbytes, crc) = _HEADER.unpack_from(
+        data)
+    if magic != MAGIC:
+        raise BitstreamError(f"not a DCTZ stream (magic {magic!r})")
+    if version != VERSION:
+        raise BitstreamError(f"unsupported DCTZ version {version}; this "
+                             f"decoder reads version {VERSION}")
+    if flags != 0 or reserved != 0:
+        raise BitstreamError("reserved header fields must be zero")
+    if tcode not in _TRANSFORM_NAMES:
+        raise BitstreamError(f"unknown transform code {tcode}")
+    if not 1 <= quality <= 100:
+        raise BitstreamError(f"quality {quality} outside [1, 100]")
+    if height == 0 or width == 0:
+        raise BitstreamError("zero image dimension")
+    if dc_id != TABLE_EMBEDDED or ac_id != TABLE_EMBEDDED:
+        raise BitstreamError(
+            f"unknown table ids ({dc_id}, {ac_id}); only embedded "
+            f"tables (id {TABLE_EMBEDDED}) are defined in version "
+            f"{VERSION}")
+    return {"version": version, "quality": quality,
+            "transform": _TRANSFORM_NAMES[tcode],
+            "height": height, "width": width,
+            "dc_table_id": dc_id, "ac_table_id": ac_id,
+            "payload_nbytes": payload_nbytes, "crc32": crc}
+
+
+def decode_qcoeffs(data: bytes) -> tuple:
+    """Full inverse of :func:`encode_qcoeffs`.
+
+    Args:
+        data: one complete ``DCTZ`` stream.
+
+    Returns:
+        ``(qcoeffs, header)``: the (gh, gw, 8, 8) int32 quantised levels
+        and the parsed header dict.
+
+    Raises:
+        BitstreamError: any malformation — truncation (header, tables or
+            payload), trailing bytes, CRC mismatch, invalid table
+            segments, or an undecodable entropy payload.
+    """
+    hdr = read_header(data)
+    try:
+        dc_table, off = huffman.CanonicalTable.from_segment(
+            data, HEADER_NBYTES)
+        ac_table, off = huffman.CanonicalTable.from_segment(data, off)
+    except huffman.InvalidTable as e:
+        raise BitstreamError(f"bad embedded Huffman table: {e}") from e
+    end = off + hdr["payload_nbytes"]
+    if len(data) < end:
+        raise BitstreamError(
+            f"truncated payload: stream has {len(data) - off} of "
+            f"{hdr['payload_nbytes']} declared bytes")
+    if len(data) > end:
+        raise BitstreamError(f"{len(data) - end} trailing bytes after "
+                             f"the declared payload")
+    crc = zlib.crc32(data[4:24] + data[HEADER_NBYTES:end]) & 0xFFFFFFFF
+    if crc != hdr["crc32"]:
+        raise BitstreamError(
+            f"CRC mismatch: header says {hdr['crc32']:#010x}, stream "
+            f"hashes to {crc:#010x} (corrupted stream)")
+
+    gh, gw = _grid_shape(hdr["height"], hdr["width"])
+    # every block costs at least 2 payload bits (DC code + EOB), so a
+    # shape whose block count exceeds 4 bytes^-1 * payload is invalid —
+    # this bounds allocation before trusting the header's dimensions
+    if gh * gw > 4 * hdr["payload_nbytes"]:
+        raise BitstreamError(
+            f"declared {hdr['height']}x{hdr['width']} image needs "
+            f"{gh * gw} blocks but the {hdr['payload_nbytes']}-byte "
+            f"payload cannot hold them (corrupted shape)")
+    try:
+        dc_diff, ac = rle.decode_payload(data[off:end], gh * gw,
+                                         dc_table, ac_table)
+    except (bitio.TruncatedStream, ValueError) as e:
+        raise BitstreamError(f"bad entropy payload: {e}") from e
+
+    # accelerated half of the inverse: DC integrate + inverse zig-zag
+    dc = scan.dc_integrate(jnp.asarray(dc_diff))
+    z = scan.assemble_stream(dc, jnp.asarray(ac))
+    return scan.unblock_stream(z.astype(jnp.int32), gh, gw), hdr
+
+
+def encode_image(img, quality: int = 50,
+                 transform: codec.Transform = "exact",
+                 cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG
+                 ) -> bytes:
+    """Compress a (H, W) grayscale image to a complete ``DCTZ`` stream.
+
+    The array half (DCT + quantise + zig-zag) runs the same jitted path
+    as :func:`repro.core.codec.compress`; only bit packing happens on
+    the host.
+
+    Args:
+        img: (H, W) uint8/float grayscale image.
+        quality: JPEG quality factor in [1, 100].
+        transform: encoder transform ("exact"/"cordic"/"loeffler").
+        cordic_config: CORDIC config for ``transform == "cordic"``.
+
+    Returns:
+        The container bytes; ``len()`` of it is the *measured* size the
+        rate–distortion benches report.
+    """
+    c = codec.compress(img, quality, transform, cordic_config)
+    return c.to_bytes()
+
+
+def decode_image(data: bytes, mode: str = "standard") -> jnp.ndarray:
+    """Reconstruct the (H, W) uint8 image from a ``DCTZ`` stream.
+
+    The entropy stage is lossless over the quantised levels, so the
+    result is bit-exact with decoding the in-memory
+    :class:`repro.core.codec.CompressedImage` the encoder started from.
+
+    Args:
+        data: one complete ``DCTZ`` stream.
+        mode: "standard" (exact IDCT — a decoder that ignores the
+            encoder's approximate transform) or "matched" (the adjoint
+            of the stored transform, with the paper's CORDIC config).
+
+    Returns:
+        (H, W) uint8 reconstruction, cropped to the stored shape.
+
+    Raises:
+        BitstreamError: see :func:`decode_qcoeffs`.
+    """
+    c = codec.CompressedImage.from_bytes(data)
+    return codec.decompress(c, mode=mode)

@@ -1,0 +1,206 @@
+"""Canonical, length-limited Huffman codes (JPEG-table shaped).
+
+A table is fully described by ``counts`` (how many codes have each
+length 1..16) and ``symbols`` (all coded symbols in canonical order) —
+the same (BITS, HUFFVAL) shape JPEG uses, which is what the ``DCTZ``
+container embeds.  Codes are *canonical*: within a length, codes are
+assigned in ``symbols`` order, numerically increasing, and the first
+code of length L+1 is twice the next code of length L.  A third-party
+decoder can therefore rebuild the exact codes from the two arrays alone
+(docs/bitstream.md gives the reconstruction algorithm).
+
+Tables are built per stream from the actual symbol frequencies
+(:func:`build_table`): plain Huffman over the frequencies, then the
+histogram rebalancing of ITU-T T.81 K.3 to cap code length at 16 while
+preserving the Kraft sum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+MAX_CODE_LEN = 16
+
+
+class InvalidTable(ValueError):
+    """An embedded table segment violates the canonical-code invariants."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CanonicalTable:
+    """A canonical Huffman code: (counts per length, symbols in order).
+
+    Attributes:
+        counts: length-16 tuple; ``counts[i]`` codes have length i+1.
+        symbols: all coded symbols (ints in [0, 255]) in canonical order
+            — shortest codes first, ties in assignment order.
+    """
+    counts: tuple
+    symbols: tuple
+
+    def __post_init__(self):
+        if len(self.counts) != MAX_CODE_LEN:
+            raise InvalidTable(f"counts must have {MAX_CODE_LEN} entries")
+        if sum(self.counts) != len(self.symbols):
+            raise InvalidTable("counts sum != number of symbols")
+        if len(set(self.symbols)) != len(self.symbols):
+            raise InvalidTable("duplicate symbol in table")
+        if any(s < 0 or s > 255 for s in self.symbols):
+            raise InvalidTable("symbols must be bytes (0..255)")
+        kraft = sum(c * 2 ** (MAX_CODE_LEN - l)
+                    for l, c in enumerate(self.counts, start=1))
+        if kraft > 2 ** MAX_CODE_LEN:
+            raise InvalidTable("code lengths overfill the code space "
+                               "(Kraft sum > 1)")
+
+    def code_lengths(self) -> list:
+        """Per-symbol (code, length) pairs in canonical ``symbols`` order."""
+        out = []
+        code = 0
+        i = 0
+        for length, c in enumerate(self.counts, start=1):
+            for _ in range(c):
+                out.append((code, length))
+                code += 1
+                i += 1
+            code <<= 1
+        return out
+
+    def encoder_luts(self) -> tuple:
+        """(code_of, len_of): 256-entry arrays indexed by symbol.
+
+        ``len_of[s] == 0`` marks a symbol the table cannot encode.
+        """
+        code_of = np.zeros(256, dtype=np.int64)
+        len_of = np.zeros(256, dtype=np.int64)
+        for sym, (code, length) in zip(self.symbols, self.code_lengths()):
+            code_of[sym] = code
+            len_of[sym] = length
+        return code_of, len_of
+
+    def decoder_lut(self) -> tuple:
+        """(sym_lut, len_lut): 2**16-entry prefix tables.
+
+        Indexing with the next 16 bits of the stream yields the decoded
+        symbol and its code length; ``len_lut == 0`` marks an invalid
+        prefix (no code starts with those bits).
+        """
+        sym_lut = np.zeros(1 << MAX_CODE_LEN, dtype=np.int16)
+        len_lut = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
+        for sym, (code, length) in zip(self.symbols, self.code_lengths()):
+            base = code << (MAX_CODE_LEN - length)
+            span = 1 << (MAX_CODE_LEN - length)
+            sym_lut[base:base + span] = sym
+            len_lut[base:base + span] = length
+        return sym_lut, len_lut
+
+    def to_segment(self) -> bytes:
+        """Serialise as 16 count bytes + the symbol bytes (JPEG DHT shape)."""
+        return bytes(self.counts) + bytes(self.symbols)
+
+    @classmethod
+    def from_segment(cls, data: bytes, offset: int = 0) -> tuple:
+        """Parse a table segment; returns ``(table, next_offset)``.
+
+        Raises:
+            InvalidTable: malformed counts/symbols (also covers
+                truncation, reported with the missing byte count).
+        """
+        if len(data) < offset + MAX_CODE_LEN:
+            raise InvalidTable("table segment truncated (counts)")
+        counts = tuple(data[offset:offset + MAX_CODE_LEN])
+        nsym = sum(counts)
+        end = offset + MAX_CODE_LEN + nsym
+        if len(data) < end:
+            raise InvalidTable(
+                f"table segment truncated: {end - len(data)} symbol "
+                f"bytes missing")
+        symbols = tuple(data[offset + MAX_CODE_LEN:end])
+        return cls(counts=counts, symbols=symbols), end
+
+
+def _huffman_depths(freqs: dict) -> dict:
+    """Unlimited-depth Huffman code lengths for symbol -> frequency."""
+    if len(freqs) == 1:
+        return {next(iter(freqs)): 1}
+    heap = [(f, sym, None, None) for sym, f in freqs.items()]
+    heapq.heapify(heap)
+    n = 0
+    while len(heap) > 1:
+        a = heapq.heappop(heap)
+        b = heapq.heappop(heap)
+        n -= 1                       # unique, non-symbol tie-break key
+        heapq.heappush(heap, (a[0] + b[0], n, a, b))
+    depths: dict = {}
+    stack = [(heap[0], 0)]
+    while stack:
+        (f, key, left, right), d = stack.pop()
+        if left is None:
+            depths[key] = d
+        else:
+            stack.append((left, d + 1))
+            stack.append((right, d + 1))
+    return depths
+
+
+def _limit_lengths(hist: list) -> list:
+    """Cap a code-length histogram at MAX_CODE_LEN (ITU-T T.81 K.3).
+
+    ``hist[l]`` is the number of codes of length ``l`` (index 0 unused).
+    Each move retires two codes of the longest length into one code one
+    bit shorter plus two codes one bit longer than some shorter code —
+    the Kraft sum and the symbol count are both preserved.
+    """
+    max_len = len(hist) - 1
+    for i in range(max_len, MAX_CODE_LEN, -1):
+        while hist[i] > 0:
+            j = i - 2
+            while hist[j] == 0:
+                j -= 1
+            hist[i] -= 2
+            hist[i - 1] += 1
+            hist[j + 1] += 2
+            hist[j] -= 1
+    return hist[:MAX_CODE_LEN + 1] + [0] * (MAX_CODE_LEN + 1 - len(hist))
+
+
+def build_table(freqs: np.ndarray) -> CanonicalTable:
+    """Canonical length-limited table from symbol frequencies.
+
+    Args:
+        freqs: (<=256,) occurrence counts indexed by symbol; zero-count
+            symbols get no code.
+
+    Returns:
+        A :class:`CanonicalTable` assigning shorter codes to more
+        frequent symbols; ties break toward the smaller symbol value, so
+        the construction is deterministic.
+
+    Raises:
+        ValueError: all frequencies are zero (nothing to code).
+    """
+    freqs = np.asarray(freqs)
+    present = {int(s): int(freqs[s]) for s in np.nonzero(freqs)[0]}
+    if not present:
+        raise ValueError("cannot build a Huffman table from an empty "
+                         "symbol set")
+    depths = _huffman_depths(present)
+    max_d = max(depths.values())
+    hist = [0] * (max_d + 1)
+    for d in depths.values():
+        hist[d] += 1
+    hist = _limit_lengths(hist)
+    # assign limited lengths shortest-first to symbols ordered by
+    # (frequency desc, symbol asc)
+    order = sorted(present, key=lambda s: (-present[s], s))
+    counts = [0] * MAX_CODE_LEN
+    symbols = []
+    it = iter(order)
+    for length in range(1, MAX_CODE_LEN + 1):
+        for _ in range(hist[length]):
+            counts[length - 1] += 1
+            symbols.append(next(it))
+    return CanonicalTable(counts=tuple(counts), symbols=tuple(symbols))

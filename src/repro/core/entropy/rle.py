@@ -1,0 +1,214 @@
+"""DC-differential + run-length symbolisation of zig-zag blocks.
+
+Host-edge half of the entropy stage (NumPy): turns the fixed-shape
+arrays produced by :mod:`repro.core.entropy.scan` into the JPEG-baseline
+symbol stream that :mod:`huffman`/:mod:`bitio` serialise, and back.
+
+Symbol alphabet (docs/bitstream.md):
+
+* DC: the magnitude category ``S`` of the DC difference (0..15), then
+  ``S`` raw amplitude bits.
+* AC: one byte ``(run << 4) | size`` per nonzero coefficient, where
+  ``run`` is the number of zeros skipped (0..15) and ``size`` its
+  magnitude category (1..15), then ``size`` amplitude bits.  Two
+  specials: ``0x00`` (EOB) ends a block early, ``0xF0`` (ZRL) skips 16
+  zeros without coding a coefficient.
+* amplitudes use JPEG's one's-complement convention: ``v > 0`` codes as
+  ``v``; ``v < 0`` codes as ``v + 2**size - 1``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.entropy import bitio, huffman
+
+EOB = 0x00
+ZRL = 0xF0
+MAX_CATEGORY = 15          # amplitudes are at most 15 bits
+AC_LEN = 63                # zig-zag positions 1..63
+
+
+class RangeError(ValueError):
+    """A quantised level is too large for a 15-bit amplitude field."""
+
+
+def magnitude_category(v: np.ndarray) -> np.ndarray:
+    """Bit length of |v| per element (category 0 for v == 0)."""
+    mag = np.abs(np.asarray(v, dtype=np.int64))
+    # frexp exponent == bit length for exact integer floats; int64
+    # magnitudes here are bounded well below 2**53 by the range check
+    return np.where(mag == 0, 0,
+                    np.frexp(mag.astype(np.float64))[1]).astype(np.int64)
+
+
+def amplitude_value(v: np.ndarray, size: np.ndarray) -> np.ndarray:
+    """One's-complement amplitude field for nonzero v of category size."""
+    v = np.asarray(v, dtype=np.int64)
+    return np.where(v >= 0, v, v + (1 << size) - 1)
+
+
+def amplitude_decode(bits: int, size: int) -> int:
+    """Invert :func:`amplitude_value` for one field."""
+    if size == 0:
+        return 0
+    if bits < (1 << (size - 1)):
+        return bits - (1 << size) + 1
+    return bits
+
+
+def _check_range(cat: np.ndarray, what: str) -> None:
+    if cat.size and int(cat.max()) > MAX_CATEGORY:
+        raise RangeError(
+            f"{what} magnitude needs category {int(cat.max())} > "
+            f"{MAX_CATEGORY}; levels must fit 15-bit amplitudes")
+
+
+def symbolize(dc_diff: np.ndarray, ac: np.ndarray) -> tuple:
+    """Blocks -> the interleaved (symbol, amplitude) stream.
+
+    Args:
+        dc_diff: (n,) int DC differences in block order.
+        ac: (n, 63) int AC tails in zig-zag order.
+
+    Returns:
+        ``(is_dc, syms, amp_vals, amp_lens)`` — parallel arrays over the
+        symbol stream in coding order (each block: one DC symbol, then
+        its AC symbols).  ``amp_lens[k] == 0`` means symbol k carries no
+        amplitude field (EOB/ZRL/zero DC diff).
+
+    Raises:
+        RangeError: some level needs an amplitude wider than 15 bits.
+    """
+    dc_diff = np.asarray(dc_diff, dtype=np.int64)
+    ac = np.asarray(ac, dtype=np.int64)
+    n = dc_diff.shape[0]
+    dc_cat = magnitude_category(dc_diff)
+    _check_range(dc_cat, "DC difference")
+    ac_cat = magnitude_category(ac)
+    _check_range(ac_cat, "AC coefficient")
+    dc_amp = amplitude_value(dc_diff, dc_cat)
+    ac_amp = amplitude_value(ac, ac_cat)
+
+    is_dc, syms, amp_vals, amp_lens = [], [], [], []
+    for b in range(n):
+        is_dc.append(True)
+        syms.append(int(dc_cat[b]))
+        amp_vals.append(int(dc_amp[b]))
+        amp_lens.append(int(dc_cat[b]))
+        nz = np.nonzero(ac[b])[0]
+        prev = -1
+        for pos in nz:
+            run = int(pos) - prev - 1
+            while run >= 16:
+                is_dc.append(False)
+                syms.append(ZRL)
+                amp_vals.append(0)
+                amp_lens.append(0)
+                run -= 16
+            is_dc.append(False)
+            syms.append((run << 4) | int(ac_cat[b, pos]))
+            amp_vals.append(int(ac_amp[b, pos]))
+            amp_lens.append(int(ac_cat[b, pos]))
+            prev = int(pos)
+        if prev != AC_LEN - 1:
+            is_dc.append(False)
+            syms.append(EOB)
+            amp_vals.append(0)
+            amp_lens.append(0)
+    return (np.asarray(is_dc, dtype=bool),
+            np.asarray(syms, dtype=np.int64),
+            np.asarray(amp_vals, dtype=np.int64),
+            np.asarray(amp_lens, dtype=np.int64))
+
+
+def symbol_frequencies(is_dc, syms) -> tuple:
+    """(dc_freqs, ac_freqs): 256-bin histograms of the two alphabets."""
+    dc = np.bincount(syms[is_dc], minlength=256)
+    ac = np.bincount(syms[~is_dc], minlength=256)
+    return dc, ac
+
+
+def encode_payload(is_dc, syms, amp_vals, amp_lens,
+                   dc_table: huffman.CanonicalTable,
+                   ac_table: huffman.CanonicalTable) -> bytes:
+    """Huffman-code the symbol stream and pack it into bytes.
+
+    Every symbol contributes its code, immediately followed by its
+    amplitude field (when present); the interleave is realised by laying
+    codes at even and amplitudes at odd slots of a (2M,) field array and
+    letting :func:`repro.core.entropy.bitio.pack_bits` drop the
+    zero-length slots.
+    """
+    dc_code, dc_len = dc_table.encoder_luts()
+    ac_code, ac_len = ac_table.encoder_luts()
+    codes = np.where(is_dc, dc_code[syms], ac_code[syms])
+    lens = np.where(is_dc, dc_len[syms], ac_len[syms])
+    if bool((lens == 0).any()):
+        raise ValueError("symbol stream contains a symbol absent from "
+                         "the Huffman table")
+    m = syms.shape[0]
+    fields = np.empty(2 * m, dtype=np.int64)
+    widths = np.empty(2 * m, dtype=np.int64)
+    fields[0::2], widths[0::2] = codes, lens
+    fields[1::2], widths[1::2] = amp_vals, amp_lens
+    return bitio.pack_bits(fields, widths)
+
+
+def decode_payload(payload: bytes, n_blocks: int,
+                   dc_table: huffman.CanonicalTable,
+                   ac_table: huffman.CanonicalTable) -> tuple:
+    """Decode ``n_blocks`` blocks from an entropy payload.
+
+    Args:
+        payload: packed bits from :func:`encode_payload`.
+        n_blocks: how many 8x8 blocks the stream must contain (known
+            from the container's image shape).
+        dc_table: canonical table for DC categories.
+        ac_table: canonical table for AC (run, size) symbols.
+
+    Returns:
+        ``(dc_diff, ac)`` — (n,) int32 DC differences and (n, 63) int32
+        AC tails, exactly inverting :func:`symbolize`.
+
+    Raises:
+        bitio.TruncatedStream: the payload ends mid-block.
+        ValueError: an invalid Huffman prefix or a coefficient overrun
+            (corrupted stream).
+    """
+    dc_sym, dc_len = dc_table.decoder_lut()
+    ac_sym, ac_len = ac_table.decoder_lut()
+    reader = bitio.BitReader(payload)
+    dc_diff = np.zeros(n_blocks, dtype=np.int32)
+    ac = np.zeros((n_blocks, AC_LEN), dtype=np.int32)
+    for b in range(n_blocks):
+        w = reader.peek16()
+        length = int(dc_len[w])
+        if length == 0:
+            raise ValueError(f"invalid DC Huffman prefix at bit "
+                             f"{reader.pos}")
+        reader.skip(length)
+        size = int(dc_sym[w])
+        dc_diff[b] = amplitude_decode(reader.take(size), size)
+        pos = 0                     # next AC slot to fill (0-based in ac)
+        while pos < AC_LEN:
+            w = reader.peek16()
+            length = int(ac_len[w])
+            if length == 0:
+                raise ValueError(f"invalid AC Huffman prefix at bit "
+                                 f"{reader.pos}")
+            reader.skip(length)
+            sym = int(ac_sym[w])
+            if sym == EOB:
+                break
+            if sym == ZRL:
+                pos += 16
+                continue
+            run, size = sym >> 4, sym & 0xF
+            pos += run
+            if pos >= AC_LEN:
+                raise ValueError(
+                    f"corrupted stream: AC run overruns block {b}")
+            ac[b, pos] = amplitude_decode(reader.take(size), size)
+            pos += 1
+    return dc_diff, ac

@@ -1,0 +1,90 @@
+"""Accelerated half of the entropy stage: zig-zag scan + DC differential.
+
+Everything here is pure ``jnp`` on fixed shapes — vmappable per block and
+shardable with the rest of the codec — so the array-heavy reordering runs
+wherever the DCT ran.  The variable-length half (run-length symbols, bit
+packing) lives in :mod:`repro.core.entropy.rle` / ``bitio`` at the host
+edge.
+
+Block order is raster order over the block grid: block ``(i, j)`` of a
+``(gh, gw, 8, 8)`` coefficient array is stream element ``i * gw + j``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+
+
+def zigzag_perm(n: int = 8) -> np.ndarray:
+    """Raster -> zig-zag permutation of flat block indices (length n*n)."""
+    return quant._zigzag_perm(n)
+
+
+def inverse_zigzag_perm(n: int = 8) -> np.ndarray:
+    """Zig-zag -> raster permutation (the inverse of :func:`zigzag_perm`)."""
+    return np.argsort(quant._zigzag_perm(n)).astype(np.int32)
+
+
+def zigzag_scan(blocks: jnp.ndarray) -> jnp.ndarray:
+    """(..., 8, 8) coefficient blocks -> (..., 64) in zig-zag order."""
+    return quant.zigzag(blocks)
+
+
+def zigzag_unscan(z: jnp.ndarray) -> jnp.ndarray:
+    """(..., 64) zig-zag vectors -> (..., 8, 8) raster blocks."""
+    *lead, n2 = z.shape
+    n = int(round(n2 ** 0.5))
+    inv = jnp.asarray(inverse_zigzag_perm(n))
+    return z[..., inv].reshape(*lead, n, n)
+
+
+def block_stream(qcoeffs: jnp.ndarray) -> jnp.ndarray:
+    """(gh, gw, 8, 8) quantised levels -> (gh*gw, 64) zig-zag stream.
+
+    Args:
+        qcoeffs: one image's quantised coefficient grid, raster block
+            order (as produced by :func:`repro.core.codec.compress`).
+
+    Returns:
+        (gh*gw, 64) int32 array; row k is block ``(k // gw, k % gw)`` in
+        zig-zag coefficient order.
+    """
+    gh, gw = qcoeffs.shape[:2]
+    return zigzag_scan(qcoeffs).reshape(gh * gw, 64)
+
+
+def unblock_stream(z: jnp.ndarray, gh: int, gw: int) -> jnp.ndarray:
+    """(gh*gw, 64) zig-zag stream -> (gh, gw, 8, 8) quantised levels."""
+    return zigzag_unscan(z).reshape(gh, gw, 8, 8)
+
+
+def dc_differential(z: jnp.ndarray) -> tuple:
+    """Split a (n, 64) zig-zag stream into DC differences and the AC tail.
+
+    The DC coefficient of each block is coded as its difference from the
+    previous block's DC (predictor 0 for the first block), exactly as in
+    JPEG baseline.
+
+    Args:
+        z: (n, 64) int32 zig-zag stream in block order.
+
+    Returns:
+        ``(dc_diff, ac)``: (n,) int32 DC differences and the (n, 63)
+        int32 AC tail (zig-zag positions 1..63).
+    """
+    dc = z[:, 0]
+    prev = jnp.concatenate([jnp.zeros((1,), dc.dtype), dc[:-1]])
+    return dc - prev, z[:, 1:]
+
+
+def dc_integrate(dc_diff: jnp.ndarray) -> jnp.ndarray:
+    """Invert :func:`dc_differential`'s DC leg: (n,) diffs -> (n,) DCs."""
+    return jnp.cumsum(dc_diff)
+
+
+def assemble_stream(dc: jnp.ndarray, ac: jnp.ndarray) -> jnp.ndarray:
+    """Recombine (n,) DCs and (n, 63) AC tails into a (n, 64) stream."""
+    return jnp.concatenate([dc[:, None].astype(ac.dtype), ac], axis=1)

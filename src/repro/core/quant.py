@@ -41,18 +41,50 @@ def _scaled_qtable_np(quality: int) -> np.ndarray:
 
 
 def qtable(quality: int = 50, dtype=jnp.float32) -> jnp.ndarray:
-    """(8, 8) quantisation step table for an IJG quality factor."""
+    """Quantisation step table for an IJG quality factor.
+
+    This is the only table-derivation rule in the codec: the ``DCTZ``
+    bitstream stores just the quality byte and decoders rebuild the
+    steps with exactly this function (docs/bitstream.md §5).
+
+    Args:
+        quality: IJG quality factor, clipped to [1, 100]; 50 is the
+            unscaled Annex K table, lower is coarser.
+        dtype: element dtype of the returned table.
+
+    Returns:
+        (8, 8) array of quantisation steps in [1, 255].
+    """
     return jnp.asarray(_scaled_qtable_np(quality), dtype=dtype)
 
 
 def quantize(coeffs: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Round coefficients to quantisation steps.  (..., 8, 8) -> int32."""
+    """Round DCT coefficients to quantised levels.
+
+    Args:
+        coeffs: (..., 8, 8) float DCT coefficients (any leading batch/
+            block-grid axes).
+        q: (8, 8) step table from :func:`qtable` (broadcast over the
+            leading axes).
+
+    Returns:
+        (..., 8, 8) int32 quantised levels ``round(coeffs / q)``.
+    """
     return jnp.round(coeffs / q).astype(jnp.int32)
 
 
 def dequantize(qcoeffs: jnp.ndarray, q: jnp.ndarray,
                dtype=jnp.float32) -> jnp.ndarray:
-    """Reconstruct coefficient values from quantised levels."""
+    """Reconstruct coefficient values from quantised levels.
+
+    Args:
+        qcoeffs: (..., 8, 8) int quantised levels from :func:`quantize`.
+        q: (8, 8) step table; must match the quantiser's.
+        dtype: output dtype.
+
+    Returns:
+        (..., 8, 8) dequantised coefficients ``qcoeffs * q``.
+    """
     return qcoeffs.astype(dtype) * q.astype(dtype)
 
 
@@ -65,19 +97,35 @@ def _zigzag_perm(n: int = 8) -> np.ndarray:
 
 
 def zigzag(blocks: jnp.ndarray) -> jnp.ndarray:
-    """(..., 8, 8) -> (..., 64) in zigzag order."""
+    """Reorder blocks into the JPEG zig-zag sequence.
+
+    Args:
+        blocks: (..., n, n) square blocks (n = 8 in the codec).
+
+    Returns:
+        (..., n*n) array in zig-zag order (DC first); the inverse lives
+        in :mod:`repro.core.entropy.scan` (``zigzag_unscan``).
+    """
     *lead, b, b2 = blocks.shape
     perm = jnp.asarray(_zigzag_perm(b))
     return blocks.reshape(*lead, b * b2)[..., perm]
 
 
 def estimate_bits(qcoeffs: jnp.ndarray) -> jnp.ndarray:
-    """JPEG-flavoured size proxy (bits) for quantised blocks (..., 8, 8).
+    """JPEG-flavoured size *proxy* (bits) for quantised blocks.
 
-    Per nonzero coefficient: magnitude-category bits + ~4 bits of Huffman
-    overhead; + 4 bits EOB per block.  This is a *proxy* used only to report
-    compression ratios (the paper reports none — it reports time + PSNR — so
-    this is auxiliary telemetry, not a reproduction target).
+    Per nonzero coefficient: magnitude-category bits + ~4 bits of
+    Huffman overhead; + 4 bits EOB per block.  Superseded for all
+    reported numbers by the measured sizes of the entropy-coded stream
+    (``CompressedImage.nbytes`` / :mod:`repro.core.entropy`); kept
+    because it is jit-able on device, where bit packing is not — useful
+    as cheap telemetry inside compiled pipelines.
+
+    Args:
+        qcoeffs: (..., 8, 8) int quantised levels.
+
+    Returns:
+        Scalar estimated bit count over all blocks.
     """
     mag = jnp.abs(qcoeffs).astype(jnp.float32)
     nz = mag > 0
@@ -89,5 +137,17 @@ def estimate_bits(qcoeffs: jnp.ndarray) -> jnp.ndarray:
 
 def compression_ratio(qcoeffs: jnp.ndarray, h: int, w: int,
                       bits_per_pixel: int = 8) -> jnp.ndarray:
-    """original bits / estimated compressed bits."""
+    """original bits / *estimated* compressed bits (device-side proxy).
+
+    For measured ratios use ``CompressedImage.compression_ratio()``,
+    which counts real ``DCTZ`` stream bytes.
+
+    Args:
+        qcoeffs: (..., 8, 8) int quantised levels of one image.
+        h, w: original image size in pixels.
+        bits_per_pixel: raw input depth (8 for grayscale uint8).
+
+    Returns:
+        Scalar ratio ``raw_bits / estimate_bits(qcoeffs)``.
+    """
     return (h * w * bits_per_pixel) / estimate_bits(qcoeffs)

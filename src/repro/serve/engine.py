@@ -20,12 +20,35 @@ from repro.models import registry
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Serving-time knobs (decoupled from the architecture config).
+
+    Attributes:
+        max_len: KV-cache capacity in tokens; prompt + generated tokens
+            must fit.
+        temperature: sampling temperature; 0 means greedy argmax.
+        kv_dct_keep: DCT KV-cache compression — coefficients kept per
+            64-step block (see :mod:`repro.serve.kv_compress`); 0
+            disables compression.
+    """
     max_len: int = 2048
     temperature: float = 0.0      # 0 => greedy
     kv_dct_keep: int = 0          # 0 => off; else coefficients kept of 64
 
 
 def make_prefill(cfg: ArchConfig):
+    """Build the jitted prefill step for one architecture.
+
+    Prefill writes the whole prompt into the KV cache in one pass (the
+    decode path's dynamic_update_slice with seq > 1).
+
+    Args:
+        cfg: architecture config (layer count, dims, cache layout).
+
+    Returns:
+        ``prefill(params, tokens, cache) -> (last_logits, cache)``:
+        ``tokens`` is (B, P) int32; ``last_logits`` is (B, vocab) for
+        the final prompt position; ``cache`` holds positions [0, P).
+    """
     @jax.jit
     def prefill(params, tokens, cache):
         batch = {"tokens": tokens,
@@ -37,6 +60,19 @@ def make_prefill(cfg: ArchConfig):
 
 
 def make_decode_step(cfg: ArchConfig, temperature: float = 0.0):
+    """Build the jitted single-token decode step for one architecture.
+
+    Args:
+        cfg: architecture config (must match the cache's).
+        temperature: sampling temperature baked into the jit; 0 means
+            greedy argmax (the ``key`` argument is then unused).
+
+    Returns:
+        ``decode_step(params, tokens, cache, cache_index, key) ->
+        (next_token, cache)``: ``tokens`` is (B, 1) int32 (the previous
+        step's output), ``cache_index`` a scalar int32 write position,
+        ``key`` a PRNG key; ``next_token`` is (B,) int32.
+    """
     @jax.jit
     def decode_step(params, tokens, cache, cache_index, key):
         batch = {"tokens": tokens, "cache_index": cache_index}
@@ -55,7 +91,22 @@ def generate(cfg: ArchConfig, params, prompts: jnp.ndarray, max_new: int,
              serve_cfg: ServeConfig = ServeConfig(), seed: int = 0):
     """Greedy/temperature generation for a whole batch.
 
-    prompts (B, P) int32.  Returns (B, max_new) generated tokens.
+    Runs one prefill over the prompts, then ``max_new - 1`` decode
+    steps, all through the jits above (one compile per shape).
+
+    Args:
+        cfg: architecture config; selects the model from the registry.
+        params: model parameters as produced by
+            ``repro.models.registry.init_params(cfg, ...)``.
+        prompts: (B, P) int32 prompt tokens (already padded to one
+            length).
+        max_new: number of tokens to generate, >= 1.
+        serve_cfg: serving knobs (cache size, temperature, KV
+            compression) — see :class:`ServeConfig`.
+        seed: PRNG seed for temperature sampling.
+
+    Returns:
+        (B, max_new) int32 generated tokens (prompt not included).
     """
     b, p = prompts.shape
     cache = registry.init_cache(cfg, batch=b, max_len=serve_cfg.max_len)

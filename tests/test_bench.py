@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.bench import registry, report, runner, schema
-from repro.bench.cases import check_monotone
+from repro.bench.cases import check_monotone, check_rd_monotone
 from repro.bench.timer import TimerConfig, Timing, measure
 
 PAPER_TABLE_CASES = ("table1_lena", "table2_cablecar", "table3_psnr_lena",
@@ -21,7 +21,8 @@ PAPER_TABLE_CASES = ("table1_lena", "table2_cablecar", "table3_psnr_lena",
 
 def test_registry_has_paper_tables_and_serve_cases():
     cases = registry.all_cases()
-    for name in PAPER_TABLE_CASES + ("serve_batch_throughput",
+    for name in PAPER_TABLE_CASES + ("rate_distortion",
+                                     "serve_batch_throughput",
                                      "serve_ragged", "framework_micro"):
         assert name in cases
     # each paper table declares which table it feeds
@@ -181,6 +182,35 @@ def test_check_monotone():
     assert check_monotone({1: 10.0, 2: 5.0, 4: 30.0}) == [(1, 2)]
 
 
+def test_render_golden_snippet_rd_table():
+    rec = schema.BenchRecord(
+        label="lena_200x200_q50",
+        params={"height": 200, "width": 200, "image": "lena",
+                "quality": 50, "transform": "exact", "nbytes": 2041},
+        timings_us={"encode": {"median_us": 12000.0, "best_us": 11000.0,
+                               "iters": 3},
+                    "decode": {"median_us": 9000.0, "best_us": 8000.0,
+                               "iters": 3}},
+        metrics={"bpp": 0.4082, "compression_ratio": 19.6,
+                 "psnr_db": 37.598, "enc_mpix_per_s": 3.3,
+                 "dec_mpix_per_s": 4.4})
+    md = report.render([schema.BenchResult(
+        name="rate_distortion", suite="paper", records=[rec],
+        environment={})])
+    assert "## Rate–distortion (measured bytes)" in md
+    assert "| lena | 200x200 | 50 | 0.408 | 19.6x | 37.60 " \
+           "| 12.000 | 9.000 |" in md
+
+
+def test_check_rd_monotone():
+    good = [(10, 0.1, 30.0), (50, 0.4, 37.0), (90, 1.5, 40.0)]
+    assert check_rd_monotone(good) == []
+    # out-of-order input is sorted by quality before checking
+    assert check_rd_monotone(list(reversed(good))) == []
+    bad = [(10, 0.5, 30.0), (50, 0.4, 29.0)]
+    assert check_rd_monotone(bad) == [("bpp", 10, 50), ("psnr", 10, 50)]
+
+
 # ---------------------------------------------------------------------------
 # End-to-end: smoke run of the paper pipeline at its smallest grid
 # ---------------------------------------------------------------------------
@@ -199,6 +229,7 @@ def test_smoke_suite_end_to_end(tmp_path):
     md_path = report.write_results(results, tmp_path / "RESULTS.md")
     md = md_path.read_text()
     for title in ("## Table 1", "## Table 2", "## Table 3", "## Table 4",
+                  "## Rate–distortion (measured bytes)",
                   "## Batch throughput", "## Ragged mixed-size batches"):
         assert title in md, f"missing section {title}"
     # sanity on reproduced physics: PSNR gap is positive (exact > cordic)

@@ -1,0 +1,254 @@
+"""Entropy-coded bitstream stage: zig-zag properties, RLE/Huffman
+round-trips (random + adversarial blocks), container framing errors,
+bit-exactness against the quantised array path, and the engine's batch
+byte path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, images
+from repro.core.entropy import (BitstreamError, decode_image, decode_qcoeffs,
+                                encode_image, encode_qcoeffs, read_header)
+from repro.core.entropy import bitio, huffman, rle, scan
+
+
+def _roundtrip_blocks(dc_diff, ac):
+    """symbolize -> tables -> payload -> decode, for (n,)+(n,63) arrays."""
+    is_dc, syms, amp_vals, amp_lens = rle.symbolize(dc_diff, ac)
+    dc_freq, ac_freq = rle.symbol_frequencies(is_dc, syms)
+    dc_t, ac_t = huffman.build_table(dc_freq), huffman.build_table(ac_freq)
+    payload = rle.encode_payload(is_dc, syms, amp_vals, amp_lens, dc_t, ac_t)
+    return rle.decode_payload(payload, len(dc_diff), dc_t, ac_t)
+
+
+class TestZigzag:
+    def test_perm_is_permutation_and_involution_with_inverse(self):
+        perm = scan.zigzag_perm()
+        inv = scan.inverse_zigzag_perm()
+        assert sorted(perm.tolist()) == list(range(64))
+        np.testing.assert_array_equal(perm[inv], np.arange(64))
+        np.testing.assert_array_equal(inv[perm], np.arange(64))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_unscan_inverts_scan(self, seed):
+        blocks = jnp.asarray(np.random.default_rng(seed).integers(
+            -500, 500, (3, 8, 8), dtype=np.int32))
+        z = scan.zigzag_scan(blocks)
+        np.testing.assert_array_equal(np.asarray(scan.zigzag_unscan(z)),
+                                      np.asarray(blocks))
+
+    def test_dc_differential_integrates_back(self):
+        z = jnp.asarray(np.random.default_rng(0).integers(
+            -100, 100, (7, 64), dtype=np.int32))
+        dc_diff, ac = scan.dc_differential(z)
+        dc = scan.dc_integrate(dc_diff)
+        np.testing.assert_array_equal(np.asarray(dc), np.asarray(z[:, 0]))
+        back = scan.assemble_stream(dc, ac)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(z))
+
+
+class TestRLEHuffman:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+    @settings(max_examples=15, deadline=None)
+    def test_roundtrip_random_blocks(self, seed, n):
+        rng = np.random.default_rng(seed)
+        # mostly-zero AC (the realistic case) plus dense noise blocks
+        ac = rng.integers(-1000, 1000, (n, 63))
+        ac[rng.random((n, 63)) < 0.7] = 0
+        dc_diff = rng.integers(-2000, 2000, (n,))
+        dec_dc, dec_ac = _roundtrip_blocks(dc_diff, ac)
+        np.testing.assert_array_equal(dec_dc, dc_diff)
+        np.testing.assert_array_equal(dec_ac, ac)
+
+    @pytest.mark.parametrize("name,dc,acrow", [
+        ("all_zero", [0, 0, 0], np.zeros((3, 63), int)),
+        ("single_giant_ac_last",
+         [5], np.eye(1, 63, 62, dtype=int) * 32767),
+        ("single_giant_negative_ac",
+         [-32768 + 1], np.eye(1, 63, 40, dtype=int) * -32767),
+        ("max_run_zrl",                    # 62 zeros then one coefficient
+         [1], np.eye(1, 63, 62, dtype=int) * 3),
+        ("alternating_runs",
+         [7], np.tile([0, 0, 0, 0, 0, 0, 0, 0, 0, 1], 7)[:63]
+         .reshape(1, 63)),
+        ("dense_max",                      # no zero anywhere, all max cat
+         [100], np.full((1, 63), 255)),
+    ])
+    def test_adversarial_blocks(self, name, dc, acrow):
+        ac = np.asarray(acrow, dtype=np.int64)
+        dc_diff = np.asarray(dc, dtype=np.int64)
+        dec_dc, dec_ac = _roundtrip_blocks(dc_diff, ac)
+        np.testing.assert_array_equal(dec_dc, dc_diff, err_msg=name)
+        np.testing.assert_array_equal(dec_ac, ac, err_msg=name)
+
+    def test_amplitude_range_rejected(self):
+        with pytest.raises(rle.RangeError):
+            rle.symbolize(np.array([2**16]), np.zeros((1, 63), int))
+        with pytest.raises(rle.RangeError):
+            rle.symbolize(np.array([0]),
+                          np.full((1, 63), 40000, dtype=np.int64))
+
+    def test_pack_bits_msb_first_and_one_padded(self):
+        out = bitio.pack_bits(np.array([0b101, 0b1]),
+                              np.array([3, 1]))
+        assert out == bytes([0b10111111])
+        reader = bitio.BitReader(out)
+        assert reader.take(3) == 0b101 and reader.take(1) == 1
+
+    def test_bitreader_truncation_raises(self):
+        reader = bitio.BitReader(b"\xff")
+        reader.take(8)
+        with pytest.raises(bitio.TruncatedStream):
+            reader.take(1)
+
+
+class TestHuffman:
+    def test_canonical_codes_are_prefix_free_and_ordered(self):
+        t = huffman.build_table(np.array([0, 50, 30, 10, 5, 3, 2]))
+        codes = t.code_lengths()
+        strs = [format(c, f"0{l}b") for c, l in codes]
+        for i, a in enumerate(strs):
+            for b in strs[i + 1:]:
+                assert not b.startswith(a) and not a.startswith(b)
+        # more frequent symbols never get longer codes
+        lens = dict(zip(t.symbols, (l for _, l in codes)))
+        assert lens[1] <= lens[6]
+
+    def test_single_symbol_table(self):
+        t = huffman.build_table(np.eye(1, 256, 7).ravel())
+        assert t.symbols == (7,) and t.code_lengths() == [(0, 1)]
+
+    def test_length_limit_16(self):
+        # fibonacci-ish frequencies force depth > 16 before limiting
+        freqs = np.zeros(40)
+        a, b = 1, 1
+        for s in range(40):
+            freqs[s] = a
+            a, b = b, a + b
+        t = huffman.build_table(freqs)
+        assert max(l for _, l in t.code_lengths()) <= 16
+
+    def test_segment_roundtrip_and_validation(self):
+        t = huffman.build_table(np.array([5, 3, 2, 1]))
+        seg = t.to_segment()
+        t2, off = huffman.CanonicalTable.from_segment(seg)
+        assert t2 == t and off == len(seg)
+        with pytest.raises(huffman.InvalidTable):
+            huffman.CanonicalTable.from_segment(seg[:10])
+        with pytest.raises(huffman.InvalidTable):   # Kraft overfull
+            huffman.CanonicalTable(counts=(4,) + (0,) * 15,
+                                   symbols=(1, 2, 3, 4))
+
+
+class TestContainer:
+    def test_bit_exact_against_quantised_path(self):
+        # the acceptance criterion: decode(encode(img, q)) reproduces the
+        # quantised-roundtrip reconstruction bit-exactly, bench images
+        # included (sizes cut down for test speed)
+        for gen, (h, w) in ((images.lena_like, (96, 96)),
+                            (images.lena_like, (96, 102)),   # non-8-divisible
+                            (images.cablecar_like, (64, 48))):
+            img = gen(h, w)
+            for q in (10, 50, 90):
+                c = codec.compress(img, q)
+                blob = c.to_bytes()
+                rec_bytes = np.asarray(decode_image(blob))
+                rec_array = np.asarray(codec.decompress(c))
+                np.testing.assert_array_equal(rec_bytes, rec_array)
+
+    def test_qcoeffs_lossless_and_header_fields(self):
+        img = images.cablecar_like(72, 80)
+        c = codec.compress(img, 30, "cordic")
+        blob = c.to_bytes()
+        qc, hdr = decode_qcoeffs(blob)
+        np.testing.assert_array_equal(np.asarray(qc), np.asarray(c.qcoeffs))
+        assert hdr["quality"] == 30 and hdr["transform"] == "cordic"
+        assert (hdr["height"], hdr["width"]) == (72, 80)
+        assert read_header(blob) == hdr
+
+    def test_measured_nbytes_and_ratio(self):
+        img = images.lena_like(128, 128)
+        c = codec.compress(img, 50)
+        assert c.nbytes == len(c.to_bytes())
+        assert c.compression_ratio() == 128 * 128 / c.nbytes
+        assert c.nbytes < 128 * 128          # actually compresses
+
+    def test_from_bytes_equals_original(self):
+        img = images.lena_like(64, 64)
+        c = codec.compress(img, 50)
+        c2 = codec.CompressedImage.from_bytes(c.to_bytes())
+        assert c2.quality == 50 and c2.orig_shape == (64, 64)
+        assert c2.to_bytes() == c.to_bytes()   # re-encode is stable
+
+    @pytest.mark.parametrize("mutate,match", [
+        (lambda b: b[:10], "truncated header"),
+        (lambda b: b"JUNK" + b[4:], "not a DCTZ"),
+        (lambda b: b[:4] + bytes([99]) + b[5:], "version"),
+        (lambda b: b[:7] + bytes([9]) + b[8:], "transform"),
+        (lambda b: b[:16] + bytes([3]) + b[17:], "table id"),
+        (lambda b: b[:len(b) - 8], "truncated payload"),
+        (lambda b: b + b"x", "trailing"),
+        (lambda b: b[:-4] + bytes([b[-4] ^ 0xFF]) + b[-3:], "CRC"),
+        # header fields after the magic are CRC-protected too: a flipped
+        # quality bit must not dequantise plausibly with the wrong table
+        (lambda b: b[:6] + bytes([b[6] ^ 1]) + b[7:], "CRC"),
+    ])
+    def test_malformed_streams_rejected_with_clear_errors(self, mutate,
+                                                          match):
+        blob = encode_image(images.lena_like(40, 40), 50)
+        with pytest.raises(BitstreamError, match=match):
+            decode_qcoeffs(mutate(blob))
+
+    def test_crafted_huge_shape_rejected_before_allocation(self):
+        # a crafted header with a valid CRC but an absurd shape must be
+        # rejected by the block-count bound, not die in np allocation
+        import struct
+        import zlib
+        blob = bytearray(encode_image(images.lena_like(40, 40), 50))
+        struct.pack_into("<II", blob, 8, 0xFFFFFF00, 0xFFFFFF00)
+        crc = zlib.crc32(bytes(blob[4:24]) + bytes(blob[28:]))
+        struct.pack_into("<I", blob, 24, crc & 0xFFFFFFFF)
+        with pytest.raises(BitstreamError, match="cannot hold"):
+            decode_qcoeffs(bytes(blob))
+
+    def test_encode_validates_inputs(self):
+        qc = np.zeros((2, 2, 8, 8), np.int32)
+        with pytest.raises(ValueError, match="quality"):
+            encode_qcoeffs(qc, 0, "exact", (16, 16))
+        with pytest.raises(ValueError, match="transform"):
+            encode_qcoeffs(qc, 50, "dst", (16, 16))
+        with pytest.raises(ValueError, match="block grid"):
+            encode_qcoeffs(qc, 50, "exact", (64, 64))
+
+    def test_bpp_monotone_in_quality(self):
+        img = images.lena_like(96, 96)
+        sizes = [len(encode_image(img, q)) for q in (10, 50, 90)]
+        assert sizes[0] < sizes[1] < sizes[2]
+
+
+class TestEngineBytePath:
+    def test_stacked_and_ragged_match_single_image_bytes(self):
+        from repro.serve import codec_engine
+        stacked = np.stack([images.lena_like(64, 64, seed=i)
+                            for i in range(3)])
+        blobs = codec_engine.encode_batch(stacked, 50)
+        assert blobs == [codec.compress(stacked[i], 50).to_bytes()
+                         for i in range(3)]
+        rag = [images.lena_like(64, 72), images.cablecar_like(40, 40)]
+        blobs = codec_engine.encode_batch(rag, 70)
+        assert blobs == [codec.compress(im, 70).to_bytes() for im in rag]
+
+    def test_decode_batch_bit_exact_mixed_streams(self):
+        from repro.serve import codec_engine
+        blobs = [encode_image(images.lena_like(64, 72), 50),
+                 encode_image(images.cablecar_like(40, 40), 30),
+                 encode_image(images.lena_like(64, 72, seed=2), 50)]
+        recs = codec_engine.decode_batch(blobs)
+        for blob, rec in zip(blobs, recs):
+            np.testing.assert_array_equal(np.asarray(rec),
+                                          np.asarray(decode_image(blob)))
+        with pytest.raises(ValueError):
+            codec_engine.decode_batch([])
