@@ -1,0 +1,76 @@
+"""Entropy-stage throughput: vectorized vs scalar-reference coding —
+thin entrypoint over ``repro.bench``.
+
+The measurements are :func:`repro.bench.cases.entropy_throughput_points`
+(shared with the ``entropy_throughput`` registry case that feeds
+RESULTS.md); this script keeps a CSV interface and the
+``--check-identical`` CI gate: the vectorized encoder/decoder must
+produce byte-identical output to the scalar reference path on random
+*and* adversarial blocks (max-magnitude amplitudes, all-zero blocks,
+ZRL chains).  Speed numbers are reported but never gated — shared CI
+runners are too noisy for timing asserts (docs/benchmarks.md).
+
+    PYTHONPATH=src python benchmarks/bench_entropy_throughput.py
+    PYTHONPATH=src python benchmarks/bench_entropy_throughput.py \
+        --size 128 --batches 1 4 --check-identical
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.bench.cases import (entropy_identity_violations,
+                               entropy_throughput_points)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=256,
+                    help="square image side for the throughput sweep")
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 4, 8])
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--trials", type=int, default=25,
+                    help="random batches for --check-identical")
+    ap.add_argument("--check-identical", action="store_true",
+                    help="exit 1 unless the vectorized entropy path is "
+                         "byte-identical to the scalar reference on "
+                         "random + adversarial blocks")
+    args = ap.parse_args()
+
+    print(f"# backend={jax.default_backend()} "
+          f"devices={jax.local_device_count()} size={args.size}")
+
+    if args.check_identical:
+        bad = entropy_identity_violations(trials=args.trials)
+        if bad:
+            print("IDENTITY VIOLATIONS:", file=sys.stderr)
+            for line in bad:
+                print(f"  {line}", file=sys.stderr)
+            return 1
+        print(f"identity OK: vectorized == reference on {args.trials} "
+              f"random batches + adversarial blocks")
+
+    records = entropy_throughput_points(args.size, sorted(args.batches),
+                                        warmup=1, iters=args.iters)
+    stage = records[0]
+    print(f"entropy stage {args.size}x{args.size}: "
+          f"encode {stage.metrics['enc_speedup']:.1f}x "
+          f"({stage.metrics['enc_mb_per_s']:.1f} MB/s), "
+          f"decode {stage.metrics['dec_speedup']:.1f}x "
+          f"({stage.metrics['dec_mb_per_s']:.1f} MB/s) vs reference")
+    print("batch,enc_img_per_s,enc_img_per_s_serial,dec_img_per_s,"
+          "enc_mb_per_s,speedup_vs_reference")
+    for r in records[1:]:
+        print(f"{r.params['batch']},{r.metrics['enc_img_per_s']:.2f},"
+              f"{r.metrics['enc_img_per_s_serial']:.2f},"
+              f"{r.metrics['dec_img_per_s']:.2f},"
+              f"{r.metrics['enc_mb_per_s']:.2f},"
+              f"{r.metrics['speedup_vs_reference']:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

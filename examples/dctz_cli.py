@@ -18,10 +18,20 @@ from __future__ import annotations
 import argparse
 import pathlib
 import sys
+import time
 
 import numpy as np
 
 from repro.core import entropy, images, metrics
+
+
+def _timed(fn, *args):
+    """(result, wall seconds) with one untimed warmup call (absorbs jit
+    compilation so --time reports the steady-state the benches see)."""
+    fn(*args)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    return out, time.perf_counter() - t0
 
 
 def read_gray(spec: str) -> np.ndarray:
@@ -75,9 +85,16 @@ def write_gray(path: pathlib.Path, img: np.ndarray) -> None:
 
 def cmd_encode(args) -> int:
     img = read_gray(args.input)
-    blob = entropy.encode_image(img, args.quality, args.transform)
-    pathlib.Path(args.output).write_bytes(blob)
     h, w = img.shape
+    if args.time:
+        blob, dt = _timed(entropy.encode_image, img, args.quality,
+                          args.transform)
+        print(f"encode: {dt * 1e3:.2f} ms "
+              f"({h * w / 1e6 / dt:.1f} MB/s of pixels, "
+              f"{1 / dt:.1f} img/s)")
+    else:
+        blob = entropy.encode_image(img, args.quality, args.transform)
+    pathlib.Path(args.output).write_bytes(blob)
     bpp = len(blob) * 8 / (h * w)
     print(f"{args.output}: {len(blob)} bytes for {h}x{w} "
           f"({bpp:.3f} bits/px, {8 / bpp:.1f}x vs 8-bit raw)")
@@ -86,7 +103,15 @@ def cmd_encode(args) -> int:
 
 def cmd_decode(args) -> int:
     blob = pathlib.Path(args.input).read_bytes()
-    rec = np.asarray(entropy.decode_image(blob, mode=args.mode))
+    if args.time:
+        rec, dt = _timed(entropy.decode_image, blob, args.mode)
+        rec = np.asarray(rec)
+        h, w = rec.shape
+        print(f"decode: {dt * 1e3:.2f} ms "
+              f"({h * w / 1e6 / dt:.1f} MB/s of pixels, "
+              f"{1 / dt:.1f} img/s)")
+    else:
+        rec = np.asarray(entropy.decode_image(blob, mode=args.mode))
     write_gray(pathlib.Path(args.output), rec)
     print(f"{args.output}: {rec.shape[0]}x{rec.shape[1]} reconstructed")
     if args.original:
@@ -119,6 +144,9 @@ def main() -> int:
     enc.add_argument("--quality", type=int, default=50)
     enc.add_argument("--transform", default="exact",
                      choices=["exact", "cordic", "loeffler"])
+    enc.add_argument("--time", action="store_true",
+                     help="print encode wall time and MB/s (one warmup "
+                          "call first, so jit compilation is excluded)")
     enc.set_defaults(fn=cmd_encode)
 
     dec = sub.add_parser("decode", help=".dctz -> image file")
@@ -128,6 +156,9 @@ def main() -> int:
                      choices=["standard", "matched"])
     dec.add_argument("--original", default=None,
                      help="optional original image to PSNR against")
+    dec.add_argument("--time", action="store_true",
+                     help="print decode wall time and MB/s (one warmup "
+                          "call first, so jit compilation is excluded)")
     dec.set_defaults(fn=cmd_decode)
 
     info = sub.add_parser("info", help="print a .dctz header")

@@ -281,6 +281,233 @@ def rate_distortion(ctx: RunContext) -> list:
 
 
 # ---------------------------------------------------------------------------
+# Entropy throughput (vectorized host coding vs the scalar reference)
+# ---------------------------------------------------------------------------
+
+ENTROPY_GRID = {
+    "smoke": {"size": 128, "batches": [1, 4]},
+    "paper": {"size": 256, "batches": [1, 2, 4, 8]},
+    "full": {"size": 512, "batches": [1, 2, 4, 8, 16]},
+}
+
+
+def _entropy_stage_inputs(size: int, quality: int = QUALITY):
+    """(z, dc_diff, ac, payload, tables, n_blocks) for one image's
+    entropy-stage legs, derived once outside the timed region."""
+    from repro.core.entropy import huffman, rle, scan
+    img = images.lena_like(size, size)
+    c = codec.compress(img, quality)
+    z = np.asarray(scan.block_stream(jnp.asarray(c.qcoeffs)))
+    dc_diff = np.diff(z[:, 0].astype(np.int64), prepend=np.int64(0))
+    ac = z[:, 1:].astype(np.int64)
+    syms = rle.symbolize(dc_diff, ac)
+    dc_freq, ac_freq = rle.symbol_frequencies(syms[0], syms[1])
+    dc_t, ac_t = huffman.build_table(dc_freq), huffman.build_table(ac_freq)
+    payload = rle.encode_payload(*syms, dc_t, ac_t)
+    return z, dc_diff, ac, payload, (dc_t, ac_t), z.shape[0]
+
+
+def reference_encode_stream(dc_diff, ac) -> bytes:
+    """The PR 3 scalar host path: per-block symbolisation + uncached
+    tables + packing.  The golden baseline the vectorized legs are
+    measured (and identity-checked) against."""
+    from repro.core.entropy import huffman, rle
+    syms = rle.symbolize_reference(dc_diff, ac)
+    dc_freq, ac_freq = rle.symbol_frequencies(syms[0], syms[1])
+    return rle.encode_payload(*syms, huffman.build_table(dc_freq),
+                              huffman.build_table(ac_freq))
+
+
+def vectorized_encode_stream(dc_diff, ac) -> bytes:
+    """The production vectorized host path over the same inputs (whole-
+    array symbolisation, uncached tables for a fair comparison)."""
+    from repro.core.entropy import huffman, rle
+    syms = rle.symbolize(dc_diff, ac)
+    dc_freq, ac_freq = rle.symbol_frequencies(syms[0], syms[1])
+    return rle.encode_payload(*syms, huffman.build_table(dc_freq),
+                              huffman.build_table(ac_freq))
+
+
+def entropy_throughput_points(size: int, batches, warmup: int,
+                              iters: int) -> list:
+    """Measured records for the ``entropy_throughput`` case.
+
+    One ``entropy_stage`` record times the host entropy stage in
+    isolation on a single image — vectorized vs scalar-reference, both
+    directions — and one ``encode_batch_{b}`` / ``decode_batch_{b}``
+    record per batch size drives the engine's overlapped byte path
+    (pipelined vs serial), scoring ``speedup_vs_reference`` against the
+    single-image reference end-to-end rate (device compress + scalar
+    host coding), the PR 3 code shape.
+
+    Shared by the registry case and
+    ``benchmarks/bench_entropy_throughput.py``.
+    """
+    from repro.core.entropy import rle
+    from repro.serve import codec_engine
+
+    (z, dc_diff, ac, payload, (dc_t, ac_t),
+     n_blocks) = _entropy_stage_inputs(size)
+    mb = size * size / 1e6          # decoded image payload in MB
+    shape = (size, size)
+
+    t_enc_vec = measure(vectorized_encode_stream, dc_diff, ac,
+                        warmup=warmup, iters=iters)
+    t_enc_ref = measure(reference_encode_stream, dc_diff, ac,
+                        warmup=min(warmup, 1), iters=max(iters // 2, 2))
+    t_dec_vec = measure(rle.decode_payload, payload, n_blocks, dc_t, ac_t,
+                        warmup=warmup, iters=iters)
+    t_dec_ref = measure(rle.decode_payload_reference, payload, n_blocks,
+                        dc_t, ac_t,
+                        warmup=min(warmup, 1), iters=max(iters // 2, 2))
+    records = [BenchRecord(
+        label=f"entropy_stage_{size}",
+        params={"height": size, "width": size, "image": "lena",
+                "quality": QUALITY, "n_blocks": n_blocks,
+                "payload_nbytes": len(payload)},
+        timings_us={"enc_vectorized": t_enc_vec.to_json(),
+                    "enc_reference": t_enc_ref.to_json(),
+                    "dec_vectorized": t_dec_vec.to_json(),
+                    "dec_reference": t_dec_ref.to_json()},
+        metrics={"enc_speedup": t_enc_ref.median_us / t_enc_vec.median_us,
+                 "dec_speedup": t_dec_ref.median_us / t_dec_vec.median_us,
+                 "enc_mb_per_s": mb / (t_enc_vec.median_us / 1e6),
+                 "dec_mb_per_s": mb / (t_dec_vec.median_us / 1e6)})]
+
+    # single-image reference end-to-end rate: sharded device compress
+    # (shared by both code shapes) + the scalar host coding PR 3 paid
+    img1 = images.lena_like(size, size, seed=0)[None]
+
+    def ref_encode_e2e():
+        cb = codec_engine.compress_batch(img1, QUALITY)
+        cb._image_qcoeffs()                 # forces the device->host copy
+        return reference_encode_stream(dc_diff, ac)
+
+    t_ref_e2e = measure(ref_encode_e2e, warmup=min(warmup, 1),
+                        iters=max(iters // 2, 2))
+    ref_img_per_s = 1e6 / t_ref_e2e.median_us
+
+    for b in batches:
+        imgs = np.stack([images.lena_like(size, size, seed=i)
+                         for i in range(b)])
+
+        def enc(pipelined):
+            return codec_engine.encode_batch(imgs, QUALITY,
+                                             pipelined=pipelined)
+
+        t_pipe = measure(enc, True, warmup=warmup, iters=iters)
+        t_ser = measure(enc, False, warmup=min(warmup, 1),
+                        iters=max(iters // 2, 2))
+        blobs = enc(True)
+        nbytes = sum(len(x) for x in blobs)
+
+        def dec(pipelined):
+            return codec_engine.decode_batch(blobs, pipelined=pipelined)
+
+        t_dpipe = measure(dec, True, warmup=warmup, iters=iters)
+        t_dser = measure(dec, False, warmup=min(warmup, 1),
+                         iters=max(iters // 2, 2))
+        pipe_img_per_s = b / (t_pipe.median_us / 1e6)
+        records.append(BenchRecord(
+            label=f"batch_{b}",
+            params={"batch": b, "height": size, "width": size,
+                    "quality": QUALITY, "nbytes": nbytes},
+            timings_us={"encode_pipelined": t_pipe.to_json(),
+                        "encode_serial": t_ser.to_json(),
+                        "decode_pipelined": t_dpipe.to_json(),
+                        "decode_serial": t_dser.to_json()},
+            metrics={
+                "enc_img_per_s": pipe_img_per_s,
+                "enc_img_per_s_serial": b / (t_ser.median_us / 1e6),
+                "dec_img_per_s": b / (t_dpipe.median_us / 1e6),
+                "dec_img_per_s_serial": b / (t_dser.median_us / 1e6),
+                "enc_mb_per_s": b * mb / (t_pipe.median_us / 1e6),
+                "speedup_vs_reference": pipe_img_per_s / ref_img_per_s,
+            }))
+    return records
+
+
+def adversarial_blocks() -> list:
+    """(dc_diff, ac) pairs exercising the symboliser's corner cases:
+    max-magnitude amplitudes, all-zero blocks, and ZRL chains (shared
+    by the ``--check-identical`` CI gate and the property tests)."""
+    return [
+        (np.array([0, 0, 0]), np.zeros((3, 63), np.int64)),
+        (np.array([5]), np.eye(1, 63, 62, dtype=np.int64) * 32767),
+        (np.array([-32767]), np.eye(1, 63, 40, dtype=np.int64) * -32767),
+        (np.array([1]), np.eye(1, 63, 62, dtype=np.int64) * 3),
+        (np.array([7]),
+         np.tile([0] * 9 + [1], 7)[:63].reshape(1, 63).astype(np.int64)),
+        (np.array([100]), np.full((1, 63), 255, np.int64)),
+        (np.array([0]),
+         np.concatenate([np.zeros(47, np.int64), [7],
+                         np.zeros(15, np.int64)]).reshape(1, 63)),
+    ]
+
+
+def entropy_identity_violations(seed: int = 0, trials: int = 25) -> list:
+    """Cases where the vectorized entropy path diverges from the scalar
+    reference — the ``--check-identical`` CI gate (must return []).
+
+    Checks, per case: symbol-stream equality, payload byte equality,
+    and both decoders inverting the stream exactly, over ``trials``
+    random batches (mixed density, full amplitude range) plus the
+    :func:`adversarial_blocks`.
+    """
+    from repro.core.entropy import huffman, rle
+    rng = np.random.default_rng(seed)
+    cases = []
+    for t in range(trials):
+        n = int(rng.integers(1, 24))
+        ac = rng.integers(-32767, 32768, (n, 63))
+        ac[rng.random((n, 63)) < rng.uniform(0.2, 0.995)] = 0
+        dc = rng.integers(-32767, 32768, (n,))
+        cases.append((f"random_{t}", dc, ac))
+    cases += [(f"adversarial_{i}", dc, ac)
+              for i, (dc, ac) in enumerate(adversarial_blocks())]
+
+    bad = []
+    for name, dc, ac in cases:
+        vec = rle.symbolize(dc, ac)
+        ref = rle.symbolize_reference(dc, ac)
+        if not all(np.array_equal(a, b) for a, b in zip(vec, ref)):
+            bad.append(f"{name}: symbol stream mismatch")
+            continue
+        if vectorized_encode_stream(dc, ac) != reference_encode_stream(
+                dc, ac):
+            bad.append(f"{name}: payload bytes mismatch")
+            continue
+        dc_f, ac_f = rle.symbol_frequencies(vec[0], vec[1])
+        dc_t = huffman.build_table(dc_f)
+        ac_t = huffman.build_table(ac_f)
+        payload = rle.encode_payload(*vec, dc_t, ac_t)
+        got = rle.decode_payload(payload, len(dc), dc_t, ac_t)
+        want = rle.decode_payload_reference(payload, len(dc), dc_t, ac_t)
+        if not (np.array_equal(got[0], want[0])
+                and np.array_equal(got[1], want[1])):
+            bad.append(f"{name}: decoder mismatch vs reference")
+        elif not (np.array_equal(got[0], dc) and np.array_equal(got[1],
+                                                                ac)):
+            bad.append(f"{name}: decode does not invert encode")
+    return bad
+
+
+@benchmark("entropy_throughput", suites=("smoke", "paper", "full"),
+           description="vectorized vs reference entropy coding MB/s + "
+                       "overlapped encode_batch/decode_batch scaling")
+def entropy_throughput(ctx: RunContext) -> list:
+    """Host entropy stage in isolation (vectorized vs the PR 3 scalar
+    reference) plus the engine's overlapped byte path across batch
+    sizes; ``speedup_vs_reference`` scores the whole pipeline against
+    the single-image reference encode rate."""
+    grid = ENTROPY_GRID.get(ctx.suite, ENTROPY_GRID["paper"])
+    timer = ctx.timer.scaled(warmup=max(ctx.timer.warmup, 1))
+    return entropy_throughput_points(grid["size"], grid["batches"],
+                                     warmup=timer.warmup,
+                                     iters=timer.iters)
+
+
+# ---------------------------------------------------------------------------
 # Serving-layer coverage
 # ---------------------------------------------------------------------------
 

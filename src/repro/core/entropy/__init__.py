@@ -22,8 +22,11 @@ decoder needs is specified in ``docs/bitstream.md``.
 """
 
 from repro.core.entropy.container import (BitstreamError, decode_image,
-                                          decode_qcoeffs, encode_image,
-                                          encode_qcoeffs, read_header)
+                                          decode_qcoeffs,
+                                          decode_zigzag_host, encode_image,
+                                          encode_qcoeffs,
+                                          encode_zigzag_host, read_header)
 
 __all__ = ["BitstreamError", "decode_image", "decode_qcoeffs",
-           "encode_image", "encode_qcoeffs", "read_header"]
+           "decode_zigzag_host", "encode_image", "encode_qcoeffs",
+           "encode_zigzag_host", "read_header"]

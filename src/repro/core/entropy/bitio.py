@@ -59,6 +59,35 @@ def pack_bits(codes: np.ndarray, lengths: np.ndarray) -> bytes:
     return np.packbits(bits).tobytes()
 
 
+def bit_windows(payload: bytes) -> np.ndarray:
+    """All 16-bit MSB-first windows of a payload, 1-padded past the end.
+
+    ``bit_windows(p)[k]`` equals what a :class:`BitReader` positioned at
+    bit ``k`` would ``peek16()`` — but computed for *every* bit position
+    in one vectorised pass, which is what the LUT decoder in
+    :func:`repro.core.entropy.rle.decode_payload` indexes its
+    per-position symbol tables with.
+
+    Args:
+        payload: packed bytes (as produced by :func:`pack_bits`).
+
+    Returns:
+        (8*len(payload) + 17,) uint16 array (2 bytes per bit position —
+        the footprint matters: the LUT decoder precomputes over every
+        position); entries at and past the payload end see the writer's
+        1-padding convention.
+    """
+    nbits = len(payload) * 8
+    b = np.frombuffer(payload, dtype=np.uint8).astype(np.int32)
+    b = np.concatenate([b, np.full(5, 0xFF, np.int32)])     # 1-padding
+    # 24-bit rolling words; window at bit p is bits r..r+15 of the word
+    # starting at byte p >> 3, where r = p & 7
+    w24 = (b[:-2] << 16) | (b[1:-1] << 8) | b[2:]
+    shifts = np.arange(8, 0, -1, dtype=np.int32)
+    return (((w24[:, None] >> shifts) & 0xFFFF)
+            .astype(np.uint16).ravel()[:nbits + 17])
+
+
 class BitReader:
     """Sequential MSB-first reader over a packed payload.
 

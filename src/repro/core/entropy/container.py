@@ -94,14 +94,61 @@ def encode_qcoeffs(qcoeffs, quality: int, transform: str,
     # accelerated half: zig-zag + DC differential (jnp, vmappable)
     z = scan.block_stream(qcoeffs)
     dc_diff, ac = scan.dc_differential(z)
-    dc_diff = np.asarray(dc_diff)
-    ac = np.asarray(ac)
+    return _frame_stream(np.asarray(dc_diff), np.asarray(ac),
+                         quality, transform, h, w)
 
-    # host edge: symbolise, build canonical tables, pack bits
+
+def encode_zigzag_host(z: np.ndarray, quality: int, transform: str,
+                       orig_shape: tuple) -> bytes:
+    """Entropy-code a (n_blocks, 64) zig-zag stream — pure host path.
+
+    The jax-free sibling of :func:`encode_qcoeffs` for callers that
+    already ran the zig-zag scan on the device for a whole batch (the
+    engine's overlapped ``to_bytes_list``): everything here — DC
+    differential, symbolisation, tables, packing, framing — is NumPy,
+    so worker threads never contend on jax dispatch and release the GIL
+    inside the array ops.  Bytes are identical to
+    :func:`encode_qcoeffs` on the same blocks.
+
+    Args:
+        z: (gh*gw, 64) int zig-zag stream in raster block order (as
+            produced by :func:`repro.core.entropy.scan.block_stream`).
+        quality: JPEG quality factor in [1, 100].
+        transform: encoder transform name (see
+            :data:`TRANSFORM_CODES`).
+        orig_shape: (H, W) of the image before block padding.
+
+    Returns:
+        The complete container as bytes.
+
+    Raises:
+        ValueError: shape/quality/transform out of range, or a level too
+            large for a 15-bit amplitude.
+    """
+    h, w = int(orig_shape[0]), int(orig_shape[1])
+    if transform not in TRANSFORM_CODES:
+        raise ValueError(f"unknown transform {transform!r}; "
+                         f"expected one of {sorted(TRANSFORM_CODES)}")
+    if not 1 <= int(quality) <= 100:
+        raise ValueError(f"quality {quality} outside [1, 100]")
+    gh, gw = _grid_shape(h, w)
+    z = np.asarray(z)
+    if z.shape != (gh * gw, 64):
+        raise ValueError(f"zig-zag stream shape {z.shape} does not match "
+                         f"the {gh}x{gw} block grid of a {h}x{w} image")
+    dc = z[:, 0].astype(np.int64)
+    dc_diff = np.diff(dc, prepend=np.int64(0))
+    return _frame_stream(dc_diff, z[:, 1:], quality, transform, h, w)
+
+
+def _frame_stream(dc_diff: np.ndarray, ac: np.ndarray, quality: int,
+                  transform: str, h: int, w: int) -> bytes:
+    """Host edge shared by both encoders: symbolise (whole-array),
+    memoised canonical tables, vectorised bit packing, framing."""
     is_dc, syms, amp_vals, amp_lens = rle.symbolize(dc_diff, ac)
     dc_freq, ac_freq = rle.symbol_frequencies(is_dc, syms)
-    dc_table = huffman.build_table(dc_freq)
-    ac_table = huffman.build_table(ac_freq)
+    dc_table = huffman.build_table_memo(dc_freq)
+    ac_table = huffman.build_table_memo(ac_freq)
     payload = rle.encode_payload(is_dc, syms, amp_vals, amp_lens,
                                  dc_table, ac_table)
 
@@ -163,15 +210,22 @@ def read_header(data: bytes) -> dict:
             "payload_nbytes": payload_nbytes, "crc32": crc}
 
 
-def decode_qcoeffs(data: bytes) -> tuple:
-    """Full inverse of :func:`encode_qcoeffs`.
+def decode_zigzag_host(data: bytes) -> tuple:
+    """Parse + entropy-decode a stream to its zig-zag form — pure host.
+
+    The jax-free half of :func:`decode_qcoeffs`: framing validation,
+    CRC, embedded tables, the LUT entropy decode and the (integer,
+    bit-exact) DC integration all run in NumPy, so the engine's
+    pipelined ``decode_batch`` can fan streams across threads without
+    contending on jax dispatch; only the inverse zig-zag permutation is
+    left for the device.
 
     Args:
         data: one complete ``DCTZ`` stream.
 
     Returns:
-        ``(qcoeffs, header)``: the (gh, gw, 8, 8) int32 quantised levels
-        and the parsed header dict.
+        ``(z, header)``: the (gh*gw, 64) int32 zig-zag stream in raster
+        block order and the parsed header dict.
 
     Raises:
         BitstreamError: any malformation — truncation (header, tables or
@@ -214,10 +268,33 @@ def decode_qcoeffs(data: bytes) -> tuple:
     except (bitio.TruncatedStream, ValueError) as e:
         raise BitstreamError(f"bad entropy payload: {e}") from e
 
-    # accelerated half of the inverse: DC integrate + inverse zig-zag
-    dc = scan.dc_integrate(jnp.asarray(dc_diff))
-    z = scan.assemble_stream(dc, jnp.asarray(ac))
-    return scan.unblock_stream(z.astype(jnp.int32), gh, gw), hdr
+    # DC integration is integer-exact, so the host cumsum matches the
+    # device's scan.dc_integrate bit for bit
+    z = np.empty((gh * gw, 64), dtype=np.int32)
+    z[:, 0] = np.cumsum(dc_diff, dtype=np.int64)
+    z[:, 1:] = ac
+    return z, hdr
+
+
+def decode_qcoeffs(data: bytes) -> tuple:
+    """Full inverse of :func:`encode_qcoeffs`.
+
+    Args:
+        data: one complete ``DCTZ`` stream.
+
+    Returns:
+        ``(qcoeffs, header)``: the (gh, gw, 8, 8) int32 quantised levels
+        and the parsed header dict.
+
+    Raises:
+        BitstreamError: any malformation — truncation (header, tables or
+            payload), trailing bytes, CRC mismatch, invalid table
+            segments, or an undecodable entropy payload.
+    """
+    z, hdr = decode_zigzag_host(data)
+    gh, gw = _grid_shape(hdr["height"], hdr["width"])
+    # accelerated half of the inverse: the inverse zig-zag permutation
+    return scan.unblock_stream(jnp.asarray(z), gh, gw), hdr
 
 
 def encode_image(img, quality: int = 50,

@@ -18,6 +18,7 @@ preserving the Kraft sum.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 
 import numpy as np
@@ -204,3 +205,33 @@ def build_table(freqs: np.ndarray) -> CanonicalTable:
             counts[length - 1] += 1
             symbols.append(next(it))
     return CanonicalTable(counts=tuple(counts), symbols=tuple(symbols))
+
+
+@functools.lru_cache(maxsize=512)
+def _table_from_histogram(freq_bytes: bytes) -> CanonicalTable:
+    return build_table(np.frombuffer(freq_bytes, dtype=np.int64))
+
+
+def build_table_memo(freqs: np.ndarray) -> CanonicalTable:
+    """Memoised :func:`build_table` keyed on the frequency histogram.
+
+    Streaming workloads repeat histogram shapes constantly (same source
+    imagery at the same quality produces the same symbol statistics), so
+    the heap construction + T.81 K.3 length limiting is cached on the
+    raw histogram bytes.  Equal histograms return the identical
+    :class:`CanonicalTable` object; distinct histograms never collide.
+    """
+    arr = np.ascontiguousarray(np.asarray(freqs, dtype=np.int64))
+    return _table_from_histogram(arr.tobytes())
+
+
+@functools.lru_cache(maxsize=64)
+def decoder_luts(table: CanonicalTable) -> tuple:
+    """Memoised :meth:`CanonicalTable.decoder_lut`.
+
+    The 2**16-entry prefix tables cost more to build than a small image
+    costs to decode; caching on the (hashable, frozen) table makes
+    repeated decodes of same-table streams — the streaming case — pay
+    for the tables once.  Callers must treat the arrays as read-only.
+    """
+    return table.decoder_lut()

@@ -4,6 +4,17 @@ Host-edge half of the entropy stage (NumPy): turns the fixed-shape
 arrays produced by :mod:`repro.core.entropy.scan` into the JPEG-baseline
 symbol stream that :mod:`huffman`/:mod:`bitio` serialise, and back.
 
+Both directions are **batch-vectorized**: :func:`symbolize` builds the
+(run, size) symbols, ZRL expansions, EOB markers and amplitude fields
+for every block of the stream with whole-array NumPy (no per-block
+Python loop), and :func:`decode_payload` drives a precomputed
+peek-16-bit prefix-LUT decoder whose per-bit-position symbol/advance/
+amplitude tables are built in one vectorised pass, leaving only the
+(data-dependent) walk along the symbol chain in Python.  The original
+scalar implementations survive as :func:`symbolize_reference` /
+:func:`decode_payload_reference` — the golden oracles the property
+tests and the ``entropy_throughput`` bench compare against.
+
 Symbol alphabet (docs/bitstream.md):
 
 * DC: the magnitude category ``S`` of the DC difference (0..15), then
@@ -65,7 +76,13 @@ def _check_range(cat: np.ndarray, what: str) -> None:
 
 
 def symbolize(dc_diff: np.ndarray, ac: np.ndarray) -> tuple:
-    """Blocks -> the interleaved (symbol, amplitude) stream.
+    """Blocks -> the interleaved (symbol, amplitude) stream, vectorised.
+
+    Every quantity — zero runs, ZRL expansions, (run, size) symbols,
+    magnitude categories, amplitude fields and the output offsets that
+    interleave them into coding order — is computed with whole-array
+    NumPy over all blocks at once; no Python loop touches a block.
+    Bit-for-bit identical to :func:`symbolize_reference`.
 
     Args:
         dc_diff: (n,) int DC differences in block order.
@@ -79,6 +96,85 @@ def symbolize(dc_diff: np.ndarray, ac: np.ndarray) -> tuple:
 
     Raises:
         RangeError: some level needs an amplitude wider than 15 bits.
+    """
+    dc_diff = np.asarray(dc_diff, dtype=np.int64)
+    ac = np.asarray(ac, dtype=np.int64)
+    n = dc_diff.shape[0]
+    dc_cat = magnitude_category(dc_diff)
+    _check_range(dc_cat, "DC difference")
+    dc_amp = amplitude_value(dc_diff, dc_cat)
+
+    # one row per nonzero AC coefficient, already in coding order
+    # (np.nonzero is row-major: block ascending, then position ascending);
+    # categories/amplitudes only touch the nonzero entries — zeros have
+    # category 0 by definition, so the range check is unaffected
+    nz_b, nz_c = np.nonzero(ac)
+    k = nz_b.size
+    ac_nz = ac[nz_b, nz_c]
+    ac_cat_nz = magnitude_category(ac_nz)
+    _check_range(ac_cat_nz, "AC coefficient")
+    ac_amp_nz = amplitude_value(ac_nz, ac_cat_nz)
+    first = np.empty(k, dtype=bool)         # first nonzero of its block?
+    prev = np.empty(k, dtype=np.int64)      # previous nonzero position
+    if k:
+        first[0] = True
+        first[1:] = nz_b[1:] != nz_b[:-1]
+        prev[0] = -1
+        prev[1:] = nz_c[:-1]
+        prev[first] = -1
+    run = nz_c - prev - 1
+    zrl = run >> 4                          # ZRL expansions before the symbol
+    coef_sym = ((run & 15) << 4) | ac_cat_nz
+    unit = zrl + 1                          # symbols one coefficient emits
+
+    # per-block symbol budget: 1 DC + coefficient units + optional EOB
+    unit_b = np.bincount(nz_b, weights=unit, minlength=n).astype(np.int64)
+    last_c = np.full(n, -1, dtype=np.int64)
+    last_c[nz_b] = nz_c                     # row-major: last write is max pos
+    eob_b = last_c != AC_LEN - 1
+    block_total = 1 + unit_b + eob_b
+    block_off = np.concatenate(
+        [np.zeros(1, np.int64), np.cumsum(block_total)[:-1]])
+    m = int(block_total.sum())
+
+    is_dc = np.zeros(m, dtype=bool)
+    syms = np.empty(m, dtype=np.int64)
+    amp_vals = np.zeros(m, dtype=np.int64)
+    amp_lens = np.zeros(m, dtype=np.int64)
+
+    is_dc[block_off] = True
+    syms[block_off] = dc_cat
+    amp_vals[block_off] = dc_amp
+    amp_lens[block_off] = dc_cat
+    syms[(block_off + block_total - 1)[eob_b]] = EOB
+
+    if k:
+        # global start of each coefficient's unit: block start + 1 (DC)
+        # + the within-block exclusive cumsum of earlier units
+        cu = np.cumsum(unit) - unit
+        base = cu[first][np.cumsum(first) - 1]     # cu at block's first coef
+        start = block_off[nz_b] + 1 + (cu - base)
+        coded = start + zrl
+        syms[coded] = coef_sym
+        amp_vals[coded] = ac_amp_nz
+        amp_lens[coded] = ac_cat_nz
+        total_zrl = int(zrl.sum())
+        if total_zrl:
+            # expand each run's ZRL slots: start .. start+zrl-1
+            zc = np.cumsum(zrl) - zrl
+            pos = (np.repeat(start, zrl)
+                   + np.arange(total_zrl, dtype=np.int64)
+                   - np.repeat(zc, zrl))
+            syms[pos] = ZRL
+    return is_dc, syms, amp_vals, amp_lens
+
+
+def symbolize_reference(dc_diff: np.ndarray, ac: np.ndarray) -> tuple:
+    """Scalar per-block oracle for :func:`symbolize` (same contract).
+
+    The original loop implementation, kept as the golden reference the
+    property tests and ``--check-identical`` bench gate compare the
+    vectorised path against.  Not used on the production encode path.
     """
     dc_diff = np.asarray(dc_diff, dtype=np.int64)
     ac = np.asarray(ac, dtype=np.int64)
@@ -155,16 +251,105 @@ def encode_payload(is_dc, syms, amp_vals, amp_lens,
     return bitio.pack_bits(fields, widths)
 
 
+_PAST_END = 32     # sentinel slots appended past the last window position
+
+# packed per-position decode word: (ctrl + 2) << 23 | adv << 17 |
+# (val + 32768); ctrl is the symbol byte, -1 = invalid prefix, -2 =
+# a unit that needs bits past the payload end (truncation)
+_CTRL_SHIFT = 23
+_ADV_SHIFT = 17
+_ADV_MASK = 0x3F
+_VAL_MASK = 0x1FFFF
+_VAL_BIAS = 32768
+_SENTINEL = _VAL_BIAS      # ctrl -2, adv 0, val 0
+
+# payloads up to this many bits get their packed tables converted to
+# Python lists (~36 bytes per boxed entry, but the walk indexes them
+# ~2.5x faster than ndarray scalars); larger payloads keep the int64
+# ndarray so decode memory stays at 8 bytes per bit position per table
+_WALK_LIST_MAX_BITS = 1 << 20
+
+
+def _decode_table(win: np.ndarray, nbits: int,
+                  table: huffman.CanonicalTable):
+    """Per-bit-position packed decode table for one Huffman alphabet.
+
+    For every bit offset ``p`` of the payload (``win`` is its
+    :func:`repro.core.entropy.bitio.bit_windows`, 1-padded past the end
+    like the writer), assume a symbol of ``table`` starts at ``p`` and
+    precompute — fully vectorised — one packed int per position holding:
+
+    * ``ctrl`` — the decoded symbol byte, -1 for an invalid prefix, or
+      -2 when the unit starting at ``p`` would need bits past the
+      payload end (truncation, exactly when the reference reader's
+      skip/take would run out),
+    * ``adv``  — total bits the unit spans (code + amplitude field),
+    * ``val``  — the amplitude field decoded to its signed value (for
+      DC the field width is the symbol itself; for AC its low nibble —
+      callers pick the table accordingly).
+
+    Only the walk along the actual symbol chain (data-dependent) stays
+    in Python; each step is one O(1) lookup plus shifts.  Returns a
+    Python list for small payloads and the int64 ndarray above
+    :data:`_WALK_LIST_MAX_BITS` (same indexing, bounded memory).
+    """
+    sym_lut, len_lut = huffman.decoder_luts(table)
+    n = win.shape[0]
+    # intermediates stay int32 (all values fit 17 bits) so the per-bit
+    # precompute peaks at a few int32 arrays, not int64 ones; only the
+    # final packed word widens to int64 (ctrl << 23 needs 32+ bits and
+    # the walk's ndarray branch relies on signed arithmetic)
+    sym = sym_lut[win].astype(np.int32)
+    length = len_lut[win].astype(np.int32)
+    # amplitude width: DC symbols *are* the width; AC keep the low nibble
+    # (EOB=0x00 and ZRL=0xF0 both have a zero nibble => no field)
+    size = np.where(sym > MAX_CATEGORY, sym & 0xF, sym)
+    pidx = np.arange(n, dtype=np.int64)
+    amp_at = np.minimum(pidx + length, n - 1)
+    safe = np.maximum(size, 1)
+    bits = win[amp_at].astype(np.int32) >> (bitio.MAX_FIELD_BITS - safe)
+    val = np.where(bits < (1 << (safe - 1)), bits - (1 << safe) + 1, bits)
+    val = np.where(size == 0, 0, val)
+    ctrl = np.where(length == 0, 1, sym + 2)        # ctrl field, biased +2
+    packed = ((ctrl.astype(np.int64) << _CTRL_SHIFT)
+              | ((length + size).astype(np.int64) << _ADV_SHIFT)
+              | (val + _VAL_BIAS))
+    # a unit that would consume any bit past the payload end is
+    # truncation, not decoding (mirrors the reference reader, which
+    # raises before interpreting such bits); folding it into the packed
+    # word keeps the walk at one branch per symbol, and the sentinel
+    # tail covers any p a step can reach (a step advances < _PAST_END
+    # bits) before the walk raises
+    packed[pidx + length + size > nbits] = _SENTINEL
+    packed = np.concatenate(
+        [packed, np.full(_PAST_END, _SENTINEL, np.int64)])
+    if nbits <= _WALK_LIST_MAX_BITS:
+        return packed.tolist()
+    return packed
+
+
 def decode_payload(payload: bytes, n_blocks: int,
                    dc_table: huffman.CanonicalTable,
                    ac_table: huffman.CanonicalTable) -> tuple:
-    """Decode ``n_blocks`` blocks from an entropy payload.
+    """Decode ``n_blocks`` blocks from an entropy payload (LUT decoder).
+
+    Replaces bit-at-a-time Huffman walking: the peek-16 prefix LUTs of
+    both tables are applied to *every* bit position of the payload in
+    one vectorised pass (:func:`_decode_table`), including amplitude
+    extraction, so the remaining Python walk just follows the symbol
+    chain with O(1) lookups per symbol.  Output is identical to
+    :func:`decode_payload_reference` on every well-formed stream;
+    malformed streams are always rejected by both, though the error
+    *subtype* (truncation vs corruption) can differ in corner cases
+    where padding bits mimic a valid symbol.
 
     Args:
         payload: packed bits from :func:`encode_payload`.
         n_blocks: how many 8x8 blocks the stream must contain (known
             from the container's image shape).
-        dc_table: canonical table for DC categories.
+        dc_table: canonical table for DC categories; a table coding a
+            symbol above :data:`MAX_CATEGORY` is rejected (the spec
+            bounds DC categories to 0..15).
         ac_table: canonical table for AC (run, size) symbols.
 
     Returns:
@@ -173,8 +358,75 @@ def decode_payload(payload: bytes, n_blocks: int,
 
     Raises:
         bitio.TruncatedStream: the payload ends mid-block.
-        ValueError: an invalid Huffman prefix or a coefficient overrun
-            (corrupted stream).
+        ValueError: an invalid Huffman prefix, a coefficient overrun, or
+            an out-of-spec DC table (corrupted stream).
+    """
+    if dc_table.symbols and max(dc_table.symbols) > MAX_CATEGORY:
+        raise ValueError(
+            f"DC table codes symbol {max(dc_table.symbols)} > "
+            f"{MAX_CATEGORY}: not a magnitude-category alphabet")
+    nbits = len(payload) * 8
+    win = bitio.bit_windows(payload)
+    dc_tab = _decode_table(win, nbits, dc_table)
+    ac_tab = _decode_table(win, nbits, ac_table)
+
+    def bad(s: int, p: int, what: str):
+        if s == -2:
+            return bitio.TruncatedStream(
+                f"entropy payload truncated: needed bit {p} of {nbits}")
+        return ValueError(f"invalid {what} Huffman prefix at bit {p}")
+
+    dc_out = [0] * n_blocks
+    rows: list = []
+    cols: list = []
+    vals: list = []
+    p = 0
+    for b in range(n_blocks):
+        x = dc_tab[p]
+        s = (x >> _CTRL_SHIFT) - 2
+        if s < 0:
+            raise bad(s, p, "DC")
+        dc_out[b] = (x & _VAL_MASK) - _VAL_BIAS
+        p += (x >> _ADV_SHIFT) & _ADV_MASK
+        pos = 0                     # next AC slot to fill (0-based in ac)
+        while pos < AC_LEN:
+            x = ac_tab[p]
+            s = (x >> _CTRL_SHIFT) - 2
+            if s <= 0:
+                if s < 0:
+                    raise bad(s, p, "AC")
+                p += (x >> _ADV_SHIFT) & _ADV_MASK   # EOB: rest is zero
+                break
+            if s == ZRL:
+                pos += 16
+                p += (x >> _ADV_SHIFT) & _ADV_MASK
+                continue
+            pos += s >> 4
+            if pos >= AC_LEN:
+                raise ValueError(
+                    f"corrupted stream: AC run overruns block {b}")
+            rows.append(b)
+            cols.append(pos)
+            vals.append((x & _VAL_MASK) - _VAL_BIAS)
+            p += (x >> _ADV_SHIFT) & _ADV_MASK
+            pos += 1
+    if p > nbits:
+        raise bitio.TruncatedStream(
+            f"entropy payload truncated: needed bit {p} of {nbits}")
+    ac = np.zeros((n_blocks, AC_LEN), dtype=np.int32)
+    if rows:
+        ac[rows, cols] = vals
+    return np.asarray(dc_out, dtype=np.int32), ac
+
+
+def decode_payload_reference(payload: bytes, n_blocks: int,
+                             dc_table: huffman.CanonicalTable,
+                             ac_table: huffman.CanonicalTable) -> tuple:
+    """Bit-at-a-time oracle for :func:`decode_payload` (same contract).
+
+    The original :class:`repro.core.entropy.bitio.BitReader` walk, kept
+    as the golden reference for the property tests and the
+    ``--check-identical`` bench gate.  Not on the production path.
     """
     dc_sym, dc_len = dc_table.decoder_lut()
     ac_sym, ac_len = ac_table.decoder_lut()

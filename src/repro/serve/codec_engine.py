@@ -16,7 +16,12 @@ independent 8x8 blocks; this engine is the serving-side realisation:
   bit-identical to the single-image API,
 * ``encode_batch`` / ``decode_batch`` extend the same pipeline to real
   entropy-coded bytes: the array half stays sharded, the bit-packing
-  boundary (:mod:`repro.core.entropy`) runs per image at the host edge.
+  boundary (:mod:`repro.core.entropy`) runs per image at the host edge —
+  by default *overlapped* with the device: jax async dispatch keeps
+  bucket ``k+1``'s DCT/quant in flight while a thread pool (the
+  vectorised NumPy entropy stage releases the GIL) codes bucket ``k``'s
+  streams, and per-stream Huffman tables are memoised across repeated
+  histogram shapes (``huffman.build_table_memo``).
 
 The fused kernel reconstructs with the *matched* (adjoint) transform, so it
 only serves roundtrips whose semantics agree with it: ``transform="exact"``
@@ -26,8 +31,10 @@ decode of a CORDIC stream always takes the staged path.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +46,13 @@ from repro.dist import compat
 from repro.launch import mesh as mesh_lib
 
 SHAPE_BUCKET = 64      # ragged H/W round up to this (multiple of the block)
+
+
+def _n_workers(workers: int | None) -> int:
+    """Thread-pool width for the host-edge entropy stage."""
+    if workers is not None:
+        return max(1, workers)
+    return max(1, min(8, os.cpu_count() or 1))
 
 
 # ---------------------------------------------------------------------------
@@ -62,10 +76,29 @@ class CompressedBatch:
     transform: str
     cordic_config: cordic.CordicConfig
     stacked: bool                  # input was a single (B, H, W) array
+    _streams: list | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def nbytes_estimate(self) -> float:
-        """Heuristic proxy over the (bucket-padded) levels; superseded
-        by the measured per-image bytes of :meth:`to_bytes_list`."""
+        """Total compressed size of the batch, in bytes.
+
+        Two regimes, by how much work has been done:
+
+        * **measured** — once :meth:`to_bytes_list` has materialised the
+          entropy-coded streams, this returns their exact summed
+          ``len()`` (the number every ratio in RESULTS.md is built on);
+        * **estimated** — before that, it falls back to the device-side
+          :func:`repro.core.quant.estimate_bits` proxy over the
+          (bucket-padded) levels, which needs no host transfer or bit
+          packing but overstates ragged batches (padding blocks count)
+          and is only a model of the entropy coder.
+
+        Callers that need the measured number unconditionally should
+        call ``sum(len(s) for s in batch.to_bytes_list())`` and pay for
+        the coding.
+        """
+        if self._streams is not None:
+            return float(sum(len(s) for s in self._streams))
         from repro.core import quant
         return sum(float(quant.estimate_bits(g.qcoeffs)) / 8.0
                    for g in self.groups)
@@ -82,13 +115,56 @@ class CompressedBatch:
                 out[idx] = (q[j, :(h + 7) // 8, :(w + 7) // 8], (h, w))
         return out
 
-    def to_bytes_list(self) -> list:
+    def to_bytes_list(self, pipelined: bool = True,
+                      workers: int | None = None) -> list:
         """Entropy-code every image: list of ``DCTZ`` streams in input
-        order (measured per-image byte sizes via ``len()``)."""
+        order (measured per-image byte sizes via ``len()``).
+
+        In pipelined mode the host edge is overlapped with the device:
+        groups are drained in dispatch order, and as soon as one
+        group's levels land on the host its images are handed to a
+        thread pool (NumPy releases the GIL inside the vectorised
+        symbolisation/packing), while jax's async dispatch keeps the
+        *next* group's DCT/quant running on the device.  Output bytes
+        are identical either way; results are cached on the batch, so
+        repeated calls (and :meth:`nbytes_estimate` afterwards) are
+        free.
+
+        Args:
+            pipelined: overlap device compute with threaded host coding
+                (False = the plain serial loop, for debugging/timing).
+            workers: thread-pool width (default: up to 8, capped at the
+                CPU count).
+        """
         from repro.core import entropy
-        return [entropy.encode_qcoeffs(q, self.quality, self.transform,
+        from repro.core.entropy import scan
+        if self._streams is not None:
+            return list(self._streams)
+        if not pipelined:
+            self._streams = [
+                entropy.encode_qcoeffs(q, self.quality, self.transform,
                                        shape)
                 for q, shape in self._image_qcoeffs()]
+            return list(self._streams)
+        # dispatch the zig-zag for every bucket up front: jax queues the
+        # device work asynchronously, so bucket k+1 computes while the
+        # pool below is still coding bucket k's streams
+        zs = [scan.zigzag_scan(g.qcoeffs) for g in self.groups]
+        jobs: list = [None] * self.n_images
+        with concurrent.futures.ThreadPoolExecutor(
+                _n_workers(workers)) as pool:
+            for g, z in zip(self.groups, zs):
+                # blocks only on THIS bucket's device work
+                znp = np.asarray(jax.device_get(z))
+                for j, (idx, (h, w)) in enumerate(zip(g.indices,
+                                                      g.orig_shapes)):
+                    gh, gw = (h + 7) // 8, (w + 7) // 8
+                    jobs[idx] = pool.submit(
+                        entropy.encode_zigzag_host,
+                        znp[j, :gh, :gw].reshape(gh * gw, 64),
+                        self.quality, self.transform, (h, w))
+            self._streams = [f.result() for f in jobs]
+        return list(self._streams)
 
 
 # ---------------------------------------------------------------------------
@@ -346,14 +422,19 @@ def roundtrip_batch(imgs, quality: int = 50,
 
 def encode_batch(imgs, quality: int = 50,
                  transform: codec.Transform = "exact",
-                 cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG
+                 cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG,
+                 pipelined: bool = True, workers: int | None = None
                  ) -> list:
     """Compress a batch all the way to entropy-coded ``DCTZ`` streams.
 
     The array half (DCT + quantise) runs the sharded
-    :func:`compress_batch` path unchanged; only the per-image bit
-    packing happens at the host edge, so the measured byte sizes come
-    with the same accelerated heavy lifting as the array API.
+    :func:`compress_batch` path unchanged; the per-image bit packing
+    happens at the host edge.  In pipelined mode (default) the two
+    halves are overlapped: jax's async dispatch queues *every* bucket's
+    device work up front, and a thread pool entropy-codes bucket *k*
+    while the device is still crunching bucket *k+1*
+    (:meth:`CompressedBatch.to_bytes_list`).  Byte output is identical
+    in both modes.
 
     Args:
         imgs: stacked (B, H, W) array or ragged list of (H, W) images,
@@ -361,27 +442,36 @@ def encode_batch(imgs, quality: int = 50,
         quality: JPEG quality factor in [1, 100].
         transform: encoder transform ("exact"/"cordic"/"loeffler").
         cordic_config: CORDIC config for ``transform == "cordic"``.
+        pipelined: overlap device compute with threaded host coding.
+        workers: thread-pool width for the host edge (None = auto).
 
     Returns:
         List of ``bytes`` (one ``DCTZ`` stream per image, input order);
         each is bit-identical to ``core.codec.compress(img).to_bytes()``.
     """
     cb = compress_batch(imgs, quality, transform, cordic_config)
-    return cb.to_bytes_list()
+    return cb.to_bytes_list(pipelined=pipelined, workers=workers)
 
 
-def decode_batch(blobs, mode: str = "standard") -> list:
+def decode_batch(blobs, mode: str = "standard",
+                 pipelined: bool = True,
+                 workers: int | None = None) -> list:
     """Decode a list of ``DCTZ`` streams through the sharded array path.
 
-    Streams are entropy-decoded on the host, grouped by block-grid
+    Streams are entropy-decoded on the host — concurrently, in
+    pipelined mode: each stream's LUT decode is independent and the
+    NumPy precompute releases the GIL — then grouped by block-grid
     shape + quality + decode transform, and each group runs one sharded
-    ``decompress`` jit — the byte path re-joins the array path right
+    ``decompress`` jit; the byte path re-joins the array path right
     after the bitstream boundary.
 
     Args:
         blobs: iterable of ``DCTZ`` streams (``bytes``).
         mode: "standard" (exact IDCT) or "matched" (stored transform's
             adjoint), as in :func:`decompress_batch`.
+        pipelined: entropy-decode streams in a thread pool instead of
+            serially (identical output either way).
+        workers: thread-pool width for the host edge (None = auto).
 
     Returns:
         List of (H, W) uint8 reconstructions in input order, each
@@ -393,20 +483,30 @@ def decode_batch(blobs, mode: str = "standard") -> list:
         whole call fails; no partial results).
     """
     from repro.core import entropy
+    from repro.core.entropy import scan
     blobs = list(blobs)
     if not blobs:
         raise ValueError("empty batch: nothing to decode")
-    decoded = [entropy.decode_qcoeffs(b) for b in blobs]
+    if pipelined and len(blobs) > 1:
+        # each stream's LUT entropy decode is independent NumPy work
+        with concurrent.futures.ThreadPoolExecutor(
+                _n_workers(workers)) as pool:
+            decoded = list(pool.map(entropy.decode_zigzag_host, blobs))
+    else:
+        decoded = [entropy.decode_zigzag_host(b) for b in blobs]
 
     buckets: dict = {}
-    for i, (q, hdr) in enumerate(decoded):
+    for i, (z, hdr) in enumerate(decoded):
         dec_transform = "exact" if mode == "standard" else hdr["transform"]
-        key = (q.shape[:2], hdr["quality"], dec_transform)
+        grid = ((hdr["height"] + 7) // 8, (hdr["width"] + 7) // 8)
+        key = (grid, hdr["quality"], dec_transform)
         buckets.setdefault(key, []).append(i)
 
     out = [None] * len(blobs)
-    for (grid, quality, dec_transform), members in buckets.items():
-        stackq = jnp.stack([decoded[i][0] for i in members])
+    for ((gh, gw), quality, dec_transform), members in buckets.items():
+        stackz = jnp.stack([jnp.asarray(decoded[i][0]) for i in members])
+        # device half of the inverse: un-zig-zag the whole group at once
+        stackq = scan.zigzag_unscan(stackz).reshape(-1, gh, gw, 8, 8)
         fn = functools.partial(_decompress_sharded,
                                transform=dec_transform, quality=quality,
                                cordic_config=cordic.PAPER_CONFIG)

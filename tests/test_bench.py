@@ -22,6 +22,7 @@ PAPER_TABLE_CASES = ("table1_lena", "table2_cablecar", "table3_psnr_lena",
 def test_registry_has_paper_tables_and_serve_cases():
     cases = registry.all_cases()
     for name in PAPER_TABLE_CASES + ("rate_distortion",
+                                     "entropy_throughput",
                                      "serve_batch_throughput",
                                      "serve_ragged", "framework_micro"):
         assert name in cases
@@ -202,6 +203,63 @@ def test_render_golden_snippet_rd_table():
            "| 12.000 | 9.000 |" in md
 
 
+def test_render_golden_snippet_entropy_table():
+    stage = schema.BenchRecord(
+        label="entropy_stage_256",
+        params={"height": 256, "width": 256, "image": "lena",
+                "quality": 50, "n_blocks": 1024, "payload_nbytes": 2786},
+        timings_us={"enc_vectorized": {"median_us": 2000.0,
+                                       "best_us": 1900.0, "iters": 5},
+                    "enc_reference": {"median_us": 18000.0,
+                                      "best_us": 17000.0, "iters": 2},
+                    "dec_vectorized": {"median_us": 8000.0,
+                                       "best_us": 7000.0, "iters": 5},
+                    "dec_reference": {"median_us": 40000.0,
+                                      "best_us": 39000.0, "iters": 2}},
+        metrics={"enc_speedup": 9.0, "dec_speedup": 5.0,
+                 "enc_mb_per_s": 32.8, "dec_mb_per_s": 8.2})
+    batch = schema.BenchRecord(
+        label="batch_8",
+        params={"batch": 8, "height": 256, "width": 256, "quality": 50,
+                "nbytes": 22288},
+        timings_us={"encode_pipelined": {"median_us": 20000.0,
+                                         "best_us": 19000.0, "iters": 5},
+                    "encode_serial": {"median_us": 30000.0,
+                                      "best_us": 29000.0, "iters": 2},
+                    "decode_pipelined": {"median_us": 50000.0,
+                                         "best_us": 49000.0, "iters": 5},
+                    "decode_serial": {"median_us": 45000.0,
+                                      "best_us": 44000.0, "iters": 2}},
+        metrics={"enc_img_per_s": 400.0, "enc_img_per_s_serial": 266.7,
+                 "dec_img_per_s": 160.0, "dec_img_per_s_serial": 177.8,
+                 "enc_mb_per_s": 26.2, "speedup_vs_reference": 7.5})
+    md = report.render([schema.BenchResult(
+        name="entropy_throughput", suite="paper", records=[stage, batch],
+        environment={})])
+    assert "## Entropy throughput (vectorized host coding)" in md
+    assert "| encode | 2.000 | 18.000 | 9.0x | 32.8 |" in md
+    assert "| 8 | 400.0 | 266.7 | 160.0 | 26.2 | 7.50x |" in md
+
+
+def test_entropy_identity_gate_and_adversarial_blocks():
+    from repro.bench.cases import (adversarial_blocks,
+                                   entropy_identity_violations)
+    # the gate must pass on the shipped implementation ...
+    assert entropy_identity_violations(trials=3) == []
+    # ... and its adversarial set must cover the documented corners:
+    # a ZRL chain (zero run >= 16), an all-zero block, max amplitudes
+    blocks = adversarial_blocks()
+    assert any((ac == 0).all() for _, ac in blocks)
+    assert any(np.abs(ac).max() == 32767 for _, ac in blocks)
+    longest_run = 0
+    for _, ac in blocks:
+        for row in ac:
+            nz = np.nonzero(row)[0]
+            if nz.size:
+                longest_run = max(longest_run, int(nz[0]))
+    assert longest_run >= 16
+
+
 def test_check_rd_monotone():
     good = [(10, 0.1, 30.0), (50, 0.4, 37.0), (90, 1.5, 40.0)]
     assert check_rd_monotone(good) == []
@@ -230,6 +288,7 @@ def test_smoke_suite_end_to_end(tmp_path):
     md = md_path.read_text()
     for title in ("## Table 1", "## Table 2", "## Table 3", "## Table 4",
                   "## Rate–distortion (measured bytes)",
+                  "## Entropy throughput (vectorized host coding)",
                   "## Batch throughput", "## Ragged mixed-size batches"):
         assert title in md, f"missing section {title}"
     # sanity on reproduced physics: PSNR gap is positive (exact > cordic)

@@ -1,7 +1,11 @@
 """Entropy-coded bitstream stage: zig-zag properties, RLE/Huffman
-round-trips (random + adversarial blocks), container framing errors,
-bit-exactness against the quantised array path, and the engine's batch
+round-trips (random + adversarial blocks), vectorized-vs-reference
+identity (the wire-format lock for the fast path), golden ``.dctz``
+fixtures from the PR 3 encoder, container framing errors, bit-exactness
+against the quantised array path, and the engine's (pipelined) batch
 byte path."""
+
+import pathlib
 
 import jax.numpy as jnp
 import numpy as np
@@ -10,17 +14,32 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import codec, images
 from repro.core.entropy import (BitstreamError, decode_image, decode_qcoeffs,
-                                encode_image, encode_qcoeffs, read_header)
+                                decode_zigzag_host, encode_image,
+                                encode_qcoeffs, encode_zigzag_host,
+                                read_header)
 from repro.core.entropy import bitio, huffman, rle, scan
+
+DATA_DIR = pathlib.Path(__file__).parent / "data"
 
 
 def _roundtrip_blocks(dc_diff, ac):
-    """symbolize -> tables -> payload -> decode, for (n,)+(n,63) arrays."""
+    """symbolize -> tables -> payload -> decode, for (n,)+(n,63) arrays.
+
+    Also asserts, on every use, that the vectorized path matches the
+    scalar reference at all three levels: symbol stream, payload bytes,
+    and decoded blocks."""
     is_dc, syms, amp_vals, amp_lens = rle.symbolize(dc_diff, ac)
+    ref = rle.symbolize_reference(dc_diff, ac)
+    for got, want in zip((is_dc, syms, amp_vals, amp_lens), ref):
+        np.testing.assert_array_equal(got, want)
     dc_freq, ac_freq = rle.symbol_frequencies(is_dc, syms)
     dc_t, ac_t = huffman.build_table(dc_freq), huffman.build_table(ac_freq)
     payload = rle.encode_payload(is_dc, syms, amp_vals, amp_lens, dc_t, ac_t)
-    return rle.decode_payload(payload, len(dc_diff), dc_t, ac_t)
+    out = rle.decode_payload(payload, len(dc_diff), dc_t, ac_t)
+    ref_out = rle.decode_payload_reference(payload, len(dc_diff), dc_t, ac_t)
+    np.testing.assert_array_equal(out[0], ref_out[0])
+    np.testing.assert_array_equal(out[1], ref_out[1])
+    return out
 
 
 class TestZigzag:
@@ -229,6 +248,164 @@ class TestContainer:
         assert sizes[0] < sizes[1] < sizes[2]
 
 
+class TestVectorizedVsReference:
+    """The fast path's contract: bit-for-bit identical to the scalar
+    reference oracles on streams the reference can produce."""
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_symbolize_matches_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 24))
+        ac = rng.integers(-32767, 32768, (n, 63))
+        ac[rng.random((n, 63)) < rng.uniform(0.2, 0.995)] = 0
+        dc_diff = rng.integers(-32767, 32768, (n,))
+        got = rle.symbolize(dc_diff, ac)
+        want = rle.symbolize_reference(dc_diff, ac)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+    def test_decode_truncation_matches_reference_semantics(self):
+        dc = np.arange(-8, 8)
+        ac = np.zeros((16, 63), np.int64)
+        ac[:, ::7] = np.arange(1, 17)[:, None]
+        is_dc, syms, av, al = rle.symbolize(dc, ac)
+        dc_f, ac_f = rle.symbol_frequencies(is_dc, syms)
+        dc_t, ac_t = huffman.build_table(dc_f), huffman.build_table(ac_f)
+        payload = rle.encode_payload(is_dc, syms, av, al, dc_t, ac_t)
+        for cut in (0, 1, len(payload) // 2, len(payload) - 1):
+            with pytest.raises(ValueError):
+                rle.decode_payload(payload[:cut], 16, dc_t, ac_t)
+        # asking for more blocks than the stream holds must also raise
+        with pytest.raises(ValueError):
+            rle.decode_payload(payload, 17, dc_t, ac_t)
+
+    def test_out_of_spec_dc_table_rejected(self):
+        # a DC table coding symbol 16 passes CanonicalTable validation
+        # (symbols are only bounded to bytes) but is out of spec for the
+        # DC alphabet (categories are 0..15) — the decoder must reject
+        # it rather than guess an amplitude width
+        bad_dc = huffman.CanonicalTable(counts=(2,) + (0,) * 15,
+                                        symbols=(0, 16))
+        ac_t = huffman.build_table(np.eye(1, 256, rle.EOB).ravel())
+        with pytest.raises(ValueError, match="DC table"):
+            rle.decode_payload(b"\x00", 1, bad_dc, ac_t)
+
+    def test_truncation_raises_truncated_stream_not_overrun(self):
+        # padding bits after a truncation point can mimic a valid symbol
+        # whose run would overrun the block; the decoder must report
+        # truncation (any bit past the payload end), like the reference
+        dc = np.zeros(4, np.int64)
+        ac = np.zeros((4, 63), np.int64)
+        ac[:, 60] = 3
+        is_dc, syms, av, al = rle.symbolize(dc, ac)
+        dc_f, ac_f = rle.symbol_frequencies(is_dc, syms)
+        dc_t, ac_t = huffman.build_table(dc_f), huffman.build_table(ac_f)
+        payload = rle.encode_payload(is_dc, syms, av, al, dc_t, ac_t)
+        for cut in range(len(payload)):
+            with pytest.raises(ValueError):
+                rle.decode_payload(payload[:cut], 4, dc_t, ac_t)
+
+    def test_bit_windows_matches_bitreader_peek16(self):
+        payload = bytes([0b10110010, 0b01111000, 0xFF])
+        win = bitio.bit_windows(payload)
+        reader = bitio.BitReader(payload)
+        for p in range(len(payload) * 8 + 1):
+            reader.pos = p
+            assert win[p] == reader.peek16(), f"bit {p}"
+
+    def test_bench_identity_gate_is_clean(self):
+        from repro.bench.cases import entropy_identity_violations
+        assert entropy_identity_violations(trials=5) == []
+
+
+class TestGoldenFixtures:
+    """Wire-format lock: streams encoded at the PR 3 revision must be
+    reproduced byte-for-byte by the vectorized encoder and read by the
+    vectorized decoder."""
+
+    FIXTURES = [
+        ("lena_40x40_q50_exact.dctz",
+         lambda: images.lena_like(40, 40), 50, "exact"),
+        ("lena_64x72_q90_exact.dctz",
+         lambda: images.lena_like(64, 72, seed=2), 90, "exact"),
+        ("cablecar_48x40_q30_cordic.dctz",
+         lambda: images.cablecar_like(48, 40), 30, "cordic"),
+        ("lena_33x41_q10_loeffler.dctz",
+         lambda: images.lena_like(33, 41, seed=7), 10, "loeffler"),
+    ]
+
+    @pytest.mark.parametrize("name,image_fn,quality,transform", FIXTURES)
+    def test_encoder_reproduces_golden_stream(self, name, image_fn,
+                                              quality, transform):
+        golden = (DATA_DIR / name).read_bytes()
+        assert encode_image(image_fn(), quality, transform) == golden
+
+    @pytest.mark.parametrize("name,image_fn,quality,transform", FIXTURES)
+    def test_decoder_reads_golden_stream(self, name, image_fn, quality,
+                                         transform):
+        golden = (DATA_DIR / name).read_bytes()
+        hdr = read_header(golden)
+        assert hdr["quality"] == quality
+        assert hdr["transform"] == transform
+        img = image_fn()
+        assert (hdr["height"], hdr["width"]) == img.shape
+        rec = np.asarray(decode_image(golden))
+        want = np.asarray(codec.decompress(codec.compress(
+            img, quality, transform)))
+        np.testing.assert_array_equal(rec, want)
+
+
+class TestHostHalves:
+    """encode_zigzag_host / decode_zigzag_host — the jax-free halves the
+    pipelined engine fans across threads — agree with the full-path
+    container functions."""
+
+    def test_encode_zigzag_host_matches_encode_qcoeffs(self):
+        img = images.lena_like(72, 56)
+        c = codec.compress(img, 40)
+        z = np.asarray(scan.block_stream(jnp.asarray(c.qcoeffs)))
+        blob_host = encode_zigzag_host(z, 40, "exact", (72, 56))
+        assert blob_host == encode_qcoeffs(c.qcoeffs, 40, "exact", (72, 56))
+
+    def test_decode_zigzag_host_matches_decode_qcoeffs(self):
+        blob = encode_image(images.cablecar_like(48, 64), 60)
+        z, hdr = decode_zigzag_host(blob)
+        q, hdr2 = decode_qcoeffs(blob)
+        assert hdr == hdr2
+        np.testing.assert_array_equal(
+            z, np.asarray(scan.block_stream(q)))
+
+    def test_encode_zigzag_host_validates_inputs(self):
+        z = np.zeros((4, 64), np.int32)
+        with pytest.raises(ValueError, match="quality"):
+            encode_zigzag_host(z, 0, "exact", (16, 16))
+        with pytest.raises(ValueError, match="transform"):
+            encode_zigzag_host(z, 50, "dst", (16, 16))
+        with pytest.raises(ValueError, match="block grid"):
+            encode_zigzag_host(z, 50, "exact", (64, 64))
+
+
+class TestMemoisation:
+    def test_build_table_memo_equals_build_table(self):
+        freqs = np.zeros(256, np.int64)
+        freqs[[0, 3, 7, 240]] = [50, 30, 10, 5]
+        assert huffman.build_table_memo(freqs) == huffman.build_table(freqs)
+        # cache hit returns the identical object
+        assert huffman.build_table_memo(freqs) is huffman.build_table_memo(
+            np.array(freqs))
+
+    def test_decoder_luts_cached_per_table(self):
+        t = huffman.build_table(np.array([5, 3, 2, 1]))
+        sym1, len1 = huffman.decoder_luts(t)
+        sym2, len2 = huffman.decoder_luts(
+            huffman.CanonicalTable(t.counts, t.symbols))
+        assert sym1 is sym2 and len1 is len2
+        ref_sym, ref_len = t.decoder_lut()
+        np.testing.assert_array_equal(sym1, ref_sym)
+        np.testing.assert_array_equal(len1, ref_len)
+
+
 class TestEngineBytePath:
     def test_stacked_and_ragged_match_single_image_bytes(self):
         from repro.serve import codec_engine
@@ -241,14 +418,39 @@ class TestEngineBytePath:
         blobs = codec_engine.encode_batch(rag, 70)
         assert blobs == [codec.compress(im, 70).to_bytes() for im in rag]
 
+    def test_pipelined_and_serial_encode_bytes_identical(self):
+        from repro.serve import codec_engine
+        rag = [images.lena_like(64, 72), images.cablecar_like(40, 40),
+               images.lena_like(100, 90, seed=3)]
+        pipelined = codec_engine.encode_batch(rag, 50, pipelined=True)
+        serial = codec_engine.encode_batch(rag, 50, pipelined=False)
+        assert pipelined == serial
+
     def test_decode_batch_bit_exact_mixed_streams(self):
         from repro.serve import codec_engine
         blobs = [encode_image(images.lena_like(64, 72), 50),
                  encode_image(images.cablecar_like(40, 40), 30),
                  encode_image(images.lena_like(64, 72, seed=2), 50)]
-        recs = codec_engine.decode_batch(blobs)
-        for blob, rec in zip(blobs, recs):
-            np.testing.assert_array_equal(np.asarray(rec),
-                                          np.asarray(decode_image(blob)))
+        for pipelined in (True, False):
+            recs = codec_engine.decode_batch(blobs, pipelined=pipelined)
+            for blob, rec in zip(blobs, recs):
+                np.testing.assert_array_equal(
+                    np.asarray(rec), np.asarray(decode_image(blob)))
         with pytest.raises(ValueError):
             codec_engine.decode_batch([])
+
+    def test_nbytes_estimate_measured_after_materialise(self):
+        from repro.core import quant
+        from repro.serve import codec_engine
+        rag = [images.lena_like(64, 72), images.cablecar_like(40, 40)]
+        cb = codec_engine.compress_batch(rag, 50)
+        proxy = cb.nbytes_estimate()
+        want_proxy = sum(float(quant.estimate_bits(g.qcoeffs)) / 8.0
+                         for g in cb.groups)
+        assert proxy == want_proxy
+        streams = cb.to_bytes_list()
+        measured = cb.nbytes_estimate()
+        assert measured == float(sum(len(s) for s in streams))
+        assert measured != proxy            # the proxy is only a model
+        # repeated calls reuse the cached streams
+        assert cb.to_bytes_list() == streams
