@@ -4,10 +4,14 @@ thin entrypoint over ``repro.bench``.
 The measurements are :func:`repro.bench.cases.entropy_throughput_points`
 (shared with the ``entropy_throughput`` registry case that feeds
 RESULTS.md); this script keeps a CSV interface and the
-``--check-identical`` CI gate: the vectorized encoder/decoder must
-produce byte-identical output to the scalar reference path on random
-*and* adversarial blocks (max-magnitude amplitudes, all-zero blocks,
-ZRL chains).  Speed numbers are reported but never gated — shared CI
+``--check-identical`` CI gate, which now covers both halves of the
+entropy stage: the vectorized encoder/decoder must produce
+byte-identical output to the scalar reference path, and every routed
+pack-bits backend (the staged NumPy reference and the Pallas
+scatter-pack kernel, interpret mode off-TPU) must produce
+byte-identical payloads and whole ``DCTZ`` streams — on random *and*
+adversarial blocks (max-magnitude amplitudes, all-zero blocks, ZRL
+chains).  Speed numbers are reported but never gated — shared CI
 runners are too noisy for timing asserts (docs/benchmarks.md).
 
     PYTHONPATH=src python benchmarks/bench_entropy_throughput.py
@@ -23,7 +27,8 @@ import sys
 import jax
 
 from repro.bench.cases import (entropy_identity_violations,
-                               entropy_throughput_points)
+                               entropy_throughput_points,
+                               packing_identity_violations)
 
 
 def main():
@@ -36,22 +41,27 @@ def main():
                     help="random batches for --check-identical")
     ap.add_argument("--check-identical", action="store_true",
                     help="exit 1 unless the vectorized entropy path is "
-                         "byte-identical to the scalar reference on "
-                         "random + adversarial blocks")
+                         "byte-identical to the scalar reference AND "
+                         "every routed pack-bits backend (staged NumPy "
+                         "+ Pallas kernel) is byte-identical to the "
+                         "NumPy reference, on random + adversarial "
+                         "blocks")
     args = ap.parse_args()
 
     print(f"# backend={jax.default_backend()} "
           f"devices={jax.local_device_count()} size={args.size}")
 
     if args.check_identical:
-        bad = entropy_identity_violations(trials=args.trials)
+        bad = (entropy_identity_violations(trials=args.trials)
+               + packing_identity_violations(trials=args.trials))
         if bad:
             print("IDENTITY VIOLATIONS:", file=sys.stderr)
             for line in bad:
                 print(f"  {line}", file=sys.stderr)
             return 1
-        print(f"identity OK: vectorized == reference on {args.trials} "
-              f"random batches + adversarial blocks")
+        print(f"identity OK: vectorized == reference and routed "
+              f"packing backends == NumPy reference on {args.trials} "
+              f"random cases + adversarial blocks")
 
     records = entropy_throughput_points(args.size, sorted(args.batches),
                                         warmup=1, iters=args.iters)

@@ -86,14 +86,15 @@ def write_gray(path: pathlib.Path, img: np.ndarray) -> None:
 def cmd_encode(args) -> int:
     img = read_gray(args.input)
     h, w = img.shape
+    enc = lambda: entropy.encode_image(img, args.quality, args.transform,
+                                       tables=args.tables)
     if args.time:
-        blob, dt = _timed(entropy.encode_image, img, args.quality,
-                          args.transform)
+        blob, dt = _timed(enc)
         print(f"encode: {dt * 1e3:.2f} ms "
               f"({h * w / 1e6 / dt:.1f} MB/s of pixels, "
               f"{1 / dt:.1f} img/s)")
     else:
-        blob = entropy.encode_image(img, args.quality, args.transform)
+        blob = enc()
     pathlib.Path(args.output).write_bytes(blob)
     bpp = len(blob) * 8 / (h * w)
     print(f"{args.output}: {len(blob)} bytes for {h}x{w} "
@@ -121,14 +122,22 @@ def cmd_decode(args) -> int:
     return 0
 
 
+def _table_desc(table_id: int) -> str:
+    """Human name for a container table id (0 embeds, >= 1 is shared)."""
+    return "embedded" if table_id == 0 else f"shared#{table_id}"
+
+
 def cmd_info(args) -> int:
     data = pathlib.Path(args.input).read_bytes()
     hdr = entropy.read_header(data)
     px = hdr["height"] * hdr["width"]
+    crc = "ok" if entropy.verify_crc(data) else "MISMATCH"
     print(f"{args.input}: DCTZ v{hdr['version']} "
           f"{hdr['height']}x{hdr['width']} quality={hdr['quality']} "
           f"transform={hdr['transform']} "
-          f"tables=({hdr['dc_table_id']},{hdr['ac_table_id']}) "
+          f"tables=(dc:{_table_desc(hdr['dc_table_id'])},"
+          f"ac:{_table_desc(hdr['ac_table_id'])}) "
+          f"crc={crc} "
           f"payload={hdr['payload_nbytes']}B "
           f"total={len(data)}B ({len(data) * 8 / px:.3f} bits/px)")
     return 0
@@ -144,6 +153,12 @@ def main() -> int:
     enc.add_argument("--quality", type=int, default=50)
     enc.add_argument("--transform", default="exact",
                      choices=["exact", "cordic", "loeffler"])
+    enc.add_argument("--tables", default="auto",
+                     choices=["auto", "embedded", "shared"],
+                     help="Huffman table policy: auto picks shared "
+                          "well-known tables (container v2) when they "
+                          "beat the embedded-table cost; embedded "
+                          "forces the v1 layout")
     enc.add_argument("--time", action="store_true",
                      help="print encode wall time and MB/s (one warmup "
                           "call first, so jit compilation is excluded)")

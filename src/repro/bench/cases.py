@@ -492,6 +492,65 @@ def entropy_identity_violations(seed: int = 0, trials: int = 25) -> list:
     return bad
 
 
+def packing_identity_violations(seed: int = 0, trials: int = 25) -> list:
+    """Cases where a routed pack-bits backend diverges from the NumPy
+    reference — the packing half of the ``--check-identical`` CI gate
+    (must return []).
+
+    Checks, per case, that the staged NumPy reference
+    (:func:`repro.kernels.pack_bits.pack_bits_ref`) and the Pallas
+    kernel (interpret mode off-TPU) both produce bytes identical to
+    :func:`repro.core.entropy.bitio.pack_bits`, over ``trials`` random
+    field streams (mixed widths 0..16, including zero-width amplitude
+    slots) plus the codeword fields of the :func:`adversarial_blocks`;
+    then that whole ``DCTZ`` streams framed through the routed Pallas
+    packer are identical to the default path, under both embedded and
+    shared table policies.
+    """
+    from repro.core import entropy
+    from repro.core.entropy import bitio, huffman, rle
+    from repro.kernels import pack_bits as pb
+    rng = np.random.default_rng(seed)
+    cases = []
+    for t in range(trials):
+        m = int(rng.integers(1, 600))
+        widths = rng.integers(0, 17, m)
+        # deliberately unmasked: only the low `widths` bits are payload,
+        # and backends must agree on ignoring the stray high bits
+        fields = rng.integers(0, 1 << 16, m)
+        cases.append((f"random_{t}", fields, widths))
+    for i, (dc, ac) in enumerate(adversarial_blocks()):
+        syms = rle.symbolize(dc, ac)
+        dc_f, ac_f = rle.symbol_frequencies(syms[0], syms[1])
+        fields, widths = rle.codeword_fields(
+            *syms, huffman.build_table(dc_f), huffman.build_table(ac_f))
+        cases.append((f"adversarial_{i}", fields, widths))
+
+    bad = []
+    for name, fields, widths in cases:
+        want = bitio.pack_bits(fields, widths)
+        if pb.pack_bits_ref(fields, widths) != want:
+            bad.append(f"{name}: staged reference bytes mismatch")
+            continue
+        if pb.pack_bits(fields, widths, backend="pallas",
+                        interpret=True) != want:
+            bad.append(f"{name}: Pallas kernel bytes mismatch")
+
+    # whole-stream check: the routed packer must frame identical DCTZ
+    # containers under every table policy
+    c = codec.compress(images.lena_like(32, 32), QUALITY)
+    packer = pb.make_packer(backend="pallas", interpret=True)
+    for tables in ("auto", "embedded", "shared"):
+        want = entropy.encode_qcoeffs(c.qcoeffs, QUALITY, "exact",
+                                      (32, 32), tables=tables)
+        got = entropy.encode_qcoeffs(c.qcoeffs, QUALITY, "exact",
+                                     (32, 32), tables=tables,
+                                     packer=packer)
+        if got != want:
+            bad.append(f"stream_{tables}: routed Pallas stream mismatch")
+    return bad
+
+
 @benchmark("entropy_throughput", suites=("smoke", "paper", "full"),
            description="vectorized vs reference entropy coding MB/s + "
                        "overlapped encode_batch/decode_batch scaling")

@@ -68,8 +68,8 @@ def _rd_table(result) -> str:
              "Quality sweep through the complete codec — DCT, quantise, "
              "zig-zag, run-length, canonical Huffman, `DCTZ` container "
              "(`repro.core.entropy`).  Bits-per-pixel are *measured* "
-             "from the entropy-coded stream, not the old "
-             "`estimate_bits` proxy; encode is image→bytes, decode is "
+             "from the entropy-coded stream, never an estimator; "
+             "encode is image→bytes, decode is "
              "bytes→image.", "",
              "| image | size | quality | bits/px | ratio | PSNR (dB) "
              "| encode (ms) | decode (ms) |",

@@ -8,6 +8,26 @@ Modules:
   codec     compress / decompress / roundtrip pipeline
   metrics   PSNR / MSE per the paper's definitions
   images    synthetic stand-ins for the paper's test images
+  entropy   lossless bitstream tail (jax-free at import)
+
+Submodules load lazily (PEP 562): ``from repro.core import dct`` works
+exactly as before, but ``import repro.core.entropy`` no longer drags in
+the jax array stack — which is what lets the codec engine's
+process-pool decode workers spawn with a NumPy-only import footprint.
 """
 
-from repro.core import cordic, dct, images, loeffler, metrics, quant, codec  # noqa: F401
+_SUBMODULES = ("codec", "cordic", "dct", "entropy", "images", "loeffler",
+               "metrics", "quant")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        import importlib
+        module = importlib.import_module(f"repro.core.{name}")
+        globals()[name] = module
+        return module
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

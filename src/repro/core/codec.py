@@ -33,9 +33,10 @@ class CompressedImage:
 
     ``to_bytes``/``from_bytes`` round-trip through the entropy-coded
     ``DCTZ`` container (:mod:`repro.core.entropy`) losslessly, so the
-    ``nbytes`` property is the *measured* compressed size; the old
-    ``nbytes_estimate`` heuristic remains only as a cheap device-side
-    proxy.
+    ``nbytes`` property is the *measured* compressed size.  (The old
+    ``nbytes_estimate`` heuristic is gone; the one surviving
+    device-side estimator is :func:`repro.core.quant.estimate_bits`,
+    for telemetry that cannot afford bit packing.)
     """
     qcoeffs: jnp.ndarray          # (H/8, W/8, 8, 8) int32 quantised levels
     quality: int
@@ -45,12 +46,21 @@ class CompressedImage:
     _nbytes_cache: int | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
-    def to_bytes(self) -> bytes:
+    def to_bytes(self, *, tables: str = "auto") -> bytes:
         """Serialise as one entropy-coded ``DCTZ`` stream (lossless over
-        the quantised levels; layout in docs/bitstream.md)."""
+        the quantised levels; layout in docs/bitstream.md).
+
+        Args:
+            tables: Huffman table policy — "auto" picks, per alphabet,
+                whichever of the per-stream (embedded) or well-known
+                shared table codes the stream more cheaply; "embedded"
+                forces the version-1 layout; "shared" forces the shared
+                ids (see :func:`repro.core.entropy.encode_qcoeffs`).
+        """
         from repro.core import entropy
         return entropy.encode_qcoeffs(self.qcoeffs, self.quality,
-                                      self.transform, self.orig_shape)
+                                      self.transform, self.orig_shape,
+                                      tables=tables)
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "CompressedImage":
@@ -75,11 +85,6 @@ class CompressedImage:
         if self._nbytes_cache is None:
             self._nbytes_cache = len(self.to_bytes())
         return self._nbytes_cache
-
-    def nbytes_estimate(self) -> float:
-        """Heuristic size proxy; superseded by the measured ``nbytes``
-        (kept for device-side telemetry that cannot afford bit packing)."""
-        return float(quant.estimate_bits(self.qcoeffs)) / 8.0
 
     def compression_ratio(self) -> float:
         """original bytes / *measured* entropy-coded bytes."""

@@ -9,24 +9,34 @@ bytes, not the :func:`repro.core.quant.estimate_bits` proxy:
 * :mod:`rle`       — run-length symbolisation of the zig-zag AC tail and
   magnitude-category coding, NumPy at the host edge,
 * :mod:`huffman`   — canonical, length-limited Huffman codes built from
-  per-stream symbol frequencies,
-* :mod:`bitio`     — MSB-first bit packing/unpacking (NumPy),
+  per-stream symbol frequencies, plus the shared-table registry
+  (well-known ITU-T T.81 Annex K tables under ids >= 1),
+* :mod:`bitio`     — MSB-first bit packing/unpacking (NumPy; the
+  retained reference the routed :mod:`repro.kernels.pack_bits` backend
+  is gated against),
 * :mod:`container` — the versioned ``DCTZ`` container (magic, version,
   shape, quality, transform, table ids, CRC) with
   :func:`encode_image` / :func:`decode_image`.
 
-The stage is exactly lossless over the quantised levels, so
-``decode_image(encode_image(img, q))`` reproduces the quantised
-round-trip reconstruction bit-exactly.  The byte layout a third-party
-decoder needs is specified in ``docs/bitstream.md``.
+The encode path is a staged pipeline — symbolize -> table choice ->
+codeword lookup -> prefix-sum offsets -> scatter-pack — whose packing
+stage routes between the NumPy reference and the Pallas kernel
+(``packer`` argument on the encoders).  The stage is exactly lossless
+over the quantised levels, so ``decode_image(encode_image(img, q))``
+reproduces the quantised round-trip reconstruction bit-exactly.  The
+byte layout a third-party decoder needs is specified in
+``docs/bitstream.md``.  This package (and the host halves
+``encode_zigzag_host`` / ``decode_zigzag_host``) imports without jax,
+which is what makes the engine's process-pool decode fallback cheap.
 """
 
 from repro.core.entropy.container import (BitstreamError, decode_image,
                                           decode_qcoeffs,
                                           decode_zigzag_host, encode_image,
                                           encode_qcoeffs,
-                                          encode_zigzag_host, read_header)
+                                          encode_zigzag_host, read_header,
+                                          verify_crc)
 
 __all__ = ["BitstreamError", "decode_image", "decode_qcoeffs",
            "decode_zigzag_host", "encode_image", "encode_qcoeffs",
-           "encode_zigzag_host", "read_header"]
+           "encode_zigzag_host", "read_header", "verify_crc"]

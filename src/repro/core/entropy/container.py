@@ -4,7 +4,7 @@ Layout (all integers little-endian; full spec in docs/bitstream.md)::
 
     offset size field
     0      4    magic  b"DCTZ"
-    4      1    version (currently 1)
+    4      1    version (1 or 2)
     5      1    flags (reserved, must be 0)
     6      1    quality (1..100, IJG scaling)
     7      1    transform code (0 exact / 1 cordic / 2 loeffler)
@@ -15,14 +15,24 @@ Layout (all integers little-endian; full spec in docs/bitstream.md)::
     18     2    reserved (must be 0)
     20     4    payload_nbytes u32
     24     4    crc32 over (header bytes 4..23 ‖ tables ‖ payload)
-    28     ...  DC table segment, AC table segment (id 0 only)
+    28     ...  DC table segment, then AC table segment (embedded only)
     ...    ...  entropy-coded payload (payload_nbytes bytes)
 
-The encoder always derives per-stream canonical Huffman tables from the
-actual symbol frequencies and embeds them (table id 0); nonzero table
-ids are reserved for future shared tables and must be rejected.
-Decoders must reject unknown magic/version/transform/table ids and
-trailing bytes — the format versions by replacement, not extension.
+Version 1 embeds both canonical Huffman tables (table id 0).  Version 2
+adds **shared table ids** (>= 1, resolved through
+:data:`repro.core.entropy.huffman.DEFAULT_TABLES`): the encoder picks,
+per alphabet, whichever is cheaper — per-stream table coding bits plus
+the embedded segment bytes, or the well-known shared table — and only
+writes version 2 when at least one shared id is used, so fully-embedded
+streams stay byte-identical to version 1.  Decoders reject unknown
+magic/version/transform/table ids and trailing bytes; within a version
+the format evolves by replacement, not extension.
+
+This module is importable without jax: the host halves
+(:func:`encode_zigzag_host` / :func:`decode_zigzag_host`) are pure
+NumPy so process-pool workers (``codec_engine.decode_batch``) don't pay
+a jax import per child; only the qcoeff/image entry points pull in the
+array stack, lazily.
 """
 
 from __future__ import annotations
@@ -30,15 +40,18 @@ from __future__ import annotations
 import struct
 import zlib
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import codec, cordic
-from repro.core.entropy import bitio, huffman, rle, scan
+from repro.core.entropy import bitio, huffman, rle
 
 MAGIC = b"DCTZ"
-VERSION = 1
+VERSION_EMBEDDED = 1        # both tables embedded (the v1 layout)
+VERSION_SHARED = 2          # at least one shared table id
+SUPPORTED_VERSIONS = (VERSION_EMBEDDED, VERSION_SHARED)
+VERSION = VERSION_SHARED    # newest version this module writes/reads
 TABLE_EMBEDDED = 0
+
+TABLE_MODES = ("auto", "embedded", "shared")
 
 _HEADER = struct.Struct("<4sBBBBIIBBHII")
 HEADER_NBYTES = _HEADER.size            # 28
@@ -56,8 +69,20 @@ def _grid_shape(height: int, width: int) -> tuple:
     return (height + 7) // 8, (width + 7) // 8
 
 
+def _check_encode_args(quality: int, transform: str, tables: str) -> None:
+    if transform not in TRANSFORM_CODES:
+        raise ValueError(f"unknown transform {transform!r}; "
+                         f"expected one of {sorted(TRANSFORM_CODES)}")
+    if not 1 <= int(quality) <= 100:
+        raise ValueError(f"quality {quality} outside [1, 100]")
+    if tables not in TABLE_MODES:
+        raise ValueError(f"unknown tables mode {tables!r}; "
+                         f"expected one of {TABLE_MODES}")
+
+
 def encode_qcoeffs(qcoeffs, quality: int, transform: str,
-                   orig_shape: tuple) -> bytes:
+                   orig_shape: tuple, *, tables: str = "auto",
+                   packer=None) -> bytes:
     """Entropy-code one image's quantised levels into a ``DCTZ`` stream.
 
     Args:
@@ -70,21 +95,30 @@ def encode_qcoeffs(qcoeffs, quality: int, transform: str,
             :data:`TRANSFORM_CODES`); stored for provenance and for
             ``mode="matched"`` decodes.
         orig_shape: (H, W) of the image before block padding.
+        tables: Huffman table policy — "auto" (per alphabet, shared
+            table when it beats embedded cost), "embedded" (always
+            per-stream tables: the version-1 layout, byte-identical to
+            pre-v2 encoders), or "shared" (force the shared ids; raises
+            if the stream needs a symbol they cannot code).
+        packer: bit-packing backend override, a ``(fields, widths) ->
+            bytes`` callable (e.g. the routed
+            :func:`repro.kernels.pack_bits.pack_bits`); None = the
+            NumPy reference.
 
     Returns:
         The complete container as bytes.
 
     Raises:
-        ValueError: shape/quality/transform out of range, or a level too
-            large for a 15-bit amplitude (:class:`repro.core.entropy.
-            rle.RangeError`).
+        ValueError: shape/quality/transform/tables out of range, a
+            level too large for a 15-bit amplitude
+            (:class:`repro.core.entropy.rle.RangeError`), or
+            ``tables="shared"`` with an uncoverable symbol stream.
     """
+    import jax.numpy as jnp
+
+    from repro.core.entropy import scan
     h, w = int(orig_shape[0]), int(orig_shape[1])
-    if transform not in TRANSFORM_CODES:
-        raise ValueError(f"unknown transform {transform!r}; "
-                         f"expected one of {sorted(TRANSFORM_CODES)}")
-    if not 1 <= int(quality) <= 100:
-        raise ValueError(f"quality {quality} outside [1, 100]")
+    _check_encode_args(quality, transform, tables)
     gh, gw = _grid_shape(h, w)
     qcoeffs = jnp.asarray(qcoeffs)
     if qcoeffs.shape != (gh, gw, 8, 8):
@@ -95,11 +129,13 @@ def encode_qcoeffs(qcoeffs, quality: int, transform: str,
     z = scan.block_stream(qcoeffs)
     dc_diff, ac = scan.dc_differential(z)
     return _frame_stream(np.asarray(dc_diff), np.asarray(ac),
-                         quality, transform, h, w)
+                         quality, transform, h, w, tables=tables,
+                         packer=packer)
 
 
 def encode_zigzag_host(z: np.ndarray, quality: int, transform: str,
-                       orig_shape: tuple) -> bytes:
+                       orig_shape: tuple, *, tables: str = "auto",
+                       packer=None) -> bytes:
     """Entropy-code a (n_blocks, 64) zig-zag stream — pure host path.
 
     The jax-free sibling of :func:`encode_qcoeffs` for callers that
@@ -117,20 +153,19 @@ def encode_zigzag_host(z: np.ndarray, quality: int, transform: str,
         transform: encoder transform name (see
             :data:`TRANSFORM_CODES`).
         orig_shape: (H, W) of the image before block padding.
+        tables: Huffman table policy, as in :func:`encode_qcoeffs`.
+        packer: bit-packing backend override, as in
+            :func:`encode_qcoeffs`.
 
     Returns:
         The complete container as bytes.
 
     Raises:
-        ValueError: shape/quality/transform out of range, or a level too
-            large for a 15-bit amplitude.
+        ValueError: shape/quality/transform/tables out of range, or a
+            level too large for a 15-bit amplitude.
     """
     h, w = int(orig_shape[0]), int(orig_shape[1])
-    if transform not in TRANSFORM_CODES:
-        raise ValueError(f"unknown transform {transform!r}; "
-                         f"expected one of {sorted(TRANSFORM_CODES)}")
-    if not 1 <= int(quality) <= 100:
-        raise ValueError(f"quality {quality} outside [1, 100]")
+    _check_encode_args(quality, transform, tables)
     gh, gw = _grid_shape(h, w)
     z = np.asarray(z)
     if z.shape != (gh * gw, 64):
@@ -138,29 +173,74 @@ def encode_zigzag_host(z: np.ndarray, quality: int, transform: str,
                          f"the {gh}x{gw} block grid of a {h}x{w} image")
     dc = z[:, 0].astype(np.int64)
     dc_diff = np.diff(dc, prepend=np.int64(0))
-    return _frame_stream(dc_diff, z[:, 1:], quality, transform, h, w)
+    return _frame_stream(dc_diff, z[:, 1:], quality, transform, h, w,
+                         tables=tables, packer=packer)
+
+
+def _choose_table(freqs: np.ndarray, shared_id: int, tables: str,
+                  what: str) -> tuple:
+    """Pick (table_id, table) for one alphabet under the table policy.
+
+    "auto" compares total Huffman bits: the per-stream table costs its
+    coded bits plus 8x its embedded segment bytes; the shared table
+    costs its coded bits alone (or is unusable when the stream needs a
+    symbol it lacks).  Amplitude bits cancel.  The rule is
+    deterministic, so re-encoding a decoded stream reproduces it.
+    Forcing "shared" skips the per-stream table build entirely — the
+    streaming fast path; "auto" still builds it (memoised on the
+    histogram) because the comparison needs its coded bits.
+    """
+    if tables == "shared":
+        shared = huffman.DEFAULT_TABLES.get(shared_id)
+        if huffman.coded_bits(shared, freqs) is None:
+            raise ValueError(
+                f"{what} stream needs a symbol the shared table id "
+                f"{shared_id} cannot code; use tables='auto' or "
+                f"'embedded'")
+        return shared_id, shared
+    embedded = huffman.build_table_memo(freqs)
+    if tables == "embedded":
+        return TABLE_EMBEDDED, embedded
+    shared = huffman.DEFAULT_TABLES.get(shared_id)
+    shared_bits = huffman.coded_bits(shared, freqs)
+    embedded_cost = (huffman.coded_bits(embedded, freqs)
+                     + 8 * len(embedded.to_segment()))
+    if shared_bits is not None and shared_bits < embedded_cost:
+        return shared_id, shared
+    return TABLE_EMBEDDED, embedded
 
 
 def _frame_stream(dc_diff: np.ndarray, ac: np.ndarray, quality: int,
-                  transform: str, h: int, w: int) -> bytes:
-    """Host edge shared by both encoders: symbolise (whole-array),
-    memoised canonical tables, vectorised bit packing, framing."""
+                  transform: str, h: int, w: int, *,
+                  tables: str = "auto", packer=None) -> bytes:
+    """Host edge shared by both encoders: the staged entropy pipeline
+    (symbolise -> table choice -> codeword lookup -> routed packing)
+    plus framing."""
     is_dc, syms, amp_vals, amp_lens = rle.symbolize(dc_diff, ac)
     dc_freq, ac_freq = rle.symbol_frequencies(is_dc, syms)
-    dc_table = huffman.build_table_memo(dc_freq)
-    ac_table = huffman.build_table_memo(ac_freq)
+    dc_id, dc_table = _choose_table(dc_freq, huffman.STANDARD_DC_LUMA_ID,
+                                    tables, "DC")
+    ac_id, ac_table = _choose_table(ac_freq, huffman.STANDARD_AC_LUMA_ID,
+                                    tables, "AC")
     payload = rle.encode_payload(is_dc, syms, amp_vals, amp_lens,
-                                 dc_table, ac_table)
+                                 dc_table, ac_table, packer=packer)
 
-    tables = dc_table.to_segment() + ac_table.to_segment()
-    header = _HEADER.pack(MAGIC, VERSION, 0, int(quality),
+    table_segs = b""
+    if dc_id == TABLE_EMBEDDED:
+        table_segs += dc_table.to_segment()
+    if ac_id == TABLE_EMBEDDED:
+        table_segs += ac_table.to_segment()
+    # fully-embedded streams keep the version-1 byte layout so pre-v2
+    # decoders (and the golden fixtures) are untouched
+    version = (VERSION_EMBEDDED
+               if dc_id == ac_id == TABLE_EMBEDDED else VERSION_SHARED)
+    header = _HEADER.pack(MAGIC, version, 0, int(quality),
                           TRANSFORM_CODES[transform], h, w,
-                          TABLE_EMBEDDED, TABLE_EMBEDDED, 0,
-                          len(payload), 0)
+                          dc_id, ac_id, 0, len(payload), 0)
     # CRC protects every header field after the magic (a flipped quality
     # or shape byte must not decode plausibly) plus tables and payload
-    crc = zlib.crc32(header[4:24] + tables + payload) & 0xFFFFFFFF
-    return header[:24] + struct.pack("<I", crc) + tables + payload
+    crc = zlib.crc32(header[4:24] + table_segs + payload) & 0xFFFFFFFF
+    return header[:24] + struct.pack("<I", crc) + table_segs + payload
 
 
 def read_header(data: bytes) -> dict:
@@ -176,7 +256,9 @@ def read_header(data: bytes) -> dict:
 
     Raises:
         BitstreamError: short data, bad magic, unsupported version,
-            or any field outside its valid range.
+            or any field outside its valid range — including a table id
+            the version does not define (version 1 allows only
+            embedded; version 2 also allows registered shared ids).
     """
     if len(data) < HEADER_NBYTES:
         raise BitstreamError(
@@ -187,9 +269,10 @@ def read_header(data: bytes) -> dict:
         data)
     if magic != MAGIC:
         raise BitstreamError(f"not a DCTZ stream (magic {magic!r})")
-    if version != VERSION:
-        raise BitstreamError(f"unsupported DCTZ version {version}; this "
-                             f"decoder reads version {VERSION}")
+    if version not in SUPPORTED_VERSIONS:
+        raise BitstreamError(
+            f"unsupported DCTZ version {version}; this decoder reads "
+            f"versions {SUPPORTED_VERSIONS}")
     if flags != 0 or reserved != 0:
         raise BitstreamError("reserved header fields must be zero")
     if tcode not in _TRANSFORM_NAMES:
@@ -198,11 +281,19 @@ def read_header(data: bytes) -> dict:
         raise BitstreamError(f"quality {quality} outside [1, 100]")
     if height == 0 or width == 0:
         raise BitstreamError("zero image dimension")
-    if dc_id != TABLE_EMBEDDED or ac_id != TABLE_EMBEDDED:
-        raise BitstreamError(
-            f"unknown table ids ({dc_id}, {ac_id}); only embedded "
-            f"tables (id {TABLE_EMBEDDED}) are defined in version "
-            f"{VERSION}")
+    for tid in (dc_id, ac_id):
+        if tid == TABLE_EMBEDDED:
+            continue
+        if version == VERSION_EMBEDDED:
+            raise BitstreamError(
+                f"unknown table ids ({dc_id}, {ac_id}); only embedded "
+                f"tables (id {TABLE_EMBEDDED}) are defined in version "
+                f"{VERSION_EMBEDDED}")
+        if not huffman.DEFAULT_TABLES.known(tid):
+            raise BitstreamError(
+                f"unknown table ids ({dc_id}, {ac_id}); version "
+                f"{VERSION_SHARED} defines embedded (id 0) and "
+                f"registered shared ids {huffman.DEFAULT_TABLES.ids()}")
     return {"version": version, "quality": quality,
             "transform": _TRANSFORM_NAMES[tcode],
             "height": height, "width": width,
@@ -210,18 +301,64 @@ def read_header(data: bytes) -> dict:
             "payload_nbytes": payload_nbytes, "crc32": crc}
 
 
+def _resolve_tables(data: bytes, hdr: dict) -> tuple:
+    """(dc_table, ac_table, payload_offset): embedded segments are
+    parsed from the stream (DC first), shared ids resolve through the
+    default registry (``read_header`` already vetted the ids)."""
+    off = HEADER_NBYTES
+    try:
+        if hdr["dc_table_id"] == TABLE_EMBEDDED:
+            dc_table, off = huffman.CanonicalTable.from_segment(data, off)
+        else:
+            dc_table = huffman.DEFAULT_TABLES.get(hdr["dc_table_id"])
+        if hdr["ac_table_id"] == TABLE_EMBEDDED:
+            ac_table, off = huffman.CanonicalTable.from_segment(data, off)
+        else:
+            ac_table = huffman.DEFAULT_TABLES.get(hdr["ac_table_id"])
+    except huffman.InvalidTable as e:
+        raise BitstreamError(f"bad embedded Huffman table: {e}") from e
+    return dc_table, ac_table, off
+
+
+def verify_crc(data: bytes) -> bool:
+    """Check a stream's CRC without entropy-decoding the payload.
+
+    Parses the header and table segments only (to locate the payload
+    extent), then recomputes the CRC the way the writer does.  Used by
+    ``dctz_cli info`` to report integrity cheaply.
+
+    Returns:
+        True iff the framing lengths agree and the CRC matches.
+
+    Raises:
+        BitstreamError: the header itself is invalid (there is no CRC
+            to check against).
+    """
+    hdr = read_header(data)
+    try:
+        _, _, off = _resolve_tables(data, hdr)
+    except BitstreamError:
+        return False
+    end = off + hdr["payload_nbytes"]
+    if len(data) != end:
+        return False
+    crc = zlib.crc32(data[4:24] + data[HEADER_NBYTES:end]) & 0xFFFFFFFF
+    return crc == hdr["crc32"]
+
+
 def decode_zigzag_host(data: bytes) -> tuple:
     """Parse + entropy-decode a stream to its zig-zag form — pure host.
 
     The jax-free half of :func:`decode_qcoeffs`: framing validation,
-    CRC, embedded tables, the LUT entropy decode and the (integer,
-    bit-exact) DC integration all run in NumPy, so the engine's
-    pipelined ``decode_batch`` can fan streams across threads without
-    contending on jax dispatch; only the inverse zig-zag permutation is
-    left for the device.
+    CRC, table resolution (embedded segments or shared registry ids),
+    the LUT entropy decode and the (integer, bit-exact) DC integration
+    all run in NumPy, so the engine's pipelined ``decode_batch`` can
+    fan streams across threads — or processes, this module imports
+    without jax — without contending on jax dispatch; only the inverse
+    zig-zag permutation is left for the device.
 
     Args:
-        data: one complete ``DCTZ`` stream.
+        data: one complete ``DCTZ`` stream (version 1 or 2).
 
     Returns:
         ``(z, header)``: the (gh*gw, 64) int32 zig-zag stream in raster
@@ -230,15 +367,10 @@ def decode_zigzag_host(data: bytes) -> tuple:
     Raises:
         BitstreamError: any malformation — truncation (header, tables or
             payload), trailing bytes, CRC mismatch, invalid table
-            segments, or an undecodable entropy payload.
+            segments or ids, or an undecodable entropy payload.
     """
     hdr = read_header(data)
-    try:
-        dc_table, off = huffman.CanonicalTable.from_segment(
-            data, HEADER_NBYTES)
-        ac_table, off = huffman.CanonicalTable.from_segment(data, off)
-    except huffman.InvalidTable as e:
-        raise BitstreamError(f"bad embedded Huffman table: {e}") from e
+    dc_table, ac_table, off = _resolve_tables(data, hdr)
     end = off + hdr["payload_nbytes"]
     if len(data) < end:
         raise BitstreamError(
@@ -289,18 +421,19 @@ def decode_qcoeffs(data: bytes) -> tuple:
     Raises:
         BitstreamError: any malformation — truncation (header, tables or
             payload), trailing bytes, CRC mismatch, invalid table
-            segments, or an undecodable entropy payload.
+            segments or ids, or an undecodable entropy payload.
     """
+    import jax.numpy as jnp
+
+    from repro.core.entropy import scan
     z, hdr = decode_zigzag_host(data)
     gh, gw = _grid_shape(hdr["height"], hdr["width"])
     # accelerated half of the inverse: the inverse zig-zag permutation
     return scan.unblock_stream(jnp.asarray(z), gh, gw), hdr
 
 
-def encode_image(img, quality: int = 50,
-                 transform: codec.Transform = "exact",
-                 cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG
-                 ) -> bytes:
+def encode_image(img, quality: int = 50, transform: str = "exact",
+                 cordic_config=None, *, tables: str = "auto") -> bytes:
     """Compress a (H, W) grayscale image to a complete ``DCTZ`` stream.
 
     The array half (DCT + quantise + zig-zag) runs the same jitted path
@@ -311,17 +444,21 @@ def encode_image(img, quality: int = 50,
         img: (H, W) uint8/float grayscale image.
         quality: JPEG quality factor in [1, 100].
         transform: encoder transform ("exact"/"cordic"/"loeffler").
-        cordic_config: CORDIC config for ``transform == "cordic"``.
+        cordic_config: CORDIC config for ``transform == "cordic"``
+            (None = the paper's config).
+        tables: Huffman table policy (see :func:`encode_qcoeffs`).
 
     Returns:
         The container bytes; ``len()`` of it is the *measured* size the
         rate–distortion benches report.
     """
-    c = codec.compress(img, quality, transform, cordic_config)
-    return c.to_bytes()
+    from repro.core import codec, cordic
+    c = codec.compress(img, quality, transform,
+                       cordic_config or cordic.PAPER_CONFIG)
+    return c.to_bytes(tables=tables)
 
 
-def decode_image(data: bytes, mode: str = "standard") -> jnp.ndarray:
+def decode_image(data: bytes, mode: str = "standard"):
     """Reconstruct the (H, W) uint8 image from a ``DCTZ`` stream.
 
     The entropy stage is lossless over the quantised levels, so the
@@ -340,5 +477,6 @@ def decode_image(data: bytes, mode: str = "standard") -> jnp.ndarray:
     Raises:
         BitstreamError: see :func:`decode_qcoeffs`.
     """
+    from repro.core import codec
     c = codec.CompressedImage.from_bytes(data)
     return codec.decompress(c, mode=mode)

@@ -13,6 +13,15 @@ Tables are built per stream from the actual symbol frequencies
 (:func:`build_table`): plain Huffman over the frequencies, then the
 histogram rebalancing of ITU-T T.81 K.3 to cap code length at 16 while
 preserving the Kraft sum.
+
+Since container version 2, streams may instead reference **well-known
+shared tables** by id (:class:`TableRegistry`): the encoder skips both
+the per-stream table build and the ~56 embedded table bytes whenever a
+registered table codes the stream more cheaply (:func:`coded_bits` is
+the cost model).  Ids 1 and 2 ship the ITU-T T.81 Annex K luminance
+tables — the canonical "well-known" JPEG tables — and encoder and
+decoder share one registry (:data:`DEFAULT_TABLES`) so the choice needs
+no negotiation beyond the id byte in the header.
 """
 
 from __future__ import annotations
@@ -223,6 +232,128 @@ def build_table_memo(freqs: np.ndarray) -> CanonicalTable:
     """
     arr = np.ascontiguousarray(np.asarray(freqs, dtype=np.int64))
     return _table_from_histogram(arr.tobytes())
+
+
+@functools.lru_cache(maxsize=64)
+def encoder_luts(table: CanonicalTable) -> tuple:
+    """Memoised :meth:`CanonicalTable.encoder_luts`.
+
+    Streaming encoders hit the same (shared or memoised per-stream)
+    tables constantly; caching on the frozen table makes the 256-entry
+    code/length arrays a one-time cost per table.  Callers must treat
+    the arrays as read-only.
+    """
+    return table.encoder_luts()
+
+
+def coded_bits(table: CanonicalTable, freqs: np.ndarray):
+    """Huffman bits this table spends coding a frequency histogram.
+
+    The cost model the v2 encoder uses to pick embedded vs shared
+    tables: amplitude bits are identical under any table, so only the
+    per-symbol code lengths matter.
+
+    Args:
+        table: candidate canonical table.
+        freqs: (<=256,) occurrence counts indexed by symbol.
+
+    Returns:
+        ``sum(freqs[s] * code_len(s))`` as an int, or ``None`` when the
+        histogram needs a symbol the table cannot code (the table is
+        unusable for this stream, not merely expensive).
+    """
+    freqs = np.asarray(freqs, dtype=np.int64)
+    _, len_of = encoder_luts(table)
+    len_of = len_of[:freqs.size]
+    if bool(((freqs > 0) & (len_of == 0)).any()):
+        return None
+    return int((freqs * len_of).sum())
+
+
+class TableRegistry:
+    """Well-known Huffman tables addressable by container table id.
+
+    Ids are one byte; id 0 always means "table embedded in this stream"
+    and is not registrable.  Encoder and decoder must share the same
+    registry contents (the container stores only the id), which is why
+    the default tables live in this module next to the code
+    construction rather than in the container.
+    """
+
+    def __init__(self):
+        self._tables: dict = {}
+
+    def register(self, table_id: int, table: CanonicalTable) -> None:
+        """Register ``table`` under ``table_id`` (1..255, no rebinding:
+        reassigning an id would silently corrupt every stream already
+        written against it)."""
+        if not 1 <= int(table_id) <= 255:
+            raise ValueError(f"shared table ids are 1..255, got "
+                             f"{table_id} (0 means embedded)")
+        if table_id in self._tables:
+            raise ValueError(f"table id {table_id} already registered")
+        if not isinstance(table, CanonicalTable):
+            raise TypeError("registry entries must be CanonicalTable")
+        self._tables[int(table_id)] = table
+
+    def known(self, table_id: int) -> bool:
+        """True when ``table_id`` resolves (id 0 is never 'known' —
+        embedded tables travel in the stream, not the registry)."""
+        return int(table_id) in self._tables
+
+    def get(self, table_id: int) -> CanonicalTable:
+        """The table registered under ``table_id``.
+
+        Raises:
+            KeyError: unknown id (callers translate this into a
+                bitstream error for decode paths).
+        """
+        return self._tables[int(table_id)]
+
+    def ids(self) -> tuple:
+        """All registered ids, ascending."""
+        return tuple(sorted(self._tables))
+
+
+# Well-known default tables (ITU-T T.81 Annex K, luminance).  The DC
+# table codes categories 0..11 and the AC table (run, size) symbols
+# with size <= 10 — streams whose levels need wider amplitudes fall
+# back to embedded tables automatically (coded_bits returns None).
+STANDARD_DC_LUMA_ID = 1
+STANDARD_AC_LUMA_ID = 2
+
+STANDARD_DC_LUMA = CanonicalTable(
+    counts=(0, 1, 5, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0),
+    symbols=tuple(range(12)))
+
+STANDARD_AC_LUMA = CanonicalTable(
+    counts=(0, 2, 1, 3, 3, 2, 4, 3, 5, 5, 4, 4, 0, 0, 1, 125),
+    symbols=(
+        0x01, 0x02, 0x03, 0x00, 0x04, 0x11, 0x05, 0x12,
+        0x21, 0x31, 0x41, 0x06, 0x13, 0x51, 0x61, 0x07,
+        0x22, 0x71, 0x14, 0x32, 0x81, 0x91, 0xA1, 0x08,
+        0x23, 0x42, 0xB1, 0xC1, 0x15, 0x52, 0xD1, 0xF0,
+        0x24, 0x33, 0x62, 0x72, 0x82, 0x09, 0x0A, 0x16,
+        0x17, 0x18, 0x19, 0x1A, 0x25, 0x26, 0x27, 0x28,
+        0x29, 0x2A, 0x34, 0x35, 0x36, 0x37, 0x38, 0x39,
+        0x3A, 0x43, 0x44, 0x45, 0x46, 0x47, 0x48, 0x49,
+        0x4A, 0x53, 0x54, 0x55, 0x56, 0x57, 0x58, 0x59,
+        0x5A, 0x63, 0x64, 0x65, 0x66, 0x67, 0x68, 0x69,
+        0x6A, 0x73, 0x74, 0x75, 0x76, 0x77, 0x78, 0x79,
+        0x7A, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89,
+        0x8A, 0x92, 0x93, 0x94, 0x95, 0x96, 0x97, 0x98,
+        0x99, 0x9A, 0xA2, 0xA3, 0xA4, 0xA5, 0xA6, 0xA7,
+        0xA8, 0xA9, 0xAA, 0xB2, 0xB3, 0xB4, 0xB5, 0xB6,
+        0xB7, 0xB8, 0xB9, 0xBA, 0xC2, 0xC3, 0xC4, 0xC5,
+        0xC6, 0xC7, 0xC8, 0xC9, 0xCA, 0xD2, 0xD3, 0xD4,
+        0xD5, 0xD6, 0xD7, 0xD8, 0xD9, 0xDA, 0xE1, 0xE2,
+        0xE3, 0xE4, 0xE5, 0xE6, 0xE7, 0xE8, 0xE9, 0xEA,
+        0xF1, 0xF2, 0xF3, 0xF4, 0xF5, 0xF6, 0xF7, 0xF8,
+        0xF9, 0xFA))
+
+DEFAULT_TABLES = TableRegistry()
+DEFAULT_TABLES.register(STANDARD_DC_LUMA_ID, STANDARD_DC_LUMA)
+DEFAULT_TABLES.register(STANDARD_AC_LUMA_ID, STANDARD_AC_LUMA)
 
 
 @functools.lru_cache(maxsize=64)

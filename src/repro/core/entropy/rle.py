@@ -225,19 +225,28 @@ def symbol_frequencies(is_dc, syms) -> tuple:
     return dc, ac
 
 
-def encode_payload(is_dc, syms, amp_vals, amp_lens,
-                   dc_table: huffman.CanonicalTable,
-                   ac_table: huffman.CanonicalTable) -> bytes:
-    """Huffman-code the symbol stream and pack it into bytes.
+def codeword_fields(is_dc, syms, amp_vals, amp_lens,
+                    dc_table: huffman.CanonicalTable,
+                    ac_table: huffman.CanonicalTable) -> tuple:
+    """Codeword-lookup stage: symbol stream -> interleaved bit fields.
 
-    Every symbol contributes its code, immediately followed by its
-    amplitude field (when present); the interleave is realised by laying
-    codes at even and amplitudes at odd slots of a (2M,) field array and
-    letting :func:`repro.core.entropy.bitio.pack_bits` drop the
-    zero-length slots.
+    Every symbol contributes its Huffman code, immediately followed by
+    its amplitude field (when present); the interleave is realised by
+    laying codes at even and amplitudes at odd slots of a (2M,) field
+    array — packers drop the zero-width slots.
+
+    Returns:
+        ``(fields, widths)`` int64 arrays ready for any bit packer
+        (:func:`repro.core.entropy.bitio.pack_bits` or the routed
+        :mod:`repro.kernels.pack_bits` backend).
+
+    Raises:
+        ValueError: the stream contains a symbol the table cannot code
+            (possible with shared tables; the container's cost-based
+            selection never picks an uncovering table).
     """
-    dc_code, dc_len = dc_table.encoder_luts()
-    ac_code, ac_len = ac_table.encoder_luts()
+    dc_code, dc_len = huffman.encoder_luts(dc_table)
+    ac_code, ac_len = huffman.encoder_luts(ac_table)
     codes = np.where(is_dc, dc_code[syms], ac_code[syms])
     lens = np.where(is_dc, dc_len[syms], ac_len[syms])
     if bool((lens == 0).any()):
@@ -248,7 +257,25 @@ def encode_payload(is_dc, syms, amp_vals, amp_lens,
     widths = np.empty(2 * m, dtype=np.int64)
     fields[0::2], widths[0::2] = codes, lens
     fields[1::2], widths[1::2] = amp_vals, amp_lens
-    return bitio.pack_bits(fields, widths)
+    return fields, widths
+
+
+def encode_payload(is_dc, syms, amp_vals, amp_lens,
+                   dc_table: huffman.CanonicalTable,
+                   ac_table: huffman.CanonicalTable,
+                   packer=None) -> bytes:
+    """Huffman-code the symbol stream and pack it into bytes.
+
+    Two explicit stages of the staged encode pipeline: codeword lookup
+    (:func:`codeword_fields`) then bit packing.  ``packer`` selects the
+    packing backend — a ``(fields, widths) -> bytes`` callable, e.g.
+    the routed :func:`repro.kernels.pack_bits.pack_bits`; ``None`` uses
+    the NumPy reference :func:`repro.core.entropy.bitio.pack_bits`.
+    Every backend is byte-identical by contract (CI-gated).
+    """
+    fields, widths = codeword_fields(is_dc, syms, amp_vals, amp_lens,
+                                     dc_table, ac_table)
+    return (packer or bitio.pack_bits)(fields, widths)
 
 
 _PAST_END = 32     # sentinel slots appended past the last window position

@@ -114,12 +114,18 @@ def zigzag(blocks: jnp.ndarray) -> jnp.ndarray:
 def estimate_bits(qcoeffs: jnp.ndarray) -> jnp.ndarray:
     """JPEG-flavoured size *proxy* (bits) for quantised blocks.
 
+    The **one** surviving device-side size estimator (the PR 5 audit
+    deleted every other proxy — ``CompressedImage.nbytes_estimate``,
+    ``quant.compression_ratio`` — in favour of measured stream bytes).
+    It stays because it is jit-able inside compiled pipelines, where
+    bit packing is not: ``CompressedBatch.nbytes_estimate`` uses it for
+    pre-materialisation telemetry, and that is its only load-bearing
+    call site.  Every *reported* size in RESULTS.md is a measured
+    entropy-coded stream length (``CompressedImage.nbytes`` /
+    :mod:`repro.core.entropy`), never this.
+
     Per nonzero coefficient: magnitude-category bits + ~4 bits of
-    Huffman overhead; + 4 bits EOB per block.  Superseded for all
-    reported numbers by the measured sizes of the entropy-coded stream
-    (``CompressedImage.nbytes`` / :mod:`repro.core.entropy`); kept
-    because it is jit-able on device, where bit packing is not — useful
-    as cheap telemetry inside compiled pipelines.
+    Huffman overhead; + 4 bits EOB per block.
 
     Args:
         qcoeffs: (..., 8, 8) int quantised levels.
@@ -133,21 +139,3 @@ def estimate_bits(qcoeffs: jnp.ndarray) -> jnp.ndarray:
     huff_bits = jnp.where(nz, 4.0, 0.0)
     per_block = (cat_bits + huff_bits).sum(axis=(-1, -2)) + 4.0
     return per_block.sum()
-
-
-def compression_ratio(qcoeffs: jnp.ndarray, h: int, w: int,
-                      bits_per_pixel: int = 8) -> jnp.ndarray:
-    """original bits / *estimated* compressed bits (device-side proxy).
-
-    For measured ratios use ``CompressedImage.compression_ratio()``,
-    which counts real ``DCTZ`` stream bytes.
-
-    Args:
-        qcoeffs: (..., 8, 8) int quantised levels of one image.
-        h, w: original image size in pixels.
-        bits_per_pixel: raw input depth (8 for grayscale uint8).
-
-    Returns:
-        Scalar ratio ``raw_bits / estimate_bits(qcoeffs)``.
-    """
-    return (h * w * bits_per_pixel) / estimate_bits(qcoeffs)

@@ -7,4 +7,7 @@ ops.py (jit wrapper) / ref.py (pure-jnp oracle) layout:
   cordic_loeffler paper-faithful Cordic-based Loeffler DCT (VPU shift-add)
   fused_codec     DCT->quant->dequant->IDCT in one HBM round-trip
   grad_dct        DCT-domain gradient compression (encode/decode)
+  pack_bits       entropy-stage bit packing (prefix-sum + scatter); its
+                  ref.py is staged NumPy, not jnp — the oracle must be
+                  byte-exact, and bytes are a host-edge artifact
 """

@@ -1,0 +1,4 @@
+from repro.kernels.pack_bits.kernel import pack_bits_pallas  # noqa: F401
+from repro.kernels.pack_bits.ops import (BACKENDS, make_packer,  # noqa: F401
+                                         pack_bits, select_backend)
+from repro.kernels.pack_bits.ref import pack_bits_ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""Routed public wrappers for the pack_bits kernel.
+
+``pack_bits`` is the packing backend the staged entropy encode pipeline
+(:func:`repro.core.entropy.rle.encode_payload`) routes through: the
+Pallas kernel on TPU, the staged NumPy reference everywhere else — the
+same backend-selection shape as ``fused_codec`` (compiled kernel on
+TPU, bit-exact fallback elsewhere), and byte-identical output either
+way (CI-gated by ``bench_entropy_throughput --check-identical``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.kernels.pack_bits import kernel, ref
+
+TILE_BITS = 1024                    # output bits per kernel program
+WINDOW = TILE_BITS + 16             # fields gathered per tile (>= T+15)
+
+# Above this many kept fields the stream falls back to the NumPy
+# reference: the kernel holds the three (m_pad, 1) int32 field arrays
+# unblocked in VMEM, and pow2 padding doubles the worst case, so the
+# cap must keep 3 * 4 B * 2 * MAX_DEVICE_FIELDS comfortably under the
+# ~16 MiB of a TPU core (2**18 fields -> at most 6 MiB of inputs).
+# 2**18 16-bit fields is a ~512 KB payload, beyond typical per-image
+# streams; blocking the field arrays would lift the cap if ever needed.
+MAX_DEVICE_FIELDS = 1 << 18
+
+BACKENDS = ("pallas", "numpy")
+
+
+def select_backend(backend: str = "auto") -> str:
+    """Resolve the packing backend name ("pallas" on TPU, else "numpy")."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "numpy"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown pack_bits backend {backend!r}; "
+                         f"expected one of {('auto',) + BACKENDS}")
+    return backend
+
+
+def pack_bits(codes, lengths, *, backend: str = "auto",
+              interpret: bool | None = None) -> bytes:
+    """Concatenate MSB-first bit fields into padded payload bytes.
+
+    Same contract as :func:`repro.core.entropy.bitio.pack_bits`
+    (zero-width fields skipped, final partial byte 1-padded), with the
+    packing stage routed per backend.
+
+    Args:
+        codes: (M,) non-negative ints; field k contributes its low
+            ``lengths[k]`` bits, most significant first.
+        lengths: (M,) field widths in [0, 16].
+        backend: "auto" (Pallas on TPU, NumPy elsewhere), "pallas", or
+            "numpy".
+        interpret: Pallas interpret-mode override (None = interpret
+            exactly when no TPU is present); ignored by "numpy".
+
+    Returns:
+        The packed payload bytes, identical across backends.
+    """
+    if select_backend(backend) == "numpy":
+        return ref.pack_bits_ref(codes, lengths)
+    return _pack_bits_device(codes, lengths, interpret)
+
+
+def make_packer(backend: str = "auto", interpret: bool | None = None):
+    """Packing callable for the entropy encoders' ``packer`` argument.
+
+    Returns ``None`` when the resolved backend is "numpy" — callers
+    then keep their zero-indirection default
+    (:func:`repro.core.entropy.bitio.pack_bits`) — and a routed
+    device-packing callable for "pallas".
+    """
+    if select_backend(backend) == "numpy":
+        return None
+    return functools.partial(pack_bits, backend="pallas",
+                             interpret=interpret)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pack_bits_device(codes, lengths, interpret: bool | None) -> bytes:
+    """Host orchestration of the device scatter-pack.
+
+    Stages 1–2 (filter + prefix-sum offsets, plus the per-tile
+    ``searchsorted`` window starts) are O(M) NumPy; stage 3 runs on the
+    device.  Field count and tile count are bucketed to powers of two
+    so a streaming workload sees a bounded set of compiled shapes.
+    """
+    from repro.kernels import common
+    if interpret is None:
+        interpret = common.interpret_default()
+    c, ln, s, total = ref.field_layout(codes, lengths)
+    if total == 0:
+        return b""
+    m = int(c.size)
+    if m > MAX_DEVICE_FIELDS:
+        return ref.scatter_pack_ref(c, ln, s, total).tobytes()
+    n_tiles = _pow2(-(-total // TILE_BITS))
+    m_pad = _pow2(m + WINDOW)
+    first = np.searchsorted(s + ln, np.arange(n_tiles, dtype=np.int64)
+                            * TILE_BITS, side="right")
+    first = np.minimum(first, m_pad - WINDOW).astype(np.int32)
+
+    def col(arr):
+        out = np.zeros((m_pad, 1), np.int32)
+        out[:m, 0] = arr
+        return out
+
+    out = kernel.pack_bits_pallas(col(c), col(ln), col(s), first,
+                                  tile_bits=TILE_BITS, window=WINDOW,
+                                  interpret=interpret)
+    nbytes = (total + 7) // 8
+    by = np.asarray(out).astype(np.uint8).reshape(-1)[:nbytes].copy()
+    pad = (-total) % 8
+    if pad:                         # writer convention: 1-padded tail
+        by[-1] |= (1 << pad) - 1
+    return by.tobytes()

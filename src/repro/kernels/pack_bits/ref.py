@@ -1,0 +1,90 @@
+"""Staged NumPy reference for the pack_bits kernel (bit-exact oracle).
+
+The same three stages the Pallas kernel runs, as whole-array NumPy:
+
+1. **filter** — drop zero-width fields (absent amplitude slots),
+2. **prefix-sum** — exclusive cumulative sum of the field widths gives
+   every field's start bit offset (Cloud et al., arXiv:1107.1525: the
+   offsets are the only serial dependency in Huffman packing, and a
+   scan removes it),
+3. **scatter** — each field's bits land at ``start + 0..len-1``,
+   MSB-first, then 8 bits fold into each output byte.
+
+:func:`pack_bits_ref` is byte-identical to
+:func:`repro.core.entropy.bitio.pack_bits` (the retained host-edge
+reference) on every input — the property tests and the
+``--check-identical`` CI gate hold all three packers (bitio, this
+staged reference, the Pallas kernel) to one output.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MAX_FIELD_BITS = 16
+
+
+def field_layout(codes: np.ndarray, lengths: np.ndarray) -> tuple:
+    """Stages 1–2: filter zero-width fields, prefix-sum the offsets.
+
+    Args:
+        codes: (M,) non-negative ints; field k contributes its low
+            ``lengths[k]`` bits, most significant first.
+        lengths: (M,) field widths in [0, 16]; zero-width fields are
+            dropped.
+
+    Returns:
+        ``(codes, lengths, starts, total_bits)`` — the kept fields plus
+        each field's start bit offset (exclusive prefix sum of the kept
+        widths) and the total payload bit count.
+
+    Raises:
+        ValueError: a field wider than 16 bits.
+    """
+    codes = np.asarray(codes, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    if lengths.size and int(lengths.max()) > MAX_FIELD_BITS:
+        raise ValueError(f"bit field wider than {MAX_FIELD_BITS} bits")
+    keep = lengths > 0
+    codes, lengths = codes[keep], lengths[keep]
+    # only the low `lengths` bits of a field are payload; stray high
+    # bits must not reach the kernel, whose byte-aligned shift would
+    # smear them into the preceding field's bytes
+    codes = codes & ((np.int64(1) << lengths) - 1)
+    ends = np.cumsum(lengths)
+    total = int(ends[-1]) if lengths.size else 0
+    return codes, lengths, ends - lengths, total
+
+
+def scatter_pack_ref(codes: np.ndarray, lengths: np.ndarray,
+                     starts: np.ndarray, total: int) -> np.ndarray:
+    """Stage 3: scatter every field's bits to its offset, fold to bytes.
+
+    Args:
+        codes, lengths, starts: kept fields from :func:`field_layout`
+            (``starts`` need not be contiguous — the kernel relies only
+            on fields never overlapping in bit space).
+        total: payload length in bits; bits past it (the final partial
+            byte) are written as 1s, matching the writer's padding.
+
+    Returns:
+        (ceil(total/8),) uint8 byte array.
+    """
+    nbits = total + (-total) % 8
+    bits = np.zeros(nbits, dtype=np.uint8)
+    bits[total:] = 1
+    csum = np.cumsum(lengths) - lengths
+    j = np.arange(int(lengths.sum()), dtype=np.int64) - np.repeat(csum,
+                                                                  lengths)
+    vals = (np.repeat(codes, lengths)
+            >> (np.repeat(lengths, lengths) - 1 - j)) & 1
+    bits[np.repeat(starts, lengths) + j] = vals
+    return np.packbits(bits)
+
+
+def pack_bits_ref(codes: np.ndarray, lengths: np.ndarray) -> bytes:
+    """The full staged pipeline; byte-identical to ``bitio.pack_bits``."""
+    codes, lengths, starts, total = field_layout(codes, lengths)
+    if total == 0:
+        return b""
+    return scatter_pack_ref(codes, lengths, starts, total).tobytes()

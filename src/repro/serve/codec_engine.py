@@ -15,13 +15,19 @@ independent 8x8 blocks; this engine is the serving-side realisation:
   the batch-first :mod:`repro.core.codec` path runs, so CPU results are
   bit-identical to the single-image API,
 * ``encode_batch`` / ``decode_batch`` extend the same pipeline to real
-  entropy-coded bytes: the array half stays sharded, the bit-packing
-  boundary (:mod:`repro.core.entropy`) runs per image at the host edge —
+  entropy-coded bytes: the array half stays sharded, the entropy stage
+  (:mod:`repro.core.entropy`) runs per image at the host edge —
   by default *overlapped* with the device: jax async dispatch keeps
   bucket ``k+1``'s DCT/quant in flight while a thread pool (the
   vectorised NumPy entropy stage releases the GIL) codes bucket ``k``'s
   streams, and per-stream Huffman tables are memoised across repeated
-  histogram shapes (``huffman.build_table_memo``).
+  histogram shapes (``huffman.build_table_memo``).  The packing stage
+  of each stream routes through :mod:`repro.kernels.pack_bits`
+  (``pack_backend`` — Pallas on TPU, the NumPy reference elsewhere;
+  bytes identical either way), the table policy (``tables``) can pin
+  embedded or well-known shared Huffman tables per stream, and
+  ``decode_batch`` offers an opt-in process pool for many-core hosts
+  where the GIL-bound decode walk caps thread scaling.
 
 The fused kernel reconstructs with the *matched* (adjoint) transform, so it
 only serves roundtrips whose semantics agree with it: ``transform="exact"``
@@ -34,6 +40,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import functools
+import multiprocessing
 import os
 
 import jax
@@ -76,7 +83,10 @@ class CompressedBatch:
     transform: str
     cordic_config: cordic.CordicConfig
     stacked: bool                  # input was a single (B, H, W) array
-    _streams: list | None = dataclasses.field(
+    # (tables_policy, streams) — byte output depends on the table
+    # policy but never on the packing backend, so the cache keys on the
+    # former only
+    _streams: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
     def nbytes_estimate(self) -> float:
@@ -89,16 +99,18 @@ class CompressedBatch:
           ``len()`` (the number every ratio in RESULTS.md is built on);
         * **estimated** — before that, it falls back to the device-side
           :func:`repro.core.quant.estimate_bits` proxy over the
-          (bucket-padded) levels, which needs no host transfer or bit
-          packing but overstates ragged batches (padding blocks count)
-          and is only a model of the entropy coder.
+          (bucket-padded) levels — the repo's one surviving size
+          estimator, kept exactly for this pre-materialisation
+          telemetry — which needs no host transfer or bit packing but
+          overstates ragged batches (padding blocks count) and is only
+          a model of the entropy coder.
 
         Callers that need the measured number unconditionally should
         call ``sum(len(s) for s in batch.to_bytes_list())`` and pay for
         the coding.
         """
         if self._streams is not None:
-            return float(sum(len(s) for s in self._streams))
+            return float(sum(len(s) for s in self._streams[1]))
         from repro.core import quant
         return sum(float(quant.estimate_bits(g.qcoeffs)) / 8.0
                    for g in self.groups)
@@ -116,7 +128,9 @@ class CompressedBatch:
         return out
 
     def to_bytes_list(self, pipelined: bool = True,
-                      workers: int | None = None) -> list:
+                      workers: int | None = None,
+                      pack_backend: str = "auto",
+                      tables: str = "auto") -> list:
         """Entropy-code every image: list of ``DCTZ`` streams in input
         order (measured per-image byte sizes via ``len()``).
 
@@ -125,27 +139,39 @@ class CompressedBatch:
         group's levels land on the host its images are handed to a
         thread pool (NumPy releases the GIL inside the vectorised
         symbolisation/packing), while jax's async dispatch keeps the
-        *next* group's DCT/quant running on the device.  Output bytes
-        are identical either way; results are cached on the batch, so
-        repeated calls (and :meth:`nbytes_estimate` afterwards) are
-        free.
+        *next* group's DCT/quant running on the device.  The packing
+        stage of every stream routes through the backend resolved once
+        per call (:func:`repro.kernels.pack_bits.make_packer`): on TPU
+        the workers enqueue the device scatter-pack per bucket so
+        payload bytes leave the device ready-made; elsewhere packing is
+        the in-worker NumPy reference.  Output bytes are identical
+        across pipelining and packing backends; results are cached on
+        the batch per table policy, so repeated calls (and
+        :meth:`nbytes_estimate` afterwards) are free.
 
         Args:
             pipelined: overlap device compute with threaded host coding
                 (False = the plain serial loop, for debugging/timing).
             workers: thread-pool width (default: up to 8, capped at the
                 CPU count).
+            pack_backend: bit-packing backend — "auto" (Pallas kernel
+                on TPU, NumPy reference elsewhere), "pallas", "numpy".
+            tables: Huffman table policy per stream ("auto" /
+                "embedded" / "shared"), see
+                :func:`repro.core.entropy.encode_qcoeffs`.
         """
         from repro.core import entropy
         from repro.core.entropy import scan
-        if self._streams is not None:
-            return list(self._streams)
+        from repro.kernels import pack_bits
+        if self._streams is not None and self._streams[0] == tables:
+            return list(self._streams[1])
+        packer = pack_bits.make_packer(pack_backend)
         if not pipelined:
-            self._streams = [
+            self._streams = (tables, [
                 entropy.encode_qcoeffs(q, self.quality, self.transform,
-                                       shape)
-                for q, shape in self._image_qcoeffs()]
-            return list(self._streams)
+                                       shape, tables=tables, packer=packer)
+                for q, shape in self._image_qcoeffs()])
+            return list(self._streams[1])
         # dispatch the zig-zag for every bucket up front: jax queues the
         # device work asynchronously, so bucket k+1 computes while the
         # pool below is still coding bucket k's streams
@@ -162,9 +188,10 @@ class CompressedBatch:
                     jobs[idx] = pool.submit(
                         entropy.encode_zigzag_host,
                         znp[j, :gh, :gw].reshape(gh * gw, 64),
-                        self.quality, self.transform, (h, w))
-            self._streams = [f.result() for f in jobs]
-        return list(self._streams)
+                        self.quality, self.transform, (h, w),
+                        tables=tables, packer=packer)
+            self._streams = (tables, [f.result() for f in jobs])
+        return list(self._streams[1])
 
 
 # ---------------------------------------------------------------------------
@@ -423,18 +450,18 @@ def roundtrip_batch(imgs, quality: int = 50,
 def encode_batch(imgs, quality: int = 50,
                  transform: codec.Transform = "exact",
                  cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG,
-                 pipelined: bool = True, workers: int | None = None
-                 ) -> list:
+                 pipelined: bool = True, workers: int | None = None,
+                 pack_backend: str = "auto", tables: str = "auto") -> list:
     """Compress a batch all the way to entropy-coded ``DCTZ`` streams.
 
     The array half (DCT + quantise) runs the sharded
-    :func:`compress_batch` path unchanged; the per-image bit packing
-    happens at the host edge.  In pipelined mode (default) the two
-    halves are overlapped: jax's async dispatch queues *every* bucket's
-    device work up front, and a thread pool entropy-codes bucket *k*
-    while the device is still crunching bucket *k+1*
-    (:meth:`CompressedBatch.to_bytes_list`).  Byte output is identical
-    in both modes.
+    :func:`compress_batch` path unchanged; the per-image entropy stage
+    happens at the host edge with its packing stage routed per backend.
+    In pipelined mode (default) the two halves are overlapped: jax's
+    async dispatch queues *every* bucket's device work up front, and a
+    thread pool entropy-codes bucket *k* while the device is still
+    crunching bucket *k+1* (:meth:`CompressedBatch.to_bytes_list`).
+    Byte output is identical across modes and packing backends.
 
     Args:
         imgs: stacked (B, H, W) array or ragged list of (H, W) images,
@@ -444,34 +471,51 @@ def encode_batch(imgs, quality: int = 50,
         cordic_config: CORDIC config for ``transform == "cordic"``.
         pipelined: overlap device compute with threaded host coding.
         workers: thread-pool width for the host edge (None = auto).
+        pack_backend: bit-packing backend ("auto"/"pallas"/"numpy"),
+            see :meth:`CompressedBatch.to_bytes_list`.
+        tables: Huffman table policy ("auto"/"embedded"/"shared").
 
     Returns:
         List of ``bytes`` (one ``DCTZ`` stream per image, input order);
-        each is bit-identical to ``core.codec.compress(img).to_bytes()``.
+        each is bit-identical to ``core.codec.compress(img).to_bytes()``
+        under the same table policy.
     """
     cb = compress_batch(imgs, quality, transform, cordic_config)
-    return cb.to_bytes_list(pipelined=pipelined, workers=workers)
+    return cb.to_bytes_list(pipelined=pipelined, workers=workers,
+                            pack_backend=pack_backend, tables=tables)
 
 
 def decode_batch(blobs, mode: str = "standard",
                  pipelined: bool = True,
-                 workers: int | None = None) -> list:
+                 workers: int | None = None,
+                 executor: str = "thread") -> list:
     """Decode a list of ``DCTZ`` streams through the sharded array path.
 
     Streams are entropy-decoded on the host — concurrently, in
-    pipelined mode: each stream's LUT decode is independent and the
-    NumPy precompute releases the GIL — then grouped by block-grid
-    shape + quality + decode transform, and each group runs one sharded
-    ``decompress`` jit; the byte path re-joins the array path right
-    after the bitstream boundary.
+    pipelined mode — then grouped by block-grid shape + quality +
+    decode transform, and each group runs one sharded ``decompress``
+    jit; the byte path re-joins the array path right after the
+    bitstream boundary.
+
+    The pipelined host edge defaults to a **thread** pool: the LUT
+    precompute releases the GIL, but the per-symbol chain walk is
+    Python, so threads stop scaling once that walk dominates.  On
+    many-core hosts, ``executor="process"`` opts into a spawn-based
+    process pool instead — each worker decodes whole streams in its own
+    interpreter (``decode_zigzag_host`` and everything under it import
+    without jax, so workers start cheap).  Output is identical across
+    all three modes; the process pool only pays off when the batch is
+    large enough to amortise worker startup.
 
     Args:
         blobs: iterable of ``DCTZ`` streams (``bytes``).
         mode: "standard" (exact IDCT) or "matched" (stored transform's
             adjoint), as in :func:`decompress_batch`.
-        pipelined: entropy-decode streams in a thread pool instead of
+        pipelined: entropy-decode streams concurrently instead of
             serially (identical output either way).
-        workers: thread-pool width for the host edge (None = auto).
+        workers: pool width for the host edge (None = auto).
+        executor: "thread" (default) or "process" (opt-in GIL-free
+            fallback for the Python-bound decode walk).
 
     Returns:
         List of (H, W) uint8 reconstructions in input order, each
@@ -484,14 +528,24 @@ def decode_batch(blobs, mode: str = "standard",
     """
     from repro.core import entropy
     from repro.core.entropy import scan
+    if executor not in ("thread", "process"):
+        raise ValueError(f"unknown executor {executor!r}; expected "
+                         f"'thread' or 'process'")
     blobs = list(blobs)
     if not blobs:
         raise ValueError("empty batch: nothing to decode")
     if pipelined and len(blobs) > 1:
         # each stream's LUT entropy decode is independent NumPy work
-        with concurrent.futures.ThreadPoolExecutor(
-                _n_workers(workers)) as pool:
-            decoded = list(pool.map(entropy.decode_zigzag_host, blobs))
+        if executor == "process":
+            # spawn, not fork: the parent holds live jax/XLA threads
+            ctx = multiprocessing.get_context("spawn")
+            with concurrent.futures.ProcessPoolExecutor(
+                    _n_workers(workers), mp_context=ctx) as pool:
+                decoded = list(pool.map(entropy.decode_zigzag_host, blobs))
+        else:
+            with concurrent.futures.ThreadPoolExecutor(
+                    _n_workers(workers)) as pool:
+                decoded = list(pool.map(entropy.decode_zigzag_host, blobs))
     else:
         decoded = [entropy.decode_zigzag_host(b) for b in blobs]
 

@@ -16,7 +16,7 @@ from repro.core import codec, images
 from repro.core.entropy import (BitstreamError, decode_image, decode_qcoeffs,
                                 decode_zigzag_host, encode_image,
                                 encode_qcoeffs, encode_zigzag_host,
-                                read_header)
+                                read_header, verify_crc)
 from repro.core.entropy import bitio, huffman, rle, scan
 
 DATA_DIR = pathlib.Path(__file__).parent / "data"
@@ -318,11 +318,18 @@ class TestVectorizedVsReference:
         from repro.bench.cases import entropy_identity_violations
         assert entropy_identity_violations(trials=5) == []
 
+    def test_packing_identity_gate_is_clean(self):
+        # random + adversarial field streams AND whole framed streams:
+        # staged NumPy reference and Pallas kernel == bitio.pack_bits
+        from repro.bench.cases import packing_identity_violations
+        assert packing_identity_violations(trials=5) == []
+
 
 class TestGoldenFixtures:
-    """Wire-format lock: streams encoded at the PR 3 revision must be
-    reproduced byte-for-byte by the vectorized encoder and read by the
-    vectorized decoder."""
+    """Wire-format lock: v1 streams encoded at the PR 3 revision must be
+    reproduced byte-for-byte (under ``tables="embedded"``, which pins
+    the v1 layout) and still decode under the v2 reader; v2 fixtures
+    lock the shared-table layout and the deterministic auto cost rule."""
 
     FIXTURES = [
         ("lena_40x40_q50_exact.dctz",
@@ -334,16 +341,27 @@ class TestGoldenFixtures:
         ("lena_33x41_q10_loeffler.dctz",
          lambda: images.lena_like(33, 41, seed=7), 10, "loeffler"),
     ]
+    # (name, image_fn, quality, transform, (dc_id, ac_id)): encoded with
+    # tables="auto" at the PR 5 revision; the second fixture locks the
+    # per-alphabet choice (shared DC, embedded AC)
+    FIXTURES_V2 = [
+        ("lena_40x40_q50_exact_v2.dctz",
+         lambda: images.lena_like(40, 40), 50, "exact", (1, 2)),
+        ("lena_64x72_q90_exact_v2.dctz",
+         lambda: images.lena_like(64, 72, seed=2), 90, "exact", (1, 0)),
+    ]
 
     @pytest.mark.parametrize("name,image_fn,quality,transform", FIXTURES)
-    def test_encoder_reproduces_golden_stream(self, name, image_fn,
-                                              quality, transform):
+    def test_encoder_reproduces_golden_v1_stream(self, name, image_fn,
+                                                 quality, transform):
         golden = (DATA_DIR / name).read_bytes()
-        assert encode_image(image_fn(), quality, transform) == golden
+        assert read_header(golden)["version"] == 1
+        assert encode_image(image_fn(), quality, transform,
+                            tables="embedded") == golden
 
     @pytest.mark.parametrize("name,image_fn,quality,transform", FIXTURES)
-    def test_decoder_reads_golden_stream(self, name, image_fn, quality,
-                                         transform):
+    def test_v2_reader_decodes_golden_v1_stream(self, name, image_fn,
+                                                quality, transform):
         golden = (DATA_DIR / name).read_bytes()
         hdr = read_header(golden)
         assert hdr["quality"] == quality
@@ -354,6 +372,126 @@ class TestGoldenFixtures:
         want = np.asarray(codec.decompress(codec.compress(
             img, quality, transform)))
         np.testing.assert_array_equal(rec, want)
+
+    @pytest.mark.parametrize("name,image_fn,quality,transform,ids",
+                             FIXTURES_V2)
+    def test_encoder_reproduces_golden_v2_stream(self, name, image_fn,
+                                                 quality, transform, ids):
+        golden = (DATA_DIR / name).read_bytes()
+        hdr = read_header(golden)
+        assert hdr["version"] == 2
+        assert (hdr["dc_table_id"], hdr["ac_table_id"]) == ids
+        assert encode_image(image_fn(), quality, transform) == golden
+
+    @pytest.mark.parametrize("name,image_fn,quality,transform,ids",
+                             FIXTURES_V2)
+    def test_decoder_reads_golden_v2_stream(self, name, image_fn,
+                                            quality, transform, ids):
+        golden = (DATA_DIR / name).read_bytes()
+        rec = np.asarray(decode_image(golden))
+        want = np.asarray(codec.decompress(codec.compress(
+            image_fn(), quality, transform)))
+        np.testing.assert_array_equal(rec, want)
+
+
+class TestSharedTables:
+    """Container v2: well-known shared Huffman tables by id, cost-based
+    selection, and version negotiation against v1."""
+
+    def test_registry_contents_are_canonical(self):
+        assert huffman.DEFAULT_TABLES.ids() == (1, 2)
+        dc = huffman.DEFAULT_TABLES.get(huffman.STANDARD_DC_LUMA_ID)
+        assert dc.symbols == tuple(range(12))
+        ac = huffman.DEFAULT_TABLES.get(huffman.STANDARD_AC_LUMA_ID)
+        assert len(ac.symbols) == 162
+        assert rle.EOB in ac.symbols and rle.ZRL in ac.symbols
+
+    def test_registry_validates(self):
+        reg = huffman.TableRegistry()
+        t = huffman.build_table(np.array([5, 3]))
+        with pytest.raises(ValueError, match="1..255"):
+            reg.register(0, t)
+        reg.register(7, t)
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register(7, t)
+        assert reg.known(7) and not reg.known(8)
+        with pytest.raises(KeyError):
+            reg.get(8)
+
+    def test_coded_bits_cost_model(self):
+        t = huffman.build_table(np.array([5, 3, 2]))
+        lens = dict(zip(t.symbols, (l for _, l in t.code_lengths())))
+        freqs = np.zeros(256, np.int64)
+        freqs[[0, 1, 2]] = [5, 3, 2]
+        assert huffman.coded_bits(t, freqs) == (5 * lens[0] + 3 * lens[1]
+                                                + 2 * lens[2])
+        freqs[9] = 1                       # symbol the table cannot code
+        assert huffman.coded_bits(t, freqs) is None
+
+    @pytest.mark.parametrize("tables", ["shared", "auto", "embedded"])
+    def test_roundtrip_bit_exact_under_every_policy(self, tables):
+        img = images.lena_like(56, 48)
+        blob = encode_image(img, 50, tables=tables)
+        rec = np.asarray(decode_image(blob))
+        want = np.asarray(codec.decompress(codec.compress(img, 50)))
+        np.testing.assert_array_equal(rec, want)
+
+    def test_version_negotiation_and_size_win(self):
+        img = images.lena_like(40, 40)
+        v1 = encode_image(img, 50, tables="embedded")
+        v2 = encode_image(img, 50, tables="shared")
+        assert read_header(v1)["version"] == 1
+        h2 = read_header(v2)
+        assert h2["version"] == 2
+        assert (h2["dc_table_id"], h2["ac_table_id"]) == (
+            huffman.STANDARD_DC_LUMA_ID, huffman.STANDARD_AC_LUMA_ID)
+        # shared streams skip the ~56 embedded table bytes
+        assert len(v2) < len(v1)
+
+    def test_auto_never_larger_than_embedded(self):
+        for q in (10, 50, 90):
+            img = images.lena_like(48, 56, seed=q)
+            assert len(encode_image(img, q)) <= len(
+                encode_image(img, q, tables="embedded"))
+
+    def test_shared_raises_when_uncoverable(self):
+        # a 15-bit amplitude needs an AC size the Annex K table lacks
+        z = np.zeros((1, 64), np.int64)
+        z[0, 1] = 32767
+        with pytest.raises(ValueError, match="shared table"):
+            encode_zigzag_host(z, 50, "exact", (8, 8), tables="shared")
+
+    def test_auto_falls_back_per_alphabet_on_uncoverable(self):
+        z = np.zeros((1, 64), np.int64)
+        z[0, 1] = 32767
+        blob = encode_zigzag_host(z, 50, "exact", (8, 8))
+        hdr = read_header(blob)
+        # AC must embed (category 15 uncoverable); DC still goes shared
+        assert hdr["ac_table_id"] == 0
+        assert hdr["dc_table_id"] == huffman.STANDARD_DC_LUMA_ID
+        zz, _ = decode_zigzag_host(blob)
+        np.testing.assert_array_equal(zz, z)
+
+    def test_v2_unknown_table_id_rejected(self):
+        blob = bytearray(encode_image(images.lena_like(40, 40), 50,
+                                      tables="shared"))
+        blob[16] = 9                       # unregistered shared id
+        with pytest.raises(BitstreamError, match="table id"):
+            read_header(bytes(blob))
+
+    def test_invalid_tables_mode_rejected(self):
+        with pytest.raises(ValueError, match="tables mode"):
+            encode_image(images.lena_like(8, 8), 50, tables="bogus")
+
+    def test_verify_crc(self):
+        for tables in ("embedded", "shared"):
+            blob = encode_image(images.lena_like(40, 40), 50,
+                                tables=tables)
+            assert verify_crc(blob)
+            assert not verify_crc(blob[:-1] + bytes([blob[-1] ^ 1]))
+            assert not verify_crc(blob + b"x")
+        with pytest.raises(BitstreamError):
+            verify_crc(b"JUNKJUNK" * 8)
 
 
 class TestHostHalves:
@@ -438,6 +576,40 @@ class TestEngineBytePath:
                     np.asarray(rec), np.asarray(decode_image(blob)))
         with pytest.raises(ValueError):
             codec_engine.decode_batch([])
+
+    def test_pack_backend_routing_is_byte_identical(self):
+        from repro.serve import codec_engine
+        rag = [images.lena_like(64, 72), images.cablecar_like(40, 40)]
+        default = codec_engine.encode_batch(rag, 50)
+        # the routed Pallas backend (interpret mode off-TPU) must frame
+        # identical streams through the whole engine path
+        cb = codec_engine.compress_batch(rag, 50)
+        assert cb.to_bytes_list(pack_backend="pallas") == default
+        with pytest.raises(ValueError, match="backend"):
+            codec_engine.encode_batch(rag, 50, pack_backend="cuda")
+
+    def test_tables_policy_re_keys_the_stream_cache(self):
+        from repro.serve import codec_engine
+        rag = [images.lena_like(64, 72), images.cablecar_like(40, 40)]
+        cb = codec_engine.compress_batch(rag, 50)
+        auto = cb.to_bytes_list()
+        emb = cb.to_bytes_list(tables="embedded")
+        assert emb == [codec.compress(im, 50).to_bytes(tables="embedded")
+                       for im in rag]
+        assert emb != auto                  # policy changes the bytes
+        assert cb.to_bytes_list() == auto   # and the cache re-keys
+
+    def test_decode_batch_process_pool_matches_thread(self):
+        from repro.serve import codec_engine
+        blobs = [encode_image(images.lena_like(48, 56, seed=i), 50)
+                 for i in range(3)]
+        thread = codec_engine.decode_batch(blobs)
+        proc = codec_engine.decode_batch(blobs, executor="process",
+                                         workers=2)
+        for a, b in zip(thread, proc):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        with pytest.raises(ValueError, match="executor"):
+            codec_engine.decode_batch(blobs, executor="fibers")
 
     def test_nbytes_estimate_measured_after_materialise(self):
         from repro.core import quant

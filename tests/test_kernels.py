@@ -8,7 +8,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cordic, images, metrics, quant
-from repro.kernels import grad_dct
+from repro.core.entropy import bitio
+from repro.kernels import grad_dct, pack_bits
 from repro.kernels.cordic_loeffler import (cordic_loeffler_dct,
                                            cordic_loeffler_idct,
                                            cordic_loeffler_ref)
@@ -110,6 +111,97 @@ class TestFusedCodecKernel:
         img = images.lena_like(128, 128)
         rec, _ = fused_codec(img, quality=50)
         assert float(metrics.psnr(jnp.asarray(img), rec)) > 28.0
+
+
+class TestPackBitsKernel:
+    """Routed entropy bit packing: the staged NumPy reference and the
+    Pallas scatter-pack kernel must be byte-identical to the retained
+    ``bitio.pack_bits`` host-edge reference on every input."""
+
+    @staticmethod
+    def _both(codes, lengths):
+        codes = np.asarray(codes)
+        lengths = np.asarray(lengths)
+        want = bitio.pack_bits(codes, lengths)
+        assert pack_bits.pack_bits_ref(codes, lengths) == want
+        assert pack_bits.pack_bits(codes, lengths, backend="pallas",
+                                   interpret=True) == want
+        return want
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=12, deadline=None)
+    def test_random_field_streams(self, seed):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(1, 700))
+        # widths 0..16 with zero-width (absent amplitude) slots included
+        lengths = rng.integers(0, 17, m)
+        codes = rng.integers(0, 1 << 16, m) & ((1 << np.maximum(
+            lengths, 1)) - 1)
+        self._both(codes, lengths)
+
+    @pytest.mark.parametrize("codes,lengths", [
+        ([], []),                            # empty stream
+        ([0], [0]),                          # only zero-width fields
+        ([1], [1]),                          # single bit
+        ([0xFFFF], [16]),                    # one max-width field
+        ([0b101, 0b1], [3, 1]),              # partial final byte
+        ([0xFFFF] * 200, [16] * 200),        # all-ones across 4 tiles
+        ([0] * 1500, [1] * 1500),            # worst-case window density
+        ([5, 0, 3, 0, 7], [3, 0, 2, 0, 3]),  # interleaved zero-widths
+    ])
+    def test_edge_cases(self, codes, lengths):
+        self._both(codes, lengths)
+
+    def test_tile_boundary_straddles(self):
+        # 16-bit fields at every alignment force codes to straddle the
+        # 1024-bit tile boundary in all 8 phase positions
+        for phase in range(8):
+            lengths = [1] * phase + [16] * 200
+            codes = [1] * phase + [0xABCD & 0xFFFF] * 200
+            self._both(codes, lengths)
+
+    def test_multi_tile_payload(self):
+        rng = np.random.default_rng(0)
+        m = 4000                             # ~32k bits, many tiles
+        lengths = rng.integers(1, 17, m)
+        codes = rng.integers(0, 1 << 16, m) & ((1 << lengths) - 1)
+        self._both(codes, lengths)
+
+    def test_high_bits_above_field_width_are_ignored(self):
+        # the contract reads only the low `lengths[k]` bits; stray high
+        # bits must not leak into neighbouring bytes on any backend
+        self._both([1, 3], [1, 1])
+        self._both([0xFFFF, 0xFFFF, 0x7FFF], [3, 16, 1])
+        rng = np.random.default_rng(7)
+        lengths = rng.integers(0, 17, 300)
+        codes = rng.integers(0, 1 << 16, 300)      # deliberately unmasked
+        self._both(codes, lengths)
+
+    def test_width_over_16_rejected(self):
+        with pytest.raises(ValueError, match="wider"):
+            pack_bits.pack_bits_ref(np.array([1]), np.array([17]))
+        with pytest.raises(ValueError, match="wider"):
+            pack_bits.pack_bits(np.array([1]), np.array([17]),
+                                backend="pallas", interpret=True)
+
+    def test_oversize_stream_falls_back_to_reference(self, monkeypatch):
+        # streams past the VMEM guard must quietly take the NumPy path
+        from repro.kernels.pack_bits import ops
+        monkeypatch.setattr(ops, "MAX_DEVICE_FIELDS", 64)
+        rng = np.random.default_rng(11)
+        lengths = rng.integers(0, 17, 300)
+        codes = rng.integers(0, 1 << 16, 300)
+        self._both(codes, lengths)
+
+    def test_backend_selection(self):
+        # off-TPU "auto" resolves to the NumPy reference
+        assert pack_bits.select_backend("auto") in pack_bits.BACKENDS
+        if jax.default_backend() != "tpu":
+            assert pack_bits.select_backend("auto") == "numpy"
+            assert pack_bits.make_packer("auto") is None
+        assert pack_bits.make_packer("pallas") is not None
+        with pytest.raises(ValueError, match="backend"):
+            pack_bits.select_backend("cuda")
 
 
 class TestGradDctKernel:
