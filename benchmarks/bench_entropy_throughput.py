@@ -4,15 +4,19 @@ thin entrypoint over ``repro.bench``.
 The measurements are :func:`repro.bench.cases.entropy_throughput_points`
 (shared with the ``entropy_throughput`` registry case that feeds
 RESULTS.md); this script keeps a CSV interface and the
-``--check-identical`` CI gate, which now covers both halves of the
-entropy stage: the vectorized encoder/decoder must produce
-byte-identical output to the scalar reference path, and every routed
-pack-bits backend (the staged NumPy reference and the Pallas
-scatter-pack kernel, interpret mode off-TPU) must produce
-byte-identical payloads and whole ``DCTZ`` streams — on random *and*
-adversarial blocks (max-magnitude amplitudes, all-zero blocks, ZRL
-chains).  Speed numbers are reported but never gated — shared CI
-runners are too noisy for timing asserts (docs/benchmarks.md).
+``--check-identical`` CI gate, which covers the whole entropy stage:
+the vectorized encoder/decoder must produce byte-identical output to
+the scalar reference path; every routed pack-bits backend (the staged
+NumPy reference and the Pallas scatter-pack kernel, interpret mode
+off-TPU) must produce byte-identical payloads and whole ``DCTZ``
+streams; and every routed unpack-bits backend (the staged speculative
+NumPy decode and the Pallas speculative kernel, interpret mode off-TPU)
+must decode coefficients identical to ``decode_payload_reference`` and
+reject truncated streams with the LUT walk's exact errors — all on
+random *and* adversarial blocks (max-magnitude amplitudes, all-zero
+blocks, ZRL chains).  Speed numbers are reported but never gated —
+shared CI runners are too noisy for timing asserts
+(docs/benchmarks.md).
 
     PYTHONPATH=src python benchmarks/bench_entropy_throughput.py
     PYTHONPATH=src python benchmarks/bench_entropy_throughput.py \
@@ -28,7 +32,8 @@ import jax
 
 from repro.bench.cases import (entropy_identity_violations,
                                entropy_throughput_points,
-                               packing_identity_violations)
+                               packing_identity_violations,
+                               unpack_identity_violations)
 
 
 def main():
@@ -44,8 +49,10 @@ def main():
                          "byte-identical to the scalar reference AND "
                          "every routed pack-bits backend (staged NumPy "
                          "+ Pallas kernel) is byte-identical to the "
-                         "NumPy reference, on random + adversarial "
-                         "blocks")
+                         "NumPy reference AND every routed unpack-bits "
+                         "backend decodes (and rejects malformed "
+                         "streams) identically to the scalar decode "
+                         "oracle, on random + adversarial blocks")
     args = ap.parse_args()
 
     print(f"# backend={jax.default_backend()} "
@@ -53,14 +60,16 @@ def main():
 
     if args.check_identical:
         bad = (entropy_identity_violations(trials=args.trials)
-               + packing_identity_violations(trials=args.trials))
+               + packing_identity_violations(trials=args.trials)
+               + unpack_identity_violations(trials=args.trials))
         if bad:
             print("IDENTITY VIOLATIONS:", file=sys.stderr)
             for line in bad:
                 print(f"  {line}", file=sys.stderr)
             return 1
-        print(f"identity OK: vectorized == reference and routed "
-              f"packing backends == NumPy reference on {args.trials} "
+        print(f"identity OK: vectorized == reference, routed packing "
+              f"backends == NumPy reference, and routed unpack "
+              f"backends == scalar decode oracle on {args.trials} "
               f"random cases + adversarial blocks")
 
     records = entropy_throughput_points(args.size, sorted(args.batches),

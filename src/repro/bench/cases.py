@@ -551,6 +551,170 @@ def packing_identity_violations(seed: int = 0, trials: int = 25) -> list:
     return bad
 
 
+def unpack_identity_violations(seed: int = 0, trials: int = 25) -> list:
+    """Cases where a routed unpack-bits backend diverges from the scalar
+    decode oracle — the decode half of the ``--check-identical`` CI
+    gate (must return []).
+
+    Checks, per case, that the staged NumPy reference
+    (:func:`repro.kernels.unpack_bits.unpack_bits_ref`, at the default
+    and at a boundary-straddling tile size) and the Pallas speculative
+    kernel (interpret mode off-TPU) decode coefficients identical to
+    :func:`repro.core.entropy.rle.decode_payload_reference`, over
+    ``trials`` random batches plus the :func:`adversarial_blocks`; that
+    truncated prefixes of those payloads are rejected with the same
+    error type and message as the production LUT walk; and that whole
+    ``DCTZ`` streams decoded through the routed unpacker match the
+    default path under every table policy.
+    """
+    from repro.core import entropy
+    from repro.core.entropy import bitio, huffman, rle
+    from repro.kernels import unpack_bits as ub
+    from repro.kernels.unpack_bits import ref as uref
+    rng = np.random.default_rng(seed)
+    cases = []
+    for t in range(trials):
+        n = int(rng.integers(1, 24))
+        ac = rng.integers(-32767, 32768, (n, 63))
+        ac[rng.random((n, 63)) < rng.uniform(0.2, 0.995)] = 0
+        dc = rng.integers(-32767, 32768, (n,))
+        cases.append((f"random_{t}", dc, ac))
+    cases += [(f"adversarial_{i}", dc, ac)
+              for i, (dc, ac) in enumerate(adversarial_blocks())]
+
+    def outcome(fn, *args, **kw):
+        try:
+            dc_o, ac_o = fn(*args, **kw)
+            return ("ok", dc_o.tobytes(), ac_o.tobytes())
+        except (bitio.TruncatedStream, ValueError) as e:
+            return (type(e).__name__, str(e))
+
+    backends = [
+        ("staged", lambda p, n, d, a: uref.unpack_bits_ref(p, n, d, a)),
+        ("staged_tiled", lambda p, n, d, a: uref.unpack_bits_ref(
+            p, n, d, a, tile_bits=64)),
+        ("pallas", lambda p, n, d, a: ub.unpack_bits(
+            p, n, d, a, backend="pallas", interpret=True)),
+    ]
+    bad = []
+    for name, dc, ac in cases:
+        syms = rle.symbolize(dc, ac)
+        dc_f, ac_f = rle.symbol_frequencies(syms[0], syms[1])
+        dc_t = huffman.build_table(dc_f)
+        ac_t = huffman.build_table(ac_f)
+        payload = rle.encode_payload(*syms, dc_t, ac_t)
+        want = outcome(rle.decode_payload_reference, payload, len(dc),
+                       dc_t, ac_t)
+        for bname, fn in backends:
+            if outcome(fn, payload, len(dc), dc_t, ac_t) != want:
+                bad.append(f"{name}: {bname} decode mismatch vs reference")
+        # truncated prefixes must fail identically to the LUT walk
+        # (the shipped backend): same error class, same bit offset
+        for cut in (0, len(payload) // 2, len(payload) - 1):
+            want = outcome(rle.decode_payload, payload[:cut], len(dc),
+                           dc_t, ac_t)
+            for bname, fn in backends:
+                if outcome(fn, payload[:cut], len(dc), dc_t, ac_t) != want:
+                    bad.append(f"{name}: {bname} truncation at byte "
+                               f"{cut} not rejected identically")
+
+    # whole-stream check: the routed unpacker must reproduce the
+    # default decode of DCTZ containers under every table policy
+    c = codec.compress(images.lena_like(32, 32), QUALITY)
+    unpacker = ub.make_unpacker(backend="pallas", interpret=True)
+    for tables in ("auto", "embedded", "shared"):
+        stream = entropy.encode_qcoeffs(c.qcoeffs, QUALITY, "exact",
+                                        (32, 32), tables=tables)
+        want_z, want_hdr = entropy.decode_zigzag_host(stream)
+        got_z, got_hdr = entropy.decode_zigzag_host(stream,
+                                                    unpacker=unpacker)
+        if not (np.array_equal(want_z, got_z) and want_hdr == got_hdr):
+            bad.append(f"stream_{tables}: routed unpack stream mismatch")
+    return bad
+
+
+ENTROPY_DECODE_GRID = {
+    "smoke": {"sizes": [64, 128]},
+    "paper": {"sizes": [128, 256]},
+    "full": {"sizes": [256, 512]},
+}
+
+
+def entropy_decode_points(sizes, warmup: int, iters: int) -> list:
+    """Measured records for the ``entropy_decode`` case.
+
+    One record per image size, timing the same payload through every
+    decode backend: the PR 3 scalar ``decode_payload_reference``, the
+    PR 4 LUT walk (``decode_payload``), the staged speculative NumPy
+    decode and the Pallas kernel in interpret mode (a correctness
+    vehicle off-TPU, reported but not scored).  Two sizes per suite
+    make the memory metrics comparable across payload lengths: the
+    walk's decode tables (``walk_table_nbytes``) grow with every
+    payload bit while the staged decoder's per-tile scratch
+    (``staged_scratch_nbytes``) saturates at one tile + margin.
+
+    Shared by the registry case and
+    ``benchmarks/bench_entropy_throughput.py``.
+    """
+    from repro.core.entropy import rle
+    from repro.kernels import unpack_bits as ub
+    from repro.kernels.unpack_bits import ref as uref
+
+    records = []
+    for size in sizes:
+        (z, dc_diff, ac, payload, (dc_t, ac_t),
+         n_blocks) = _entropy_stage_inputs(size)
+        nbits = len(payload) * 8
+        t_ref = measure(rle.decode_payload_reference, payload, n_blocks,
+                        dc_t, ac_t, warmup=min(warmup, 1),
+                        iters=max(iters // 2, 2))
+        t_walk = measure(rle.decode_payload, payload, n_blocks, dc_t,
+                         ac_t, warmup=warmup, iters=iters)
+        t_staged = measure(uref.unpack_bits_ref, payload, n_blocks, dc_t,
+                           ac_t, warmup=warmup, iters=iters)
+        t_pallas = measure(
+            lambda: ub.unpack_bits(payload, n_blocks, dc_t, ac_t,
+                                   backend="pallas", interpret=True),
+            warmup=min(warmup, 1), iters=max(iters // 2, 2))
+        records.append(BenchRecord(
+            label=f"entropy_decode_{size}",
+            params={"height": size, "width": size, "image": "lena",
+                    "quality": QUALITY, "n_blocks": n_blocks,
+                    "payload_nbits": nbits},
+            timings_us={"dec_reference": t_ref.to_json(),
+                        "dec_lut_walk": t_walk.to_json(),
+                        "dec_staged": t_staged.to_json(),
+                        "dec_pallas_interpret": t_pallas.to_json()},
+            metrics={
+                "staged_speedup_vs_reference":
+                    t_ref.median_us / t_staged.median_us,
+                "staged_speedup_vs_walk":
+                    t_walk.median_us / t_staged.median_us,
+                "dec_mb_per_s": (size * size / 1e6)
+                    / (t_staged.median_us / 1e6),
+                "walk_table_nbytes": rle.walk_table_nbytes(nbits),
+                "staged_scratch_nbytes": uref.scratch_nbytes(nbits),
+                "scratch_vs_walk":
+                    uref.scratch_nbytes(nbits)
+                    / rle.walk_table_nbytes(nbits),
+            }))
+    return records
+
+
+@benchmark("entropy_decode", suites=("smoke", "paper", "full"),
+           description="staged speculative decode vs scalar reference + "
+                       "bounded decoder scratch vs per-bit LUT walk")
+def entropy_decode(ctx: RunContext) -> list:
+    """Decode-side counterpart of ``entropy_throughput``: the staged
+    speculative decoder vs the scalar reference and the LUT walk on one
+    payload per size, plus the decoder-memory metrics the unpack_bits
+    design bounds (per-tile scratch, not per-payload-bit tables)."""
+    grid = ENTROPY_DECODE_GRID.get(ctx.suite, ENTROPY_DECODE_GRID["paper"])
+    timer = ctx.timer.scaled(warmup=max(ctx.timer.warmup, 1))
+    return entropy_decode_points(grid["sizes"], warmup=timer.warmup,
+                                 iters=timer.iters)
+
+
 @benchmark("entropy_throughput", suites=("smoke", "paper", "full"),
            description="vectorized vs reference entropy coding MB/s + "
                        "overlapped encode_batch/decode_batch scaling")

@@ -15,6 +15,7 @@ table3_psnr_lena          Table 3 — PSNR exact vs Cordic (Lena)
 table4_psnr_cablecar      Table 4 — PSNR exact vs Cordic (Cable-car)
 rate_distortion           Rate–distortion (measured bytes)
 entropy_throughput        Entropy throughput (vectorized host coding)
+entropy_decode            Entropy decode (speculative unpack backends)
 serve_batch_throughput    Batch throughput curve (serving engine)
 serve_ragged              Ragged mixed-size batches (serving engine)
 framework_micro           Framework micro-benches
@@ -130,6 +131,36 @@ def _entropy_table(result) -> str:
     return "\n".join(lines).rstrip()
 
 
+def _entropy_decode_table(result) -> str:
+    lines = ["## Entropy decode (speculative unpack backends)", "",
+             "Payload-bits → coefficients through the routed unpack "
+             "backends (`repro.kernels.unpack_bits`): the staged NumPy "
+             "speculative decode (decode from every bit offset, pointer "
+             "doubling, per-tile emission) and the Pallas kernel in "
+             "interpret mode, against the scalar `decode_payload_"
+             "reference` oracle and the vectorized LUT walk "
+             "(`rle.decode_payload`).  Interpret-mode Pallas timings are "
+             "a correctness vehicle off-TPU, reported but not scored.  "
+             "`scratch` is the staged decoder's per-tile working set — "
+             "bounded by the tile size — vs the LUT walk's tables, which "
+             "grow with payload bits.", "",
+             "| size | payload (bits) | reference (ms) | LUT walk (ms) "
+             "| staged (ms) | staged vs ref | staged vs walk "
+             "| scratch / walk tables |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in result.records:
+        lines.append(
+            f"| {_size(r)} | {r.params['payload_nbits']} "
+            f"| {_ms(r.timings_us['dec_reference'])} "
+            f"| {_ms(r.timings_us['dec_lut_walk'])} "
+            f"| {_ms(r.timings_us['dec_staged'])} "
+            f"| {r.metrics['staged_speedup_vs_reference']:.1f}x "
+            f"| {r.metrics['staged_speedup_vs_walk']:.2f}x "
+            f"| {r.metrics['staged_scratch_nbytes'] / 1024:.0f} KiB / "
+            f"{r.metrics['walk_table_nbytes'] / 1024:.0f} KiB |")
+    return "\n".join(lines)
+
+
 def _throughput_table(result) -> str:
     transforms = sorted({k[len("img_per_s_"):]
                          for r in result.records for k in r.metrics
@@ -203,6 +234,7 @@ _SECTIONS = (
                              "(Cable-car)"),
     ("rate_distortion", None),
     ("entropy_throughput", None),
+    ("entropy_decode", None),
     ("serve_batch_throughput", None),
     ("serve_ragged", None),
     ("framework_micro", None),
@@ -256,6 +288,8 @@ def render(results) -> str:
             parts.append(_rd_table(result))
         elif name == "entropy_throughput":
             parts.append(_entropy_table(result))
+        elif name == "entropy_decode":
+            parts.append(_entropy_decode_table(result))
         elif name == "serve_batch_throughput":
             parts.append(_throughput_table(result))
         elif name == "serve_ragged":

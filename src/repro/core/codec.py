@@ -63,17 +63,23 @@ class CompressedImage:
                                       tables=tables)
 
     @classmethod
-    def from_bytes(cls, data: bytes) -> "CompressedImage":
+    def from_bytes(cls, data: bytes, *,
+                   unpacker=None) -> "CompressedImage":
         """Parse a ``DCTZ`` stream back into a :class:`CompressedImage`.
 
         The stream does not carry a CORDIC config (it only matters for
         ``mode="matched"`` decodes); the paper's config is assumed.
 
+        Args:
+            data: one complete ``DCTZ`` stream.
+            unpacker: optional payload-decode backend (see
+                :func:`repro.core.entropy.decode_zigzag_host`).
+
         Raises:
             repro.core.entropy.BitstreamError: malformed stream.
         """
         from repro.core import entropy
-        qcoeffs, hdr = entropy.decode_qcoeffs(data)
+        qcoeffs, hdr = entropy.decode_qcoeffs(data, unpacker=unpacker)
         return cls(qcoeffs=qcoeffs, quality=hdr["quality"],
                    transform=hdr["transform"],
                    orig_shape=(hdr["height"], hdr["width"]),

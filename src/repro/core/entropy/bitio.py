@@ -64,9 +64,13 @@ def bit_windows(payload: bytes) -> np.ndarray:
 
     ``bit_windows(p)[k]`` equals what a :class:`BitReader` positioned at
     bit ``k`` would ``peek16()`` — but computed for *every* bit position
-    in one vectorised pass, which is what the LUT decoder in
-    :func:`repro.core.entropy.rle.decode_payload` indexes its
-    per-position symbol tables with.
+    in one vectorised pass.  Two decoders are built on it: the LUT walk
+    in :func:`repro.core.entropy.rle.decode_payload` indexes its
+    per-position symbol tables with it, and the speculative unpack
+    backends (``repro.kernels.unpack_bits``, docs/decoding.md) decode a
+    candidate unit from every window at once.  The 1-padding past the
+    payload end mirrors the writer, so "decodes but runs past the end"
+    is detected by position arithmetic, never by bit pattern.
 
     Args:
         payload: packed bytes (as produced by :func:`pack_bits`).

@@ -346,7 +346,7 @@ def verify_crc(data: bytes) -> bool:
     return crc == hdr["crc32"]
 
 
-def decode_zigzag_host(data: bytes) -> tuple:
+def decode_zigzag_host(data: bytes, *, unpacker=None) -> tuple:
     """Parse + entropy-decode a stream to its zig-zag form — pure host.
 
     The jax-free half of :func:`decode_qcoeffs`: framing validation,
@@ -359,6 +359,11 @@ def decode_zigzag_host(data: bytes) -> tuple:
 
     Args:
         data: one complete ``DCTZ`` stream (version 1 or 2).
+        unpacker: optional payload-decode backend handed through to
+            :func:`repro.core.entropy.rle.decode_payload` — e.g. the
+            routed :func:`repro.kernels.unpack_bits.unpack_bits` for a
+            device-resident decode.  ``None`` keeps the jax-free LUT
+            walk (and with it this function's no-jax-import property).
 
     Returns:
         ``(z, header)``: the (gh*gw, 64) int32 zig-zag stream in raster
@@ -396,7 +401,8 @@ def decode_zigzag_host(data: bytes) -> tuple:
             f"payload cannot hold them (corrupted shape)")
     try:
         dc_diff, ac = rle.decode_payload(data[off:end], gh * gw,
-                                         dc_table, ac_table)
+                                         dc_table, ac_table,
+                                         unpacker=unpacker)
     except (bitio.TruncatedStream, ValueError) as e:
         raise BitstreamError(f"bad entropy payload: {e}") from e
 
@@ -408,11 +414,13 @@ def decode_zigzag_host(data: bytes) -> tuple:
     return z, hdr
 
 
-def decode_qcoeffs(data: bytes) -> tuple:
+def decode_qcoeffs(data: bytes, *, unpacker=None) -> tuple:
     """Full inverse of :func:`encode_qcoeffs`.
 
     Args:
         data: one complete ``DCTZ`` stream.
+        unpacker: optional payload-decode backend (see
+            :func:`decode_zigzag_host`).
 
     Returns:
         ``(qcoeffs, header)``: the (gh, gw, 8, 8) int32 quantised levels
@@ -426,7 +434,7 @@ def decode_qcoeffs(data: bytes) -> tuple:
     import jax.numpy as jnp
 
     from repro.core.entropy import scan
-    z, hdr = decode_zigzag_host(data)
+    z, hdr = decode_zigzag_host(data, unpacker=unpacker)
     gh, gw = _grid_shape(hdr["height"], hdr["width"])
     # accelerated half of the inverse: the inverse zig-zag permutation
     return scan.unblock_stream(jnp.asarray(z), gh, gw), hdr
@@ -458,7 +466,7 @@ def encode_image(img, quality: int = 50, transform: str = "exact",
     return c.to_bytes(tables=tables)
 
 
-def decode_image(data: bytes, mode: str = "standard"):
+def decode_image(data: bytes, mode: str = "standard", *, unpacker=None):
     """Reconstruct the (H, W) uint8 image from a ``DCTZ`` stream.
 
     The entropy stage is lossless over the quantised levels, so the
@@ -470,6 +478,9 @@ def decode_image(data: bytes, mode: str = "standard"):
         mode: "standard" (exact IDCT — a decoder that ignores the
             encoder's approximate transform) or "matched" (the adjoint
             of the stored transform, with the paper's CORDIC config).
+        unpacker: optional payload-decode backend (see
+            :func:`decode_zigzag_host`), e.g.
+            ``repro.kernels.unpack_bits.make_unpacker()``.
 
     Returns:
         (H, W) uint8 reconstruction, cropped to the stored shape.
@@ -478,5 +489,5 @@ def decode_image(data: bytes, mode: str = "standard"):
         BitstreamError: see :func:`decode_qcoeffs`.
     """
     from repro.core import codec
-    c = codec.CompressedImage.from_bytes(data)
+    c = codec.CompressedImage.from_bytes(data, unpacker=unpacker)
     return codec.decompress(c, mode=mode)

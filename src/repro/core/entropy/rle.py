@@ -13,7 +13,11 @@ amplitude tables are built in one vectorised pass, leaving only the
 (data-dependent) walk along the symbol chain in Python.  The original
 scalar implementations survive as :func:`symbolize_reference` /
 :func:`decode_payload_reference` — the golden oracles the property
-tests and the ``entropy_throughput`` bench compare against.
+tests and the ``entropy_throughput`` bench compare against.  A third
+decode family lives in ``repro.kernels.unpack_bits`` (speculative
+per-offset decode + pointer doubling, docs/decoding.md) and plugs in
+through :func:`decode_payload`'s ``unpacker`` hook; all three agree on
+values *and* errors by CI gate.
 
 Symbol alphabet (docs/bitstream.md):
 
@@ -355,9 +359,25 @@ def _decode_table(win: np.ndarray, nbits: int,
     return packed
 
 
+def walk_table_nbytes(nbits: int) -> int:
+    """Approximate resident bytes of both LUT-walk decode tables.
+
+    :func:`_decode_table` materialises one packed word per payload bit
+    position *per alphabet* — ~36 bytes per boxed entry on the
+    list branch, 8 on the ndarray branch past
+    :data:`_WALK_LIST_MAX_BITS` — so the walk's decode memory scales
+    linearly with the payload.  The ``entropy_decode`` bench case
+    reports this against the staged decoder's bounded per-tile scratch
+    (:func:`repro.kernels.unpack_bits.ref.scratch_nbytes`).
+    """
+    entries = 2 * (nbits + 17 + _PAST_END)
+    return entries * (36 if nbits <= _WALK_LIST_MAX_BITS else 8)
+
+
 def decode_payload(payload: bytes, n_blocks: int,
                    dc_table: huffman.CanonicalTable,
-                   ac_table: huffman.CanonicalTable) -> tuple:
+                   ac_table: huffman.CanonicalTable, *,
+                   unpacker=None) -> tuple:
     """Decode ``n_blocks`` blocks from an entropy payload (LUT decoder).
 
     Replaces bit-at-a-time Huffman walking: the peek-16 prefix LUTs of
@@ -378,6 +398,13 @@ def decode_payload(payload: bytes, n_blocks: int,
             symbol above :data:`MAX_CATEGORY` is rejected (the spec
             bounds DC categories to 0..15).
         ac_table: canonical table for AC (run, size) symbols.
+        unpacker: optional ``(payload, n_blocks, dc_table, ac_table) ->
+            (dc_diff, ac)`` callable replacing the whole decode, e.g.
+            the routed :func:`repro.kernels.unpack_bits.unpack_bits`;
+            ``None`` keeps the zero-indirection LUT walk below.  Any
+            unpacker must honour this function's full contract —
+            values *and* errors (CI-gated by ``bench_entropy_throughput
+            --check-identical``).
 
     Returns:
         ``(dc_diff, ac)`` — (n,) int32 DC differences and (n, 63) int32
@@ -388,6 +415,8 @@ def decode_payload(payload: bytes, n_blocks: int,
         ValueError: an invalid Huffman prefix, a coefficient overrun, or
             an out-of-spec DC table (corrupted stream).
     """
+    if unpacker is not None:
+        return unpacker(payload, n_blocks, dc_table, ac_table)
     if dc_table.symbols and max(dc_table.symbols) > MAX_CATEGORY:
         raise ValueError(
             f"DC table codes symbol {max(dc_table.symbols)} > "

@@ -10,4 +10,7 @@ ops.py (jit wrapper) / ref.py (pure-jnp oracle) layout:
   pack_bits       entropy-stage bit packing (prefix-sum + scatter); its
                   ref.py is staged NumPy, not jnp — the oracle must be
                   byte-exact, and bytes are a host-edge artifact
+  unpack_bits     entropy-stage speculative Huffman decode (per-offset
+                  unit words + pointer doubling, resolved per block on
+                  the host); staged NumPy ref.py for the same reason
 """

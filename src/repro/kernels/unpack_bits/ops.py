@@ -1,0 +1,172 @@
+"""Routed public wrappers for the unpack_bits kernel.
+
+``unpack_bits`` is the decode backend the entropy layer routes through
+via ``rle.decode_payload(unpacker=)``: the Pallas speculative-decode
+kernel on TPU, the staged NumPy reference everywhere else — the same
+backend-selection shape as :mod:`repro.kernels.pack_bits` on the
+encode side, and coefficient-identical output either way (CI-gated by
+``bench_entropy_throughput --check-identical``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core.entropy import bitio, huffman
+from repro.kernels.unpack_bits import kernel, ref
+
+TILE_BITS = 2048                    # bit offsets resolved per program
+WINDOW = TILE_BITS + ref.MARGIN_BITS
+
+# Above this many payload bits the stream falls back to the NumPy
+# reference: the kernel holds the (n_pad, 1) int32 window array
+# unblocked in VMEM and stages three (n_tiles, WINDOW) outputs, and
+# pow2 padding doubles the worst case, so 2**20 bits (~128 KB payload,
+# beyond typical per-image streams) keeps the resident arrays a few MB.
+# Blocking the window array would lift the cap if ever needed.
+MAX_DEVICE_BITS = 1 << 20
+
+BACKENDS = ("pallas", "numpy")
+
+scratch_nbytes = ref.scratch_nbytes
+
+
+def select_backend(backend: str = "auto") -> str:
+    """Resolve the unpacking backend name ("pallas" on TPU, else "numpy")."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "numpy"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown unpack_bits backend {backend!r}; "
+                         f"expected one of {('auto',) + BACKENDS}")
+    return backend
+
+
+def unpack_bits(payload: bytes, n_blocks: int,
+                dc_table: huffman.CanonicalTable,
+                ac_table: huffman.CanonicalTable, *,
+                backend: str = "auto",
+                interpret: bool | None = None) -> tuple:
+    """Decode one entropy payload into ``(dc_diff, ac)`` coefficients.
+
+    Same contract as :func:`repro.core.entropy.rle.decode_payload`
+    (same values, same errors at the same bit offsets), with the
+    speculative stage routed per backend.
+
+    Args:
+        payload: MSB-first packed entropy bytes (1-padded tail).
+        n_blocks: number of 8x8 blocks encoded in the payload.
+        dc_table: magnitude-category Huffman table (symbols <= 15).
+        ac_table: (run, size) Huffman table.
+        backend: "auto" (Pallas on TPU, NumPy elsewhere), "pallas", or
+            "numpy".
+        interpret: Pallas interpret-mode override (None = interpret
+            exactly when no TPU is present); ignored by "numpy".
+
+    Returns:
+        ``(dc_diff (n_blocks,) int32, ac (n_blocks, 63) int32)``,
+        identical across backends.
+    """
+    if select_backend(backend) == "numpy":
+        return ref.unpack_bits_ref(payload, n_blocks, dc_table, ac_table)
+    return _unpack_device(payload, n_blocks, dc_table, ac_table, interpret)
+
+
+def make_unpacker(backend: str = "auto", interpret: bool | None = None):
+    """Unpacking callable for the entropy decoders' ``unpacker`` argument.
+
+    Returns ``None`` when the resolved backend is "numpy" — callers
+    then keep their zero-indirection default (the LUT walk inside
+    :func:`repro.core.entropy.rle.decode_payload`) — and a routed
+    device-unpacking callable for "pallas".  The returned partial is
+    picklable, so ``decode_batch(executor="process")`` can ship it to
+    spawned workers (which then import jax on first use).
+    """
+    if select_backend(backend) == "numpy":
+        return None
+    return functools.partial(unpack_bits, backend="pallas",
+                             interpret=interpret)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def table_params(table: huffman.CanonicalTable) -> tuple:
+    """Canonical decode parameters for the kernel's bounds matcher.
+
+    Returns ``(params (48,) int32, symbols (256,) int32)`` where
+    ``params`` is ``mincode[16] | maxcode[16] | valptr[16]``:
+    at code length ``L`` (1-based), valid codes are exactly
+    ``mincode[L-1] .. maxcode[L-1]`` (``maxcode == -1`` when the table
+    has no codes of that length) and the matching symbol is
+    ``symbols[valptr[L-1] + code - mincode[L-1]]`` — the classic
+    T.81 F.2.2.3 decoder state, here evaluated for all 16 lengths at
+    once since prefix-free codes make at most one length match.
+    """
+    params = np.full(48, -1, np.int32)
+    syms = np.zeros(256, np.int32)
+    syms[:len(table.symbols)] = table.symbols
+    code = 0
+    k = 0
+    for i, c in enumerate(table.counts):
+        if c:
+            params[i] = code                # mincode
+            params[16 + i] = code + c - 1   # maxcode
+            params[32 + i] = k              # valptr
+        else:
+            params[i] = 0
+            params[32 + i] = 0
+        code = (code + c) << 1
+        k += c
+    return params, syms
+
+
+def _unpack_device(payload: bytes, n_blocks: int,
+                   dc_table: huffman.CanonicalTable,
+                   ac_table: huffman.CanonicalTable,
+                   interpret: bool | None) -> tuple:
+    """Host orchestration of the device speculative decode.
+
+    The kernel stages unit/outcome words for every bit offset; chain
+    resolution and value emission are the shared O(1)-per-block host
+    stage (:func:`repro.kernels.unpack_bits.ref.resolve`).  Tile count
+    is bucketed to powers of two so a streaming workload sees a
+    bounded set of compiled shapes.
+    """
+    from repro.kernels import common
+    if interpret is None:
+        interpret = common.interpret_default()
+    if dc_table.symbols and max(dc_table.symbols) > ref.MAX_CATEGORY:
+        raise ValueError(f"DC table codes symbol {max(dc_table.symbols)} "
+                         f"> {ref.MAX_CATEGORY}: not a magnitude-category "
+                         f"alphabet")
+    if n_blocks == 0:
+        return (np.zeros(0, np.int32), np.zeros((0, ref.AC_LEN), np.int32))
+    nbits = len(payload) * 8
+    if nbits == 0 or nbits > MAX_DEVICE_BITS:
+        return ref.unpack_bits_ref(payload, n_blocks, dc_table, ac_table)
+    win = bitio.bit_windows(payload)
+    n_tiles = _pow2(-(-(nbits + 1) // TILE_BITS))
+    n_pad = n_tiles * TILE_BITS + WINDOW
+    win_col = np.full((n_pad, 1), 0xFFFF, np.int32)
+    win_col[:win.size, 0] = win
+    dc_params, dc_syms = table_params(dc_table)
+    ac_params, ac_syms = table_params(ac_table)
+    dcw, acw, outc = kernel.unpack_bits_pallas(
+        np.array([nbits], np.int32),
+        np.concatenate([dc_params, ac_params]),
+        win_col, dc_syms.reshape(1, -1), ac_syms.reshape(1, -1),
+        n_tiles=n_tiles, tile_bits=TILE_BITS, window=WINDOW,
+        interpret=interpret)
+    dcw, acw, outc = (np.asarray(a) for a in (dcw, acw, outc))
+
+    def get_tile(t):
+        return dcw[t], acw[t], outc[t]
+
+    return ref.resolve(win, nbits, n_blocks, TILE_BITS, get_tile)

@@ -485,27 +485,53 @@ def encode_batch(imgs, quality: int = 50,
                             pack_backend=pack_backend, tables=tables)
 
 
+def _hydrate_tables(segments) -> None:
+    """Process-pool initializer: re-register shared Huffman tables.
+
+    A spawned worker re-imports :mod:`repro.core.entropy.huffman`,
+    which re-creates ``DEFAULT_TABLES`` with only the module's built-in
+    ids — any table the parent registered at runtime would be unknown
+    there, and v2 streams referencing it would fail to decode.  The
+    parent serialises its registry as ``(id, segment)`` pairs
+    (:meth:`CanonicalTable.to_segment`); workers re-register whatever
+    they are missing.
+    """
+    from repro.core.entropy import huffman
+    for tid, seg in segments:
+        if not huffman.DEFAULT_TABLES.known(tid):
+            table, _ = huffman.CanonicalTable.from_segment(seg)
+            huffman.DEFAULT_TABLES.register(tid, table)
+
+
 def decode_batch(blobs, mode: str = "standard",
                  pipelined: bool = True,
                  workers: int | None = None,
-                 executor: str = "thread") -> list:
+                 executor: str = "thread",
+                 unpack_backend: str = "auto") -> list:
     """Decode a list of ``DCTZ`` streams through the sharded array path.
 
-    Streams are entropy-decoded on the host — concurrently, in
+    Streams are entropy-decoded on the host edge — concurrently, in
     pipelined mode — then grouped by block-grid shape + quality +
     decode transform, and each group runs one sharded ``decompress``
     jit; the byte path re-joins the array path right after the
     bitstream boundary.
 
-    The pipelined host edge defaults to a **thread** pool: the LUT
-    precompute releases the GIL, but the per-symbol chain walk is
-    Python, so threads stop scaling once that walk dominates.  On
-    many-core hosts, ``executor="process"`` opts into a spawn-based
-    process pool instead — each worker decodes whole streams in its own
-    interpreter (``decode_zigzag_host`` and everything under it import
-    without jax, so workers start cheap).  Output is identical across
-    all three modes; the process pool only pays off when the batch is
-    large enough to amortise worker startup.
+    The entropy decode itself routes per ``unpack_backend``, mirroring
+    ``encode_batch(pack_backend=)``: on TPU, "auto" resolves to the
+    Pallas speculative-decode kernel (:mod:`repro.kernels.unpack_bits`)
+    and the pipelined pool overlaps each stream's device unpack with
+    the host-side parse/CRC and dequant dispatch of its neighbours;
+    elsewhere it keeps the LUT walk.  The pipelined host edge defaults
+    to a **thread** pool: the LUT precompute releases the GIL, but the
+    per-symbol chain walk is Python, so threads stop scaling once that
+    walk dominates.  On many-core hosts, ``executor="process"`` opts
+    into a spawn-based process pool instead — each worker decodes whole
+    streams in its own interpreter (with the LUT walk,
+    ``decode_zigzag_host`` and everything under it import without jax,
+    so workers start cheap; runtime-registered shared tables are
+    re-registered in each worker on init).  Output is identical across
+    all modes and backends; the process pool only pays off when the
+    batch is large enough to amortise worker startup.
 
     Args:
         blobs: iterable of ``DCTZ`` streams (``bytes``).
@@ -516,6 +542,10 @@ def decode_batch(blobs, mode: str = "standard",
         workers: pool width for the host edge (None = auto).
         executor: "thread" (default) or "process" (opt-in GIL-free
             fallback for the Python-bound decode walk).
+        unpack_backend: entropy-unpack backend ("auto"/"pallas"/
+            "numpy"), see :func:`repro.kernels.unpack_bits.unpack_bits`.
+            "auto" keeps the LUT walk off-TPU; "pallas" forces the
+            routed kernel (interpret mode off-TPU).
 
     Returns:
         List of (H, W) uint8 reconstructions in input order, each
@@ -527,27 +557,38 @@ def decode_batch(blobs, mode: str = "standard",
         whole call fails; no partial results).
     """
     from repro.core import entropy
-    from repro.core.entropy import scan
+    from repro.core.entropy import huffman, scan
+    from repro.kernels import unpack_bits
     if executor not in ("thread", "process"):
         raise ValueError(f"unknown executor {executor!r}; expected "
                          f"'thread' or 'process'")
+    unpacker = unpack_bits.make_unpacker(unpack_backend)
+    decode_one = entropy.decode_zigzag_host if unpacker is None else \
+        functools.partial(entropy.decode_zigzag_host, unpacker=unpacker)
     blobs = list(blobs)
     if not blobs:
         raise ValueError("empty batch: nothing to decode")
     if pipelined and len(blobs) > 1:
-        # each stream's LUT entropy decode is independent NumPy work
+        # each stream's entropy decode is independent host/device work
         if executor == "process":
-            # spawn, not fork: the parent holds live jax/XLA threads
+            # spawn, not fork: the parent holds live jax/XLA threads.
+            # Workers re-import huffman, so tables registered at
+            # runtime must be shipped over and re-registered on init.
+            segs = tuple(
+                (tid, huffman.DEFAULT_TABLES.get(tid).to_segment())
+                for tid in huffman.DEFAULT_TABLES.ids())
             ctx = multiprocessing.get_context("spawn")
             with concurrent.futures.ProcessPoolExecutor(
-                    _n_workers(workers), mp_context=ctx) as pool:
-                decoded = list(pool.map(entropy.decode_zigzag_host, blobs))
+                    _n_workers(workers), mp_context=ctx,
+                    initializer=_hydrate_tables,
+                    initargs=(segs,)) as pool:
+                decoded = list(pool.map(decode_one, blobs))
         else:
             with concurrent.futures.ThreadPoolExecutor(
                     _n_workers(workers)) as pool:
-                decoded = list(pool.map(entropy.decode_zigzag_host, blobs))
+                decoded = list(pool.map(decode_one, blobs))
     else:
-        decoded = [entropy.decode_zigzag_host(b) for b in blobs]
+        decoded = [decode_one(b) for b in blobs]
 
     buckets: dict = {}
     for i, (z, hdr) in enumerate(decoded):

@@ -611,6 +611,53 @@ class TestEngineBytePath:
         with pytest.raises(ValueError, match="executor"):
             codec_engine.decode_batch(blobs, executor="fibers")
 
+    def test_unpack_backend_routing_is_bit_identical(self):
+        from repro.serve import codec_engine
+        blobs = [encode_image(images.lena_like(48, 56, seed=i), 50)
+                 for i in range(3)]
+        default = codec_engine.decode_batch(blobs)
+        # the routed Pallas backend (interpret mode off-TPU) must
+        # reconstruct identical images through the whole engine path
+        routed = codec_engine.decode_batch(blobs, unpack_backend="pallas")
+        serial = codec_engine.decode_batch(blobs, pipelined=False,
+                                           unpack_backend="pallas")
+        for a, b, c in zip(default, routed, serial):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+        with pytest.raises(ValueError, match="backend"):
+            codec_engine.decode_batch(blobs, unpack_backend="cuda")
+
+    def test_process_pool_decodes_runtime_registered_tables(self):
+        # regression: spawned workers re-import the huffman registry,
+        # so a v2 stream referencing a table id registered at runtime
+        # used to fail in executor="process" — decode_batch now ships
+        # the parent registry to each worker on init
+        import struct
+        import zlib
+
+        from repro.core.entropy import container
+        from repro.serve import codec_engine
+        for tid, table in ((201, huffman.STANDARD_DC_LUMA),
+                           (202, huffman.STANDARD_AC_LUMA)):
+            if not huffman.DEFAULT_TABLES.known(tid):
+                huffman.DEFAULT_TABLES.register(tid, table)
+        img = np.asarray(images.lena_like(40, 40))
+        z, _ = decode_zigzag_host(encode_image(img, quality=50))
+        dc_diff = np.diff(z[:, 0].astype(np.int64), prepend=0)
+        syms = rle.symbolize(dc_diff, z[:, 1:].astype(np.int64))
+        payload = rle.encode_payload(*syms, huffman.STANDARD_DC_LUMA,
+                                     huffman.STANDARD_AC_LUMA)
+        h, w = img.shape
+        header = container._HEADER.pack(container.MAGIC, 2, 0, 50, 0,
+                                        h, w, 201, 202, 0, len(payload), 0)
+        crc = zlib.crc32(header[4:24] + payload) & 0xFFFFFFFF
+        blob = header[:24] + struct.pack("<I", crc) + payload
+        want = np.asarray(decode_image(blob))
+        out = codec_engine.decode_batch([blob, blob], executor="process",
+                                        workers=2)
+        for rec in out:
+            np.testing.assert_array_equal(np.asarray(rec), want)
+
     def test_nbytes_estimate_measured_after_materialise(self):
         from repro.core import quant
         from repro.serve import codec_engine

@@ -1,0 +1,220 @@
+"""Routed entropy unpack: the staged NumPy reference and the Pallas
+speculative-decode kernel must be coefficient-identical to the scalar
+``decode_payload_reference`` oracle on every stream — including the
+errors malformed streams raise — mirroring ``pack_bits``' suite on the
+encode side."""
+
+import pathlib
+
+import numpy as np
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entropy import bitio, huffman, rle
+from repro.kernels import unpack_bits
+from repro.kernels.unpack_bits import ref as unpack_ref
+
+DATA_DIR = pathlib.Path(__file__).parent / "data"
+
+
+def _encode(dc_diff, ac, std_tables=True):
+    """Blocks -> (payload, dc_table, ac_table)."""
+    syms = rle.symbolize(np.asarray(dc_diff, np.int64),
+                         np.asarray(ac, np.int64))
+    if std_tables:
+        dc_t, ac_t = huffman.STANDARD_DC_LUMA, huffman.STANDARD_AC_LUMA
+    else:
+        dc_f, ac_f = rle.symbol_frequencies(syms[0], syms[1])
+        dc_t, ac_t = huffman.build_table(dc_f), huffman.build_table(ac_f)
+    return rle.encode_payload(*syms, dc_t, ac_t), dc_t, ac_t
+
+
+def _random_blocks(rng, n, hi=1000):
+    dc = rng.integers(-hi, hi + 1, n)
+    ac = np.zeros((n, 63), np.int64)
+    for b in range(n):
+        k = int(rng.integers(0, 16))
+        cols = rng.choice(63, size=k, replace=False)
+        ac[b, cols] = rng.integers(-hi, hi + 1, k)
+    return dc, ac
+
+
+class TestUnpackBitsKernel:
+    @staticmethod
+    def _all(payload, n_blocks, dc_t, ac_t, tile_sizes=(64,)):
+        """Every backend must match the scalar oracle exactly."""
+        want = rle.decode_payload_reference(payload, n_blocks, dc_t, ac_t)
+        outs = [unpack_ref.unpack_bits_ref(payload, n_blocks, dc_t, ac_t)]
+        outs += [unpack_ref.unpack_bits_ref(payload, n_blocks, dc_t, ac_t,
+                                            tile_bits=tb)
+                 for tb in tile_sizes]
+        outs.append(unpack_bits.unpack_bits(payload, n_blocks, dc_t, ac_t,
+                                            backend="pallas",
+                                            interpret=True))
+        for dc, ac in outs:
+            np.testing.assert_array_equal(dc, want[0])
+            np.testing.assert_array_equal(ac, want[1])
+        return want
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_random_streams(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 150))
+        dc, ac = _random_blocks(rng, n)
+        payload, dc_t, ac_t = _encode(dc, ac, std_tables=bool(n % 2))
+        self._all(payload, n, dc_t, ac_t)
+
+    def test_empty_and_trivial_blocks(self):
+        # zero blocks: empty output, no stream validation (reference
+        # semantics), on every backend
+        dc_t, ac_t = huffman.STANDARD_DC_LUMA, huffman.STANDARD_AC_LUMA
+        for fn in (unpack_ref.unpack_bits_ref,
+                   lambda *a: unpack_bits.unpack_bits(
+                       *a, backend="pallas", interpret=True)):
+            dc, ac = fn(b"\xAB\xCD", 0, dc_t, ac_t)
+            assert dc.shape == (0,) and ac.shape == (0, 63)
+        # all-zero blocks: DC category 0 + EOB only
+        payload, dc_t, ac_t = _encode(np.zeros(9), np.zeros((9, 63)))
+        self._all(payload, 9, dc_t, ac_t, tile_sizes=(1, 7))
+
+    def test_all_zrl_chains(self):
+        # a lone coefficient at column 62 costs three ZRLs + a run-14
+        # symbol; stacking such blocks makes ZRL the dominant unit and
+        # exercises the doubling's 16-position hops
+        n = 40
+        ac = np.zeros((n, 63), np.int64)
+        ac[:, 62] = 7
+        payload, dc_t, ac_t = _encode(np.zeros(n), ac, std_tables=False)
+        self._all(payload, n, dc_t, ac_t, tile_sizes=(33, 64))
+
+    def test_max_category_amplitudes(self):
+        # +/-32767 needs category 15 — the widest legal amplitude field
+        # (code + 15 bits) and the largest unit advance
+        n = 12
+        rng = np.random.default_rng(3)
+        dc = rng.choice([-32767, 32767], n)
+        ac = np.zeros((n, 63), np.int64)
+        ac[:, rng.choice(63, 8, replace=False)] = 32767
+        ac[:, 0] = -32767
+        payload, dc_t, ac_t = _encode(dc, ac, std_tables=False)
+        self._all(payload, n, dc_t, ac_t)
+
+    def test_dense_blocks(self):
+        # every AC slot nonzero: 64 units per block, the doubling's
+        # worst case (chains must terminate by crossing, never EOB)
+        n = 6
+        rng = np.random.default_rng(4)
+        ac = rng.integers(1, 500, (n, 63))
+        payload, dc_t, ac_t = _encode(rng.integers(-500, 500, n), ac)
+        self._all(payload, n, dc_t, ac_t)
+
+    def test_tile_boundary_straddles(self):
+        # blocks whose codewords straddle resolver tile boundaries in
+        # every phase: tiny tiles shift the boundary through the chain
+        rng = np.random.default_rng(5)
+        dc, ac = _random_blocks(rng, 50)
+        payload, dc_t, ac_t = _encode(dc, ac)
+        self._all(payload, 50, dc_t, ac_t,
+                  tile_sizes=(1, 2, 3, 5, 8, 13, 31, 64, 257))
+
+    def test_truncated_streams_rejected_identically(self):
+        rng = np.random.default_rng(6)
+        dc, ac = _random_blocks(rng, 20)
+        payload, dc_t, ac_t = _encode(dc, ac)
+
+        def result(fn):
+            try:
+                dc_o, ac_o = fn()
+                return ("ok", dc_o.tobytes(), ac_o.tobytes())
+            except (bitio.TruncatedStream, ValueError) as e:
+                return (type(e).__name__, str(e))
+
+        for cut in (0, 1, 2, len(payload) // 2, len(payload) - 1):
+            want = result(lambda: rle.decode_payload(
+                payload[:cut], 20, dc_t, ac_t))
+            for fn in (
+                    lambda: unpack_ref.unpack_bits_ref(
+                        payload[:cut], 20, dc_t, ac_t),
+                    lambda: unpack_ref.unpack_bits_ref(
+                        payload[:cut], 20, dc_t, ac_t, tile_bits=17),
+                    lambda: unpack_bits.unpack_bits(
+                        payload[:cut], 20, dc_t, ac_t, backend="pallas",
+                        interpret=True)):
+                assert result(fn) == want
+        # over-claimed block count walks into the 1-padding: same error
+        want = result(lambda: rle.decode_payload(payload, 21, dc_t, ac_t))
+        got = result(lambda: unpack_bits.unpack_bits(
+            payload, 21, dc_t, ac_t, backend="pallas", interpret=True))
+        assert got == want and want[0] != "ok"
+
+    def test_out_of_spec_dc_table_rejected(self):
+        # a "DC" table coding symbol 16 is not a magnitude-category
+        # alphabet; every backend rejects it up front like the walk
+        bad_dc = huffman.build_table(
+            np.bincount([0, 1, 16, 16], minlength=17))
+        ac_t = huffman.STANDARD_AC_LUMA
+        for fn in (rle.decode_payload, unpack_ref.unpack_bits_ref,
+                   lambda *a: unpack_bits.unpack_bits(
+                       *a, backend="pallas", interpret=True)):
+            with pytest.raises(ValueError, match="magnitude-category"):
+                fn(b"\x00", 1, bad_dc, ac_t)
+
+    def test_oversize_stream_falls_back_to_reference(self, monkeypatch):
+        # payloads past the VMEM guard must quietly take the NumPy path
+        from repro.kernels.unpack_bits import ops
+        monkeypatch.setattr(ops, "MAX_DEVICE_BITS", 64)
+        rng = np.random.default_rng(7)
+        dc, ac = _random_blocks(rng, 30)
+        payload, dc_t, ac_t = _encode(dc, ac)
+        assert len(payload) * 8 > 64
+        want = rle.decode_payload_reference(payload, 30, dc_t, ac_t)
+        got = unpack_bits.unpack_bits(payload, 30, dc_t, ac_t,
+                                      backend="pallas", interpret=True)
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])
+
+    def test_backend_selection(self):
+        # off-TPU "auto" resolves to the NumPy reference
+        assert unpack_bits.select_backend("auto") in unpack_bits.BACKENDS
+        if jax.default_backend() != "tpu":
+            assert unpack_bits.select_backend("auto") == "numpy"
+            assert unpack_bits.make_unpacker("auto") is None
+        assert unpack_bits.make_unpacker("pallas") is not None
+        with pytest.raises(ValueError, match="backend"):
+            unpack_bits.select_backend("cuda")
+
+    def test_scratch_is_bounded_by_tile_not_payload(self):
+        # the staged decoder's memory claim: scratch saturates at one
+        # tile + margin while the LUT walk's tables keep growing
+        one_tile = unpack_ref.scratch_nbytes(unpack_ref.TILE_BITS)
+        assert unpack_ref.scratch_nbytes(64 * unpack_ref.TILE_BITS) \
+            == unpack_ref.scratch_nbytes(8 * unpack_ref.TILE_BITS)
+        assert unpack_ref.scratch_nbytes(1 << 22) < 2 * one_tile
+        assert rle.walk_table_nbytes(1 << 24) > \
+            3 * rle.walk_table_nbytes(1 << 22)
+
+
+class TestUnpackThroughContainer:
+    def test_golden_fixtures_identical_across_backends(self):
+        from repro.core import entropy
+        for f in sorted(DATA_DIR.glob("*.dctz")):
+            data = f.read_bytes()
+            z0, h0 = entropy.decode_zigzag_host(data)
+            for up in (unpack_bits.make_unpacker("pallas", interpret=True),
+                       lambda *a: unpack_bits.unpack_bits(
+                           *a, backend="numpy")):
+                z1, h1 = entropy.decode_zigzag_host(data, unpacker=up)
+                np.testing.assert_array_equal(z0, z1, err_msg=f.name)
+                assert h0 == h1
+
+    def test_decode_image_with_unpacker(self):
+        from repro.core import entropy, images
+        img = np.asarray(images.lena_like(48, 56))
+        blob = entropy.encode_image(img, quality=50)
+        base = np.asarray(entropy.decode_image(blob))
+        routed = np.asarray(entropy.decode_image(
+            blob, unpacker=unpack_bits.make_unpacker("pallas",
+                                                     interpret=True)))
+        np.testing.assert_array_equal(base, routed)
