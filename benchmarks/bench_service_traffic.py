@@ -1,0 +1,71 @@
+"""Closed-loop service traffic — thin entrypoint over ``repro.bench``.
+
+The traffic generator itself is
+:func:`repro.bench.cases.service_traffic_points` (shared with the
+``service_traffic`` registry case that feeds RESULTS.md); this script
+keeps the stdout summary interface and the ``--check`` CI gate, which
+exits nonzero on any :func:`traffic_conservation_violations` finding
+(a request without exactly one terminal outcome, or an occupancy
+histogram that fails to account for the served count).
+
+    PYTHONPATH=src python benchmarks/bench_service_traffic.py
+    PYTHONPATH=src python benchmarks/bench_service_traffic.py \
+        --size 48 --requests 60 --loads 0.5 1.0 2.0 --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.bench.cases import (service_traffic_points,
+                               traffic_conservation_violations)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=48,
+                    help="base square image side for the mixed-size pool")
+    ap.add_argument("--requests", type=int, default=60,
+                    help="requests per offered-load level")
+    ap.add_argument("--loads", type=float, nargs="+",
+                    default=(0.5, 1.0, 2.0),
+                    help="offered loads as multiples of calibrated "
+                         "engine capacity")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any outcome-conservation or "
+                         "occupancy-accounting violation")
+    args = ap.parse_args()
+
+    print(f"# backend={jax.default_backend()} "
+          f"devices={jax.local_device_count()} size={args.size} "
+          f"requests={args.requests}")
+    records = service_traffic_points(args.size, args.requests,
+                                     tuple(args.loads),
+                                     max_batch=args.max_batch,
+                                     seed=args.seed)
+    print("load,p50_ms,p99_ms,goodput_rps,reject_rate,served,"
+          "deadline_missed,cache_hit_rate,mean_batch_occupancy")
+    for r in records:
+        m = r.metrics
+        print(f"{r.params['offered_load']:g},{m['p50_ms']:.2f},"
+              f"{m['p99_ms']:.2f},{m['goodput_rps']:.1f},"
+              f"{m['reject_rate']:.3f},{m['served']:.0f},"
+              f"{m['deadline_missed']:.0f},{m['cache_hit_rate']:.3f},"
+              f"{m['mean_batch_occupancy']:.2f}")
+
+    if args.check:
+        violations = traffic_conservation_violations(records)
+        if violations:
+            for v in violations:
+                print(f"VIOLATION: {v}", file=sys.stderr)
+            raise SystemExit(1)
+        print("# conservation: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -842,6 +842,204 @@ def serve_ragged(ctx: RunContext) -> list:
                  "img_per_s": len(imgs) / (t.median_us / 1e6)})]
 
 
+SERVICE_TRAFFIC_GRID = {
+    "smoke": {"size": 48, "n_requests": 60, "loads": (0.5, 1.0, 2.0)},
+    "paper": {"size": 64, "n_requests": 150, "loads": (0.5, 1.0, 2.0)},
+    "full": {"size": 64, "n_requests": 300,
+             "loads": (0.25, 0.5, 1.0, 2.0, 4.0)},
+}
+
+TRAFFIC_QUALITIES = (30, 75)
+
+
+def _traffic_pool(size: int, variants: int = 6) -> list:
+    """Mixed-size image pool; reuse across requests exercises the cache."""
+    pool = []
+    for i in range(variants):
+        gen = images.lena_like if i % 2 == 0 else images.cablecar_like
+        h = size - 8 * (i % 2)
+        w = size - 6 * (i % 3)
+        pool.append(np.asarray(gen(h, w, seed=i)))
+    return pool
+
+
+def calibrate_service_step(pool, max_batch: int) -> float:
+    """Measured seconds for one full engine batch (per-level capacity).
+
+    Warms every (shape bucket, quality) combination the traffic will
+    hit (compile time must not pollute latency percentiles), then times
+    a full ``max_batch`` encode — the model step the offered-load
+    multiples are expressed against.
+    """
+    from repro.serve import codec_engine
+    # adaptive batching can dispatch ANY batch size 1..max_batch, and
+    # first calls at a new size still compile (beyond the engine's pow2
+    # batch padding, the entropy edge specialises further) — a cold
+    # compile landing in the bucket EWMA would poison admission for the
+    # whole run, so warm every (size, quality) combination
+    for b in range(1, max_batch + 1):
+        batch = [pool[i % len(pool)] for i in range(b)]
+        for q in TRAFFIC_QUALITIES:
+            codec_engine.encode_batch(batch, q)
+    batch = [pool[i % len(pool)] for i in range(max_batch)]
+    t0 = time.perf_counter()
+    codec_engine.encode_batch(batch, TRAFFIC_QUALITIES[0])
+    return time.perf_counter() - t0
+
+
+def service_traffic_points(size: int, n_requests: int, loads,
+                           max_batch: int = 8, seed: int = 0) -> list:
+    """Closed-loop Poisson traffic through :class:`CodecService`.
+
+    For each offered-load level (a multiple of the measured engine
+    capacity ``max_batch / step_s``), a fresh service is driven with
+    ``n_requests`` Poisson arrivals of mixed sizes and qualities under
+    a deadline of ``8 x step_s``, and the record reports the SLO view:
+    p50/p99 client latency, goodput (served within deadline per
+    second), reject rate by admission reason, cache hit rate, and the
+    batch-occupancy histogram (how full dispatched engine batches ran).
+
+    Shared by the ``service_traffic`` registry case and
+    ``benchmarks/bench_service_traffic.py`` (whose ``--check`` gates
+    outcome conservation in CI).
+    """
+    import asyncio
+
+    from repro.serve.admission import RejectedError
+    from repro.serve.service import (CodecService, EngineFailure,
+                                     ServiceConfig)
+
+    pool = _traffic_pool(size)
+    step_s = calibrate_service_step(pool, max_batch)
+    capacity_rps = max_batch / step_s
+    deadline_s = 8 * step_s
+    cfg_kw = dict(max_batch=max_batch,
+                  max_wait_s=min(max(step_s / 2, 0.001), 0.05),
+                  max_queue_depth=4 * max_batch,
+                  initial_step_s=step_s,
+                  default_deadline_s=deadline_s)
+
+    async def run_level(offered_rps: float, rng) -> tuple:
+        arrivals = np.cumsum(rng.exponential(1.0 / offered_rps,
+                                             n_requests))
+        outcomes: list = []
+
+        async def one(at: float, img, quality: int):
+            await asyncio.sleep(at)
+            t0 = time.perf_counter()
+            try:
+                resp = await svc.submit(img, quality=quality)
+                outcomes.append(("served", time.perf_counter() - t0,
+                                 resp.deadline_missed, resp.cache_hit))
+            except RejectedError as exc:
+                outcomes.append((f"rejected:{exc.reason}",
+                                 time.perf_counter() - t0, False, False))
+            except EngineFailure:
+                outcomes.append(("failed", time.perf_counter() - t0,
+                                 False, False))
+
+        async with CodecService(ServiceConfig(**cfg_kw)) as svc:
+            t_start = time.perf_counter()
+            await asyncio.gather(*[
+                one(float(arrivals[i]),
+                    pool[int(rng.integers(len(pool)))],
+                    TRAFFIC_QUALITIES[int(rng.integers(
+                        len(TRAFFIC_QUALITIES)))])
+                for i in range(n_requests)])
+            makespan = time.perf_counter() - t_start
+        return outcomes, makespan, svc.stats
+
+    records = []
+    for load in loads:
+        rng = np.random.default_rng(seed)
+        offered = load * capacity_rps
+        outcomes, makespan, stats = asyncio.run(run_level(offered, rng))
+        served = [o for o in outcomes if o[0] == "served"]
+        lat_ms = sorted(o[1] * 1e3 for o in served)
+        in_deadline = sum(1 for o in served if not o[2])
+        rejects = [o for o in outcomes if o[0].startswith("rejected:")]
+
+        def pct(p):
+            if not lat_ms:
+                return float("nan")
+            return lat_ms[min(len(lat_ms) - 1,
+                              round(p / 100 * (len(lat_ms) - 1)))]
+
+        records.append(BenchRecord(
+            label=f"load_{load:g}x",
+            params={"offered_load": load, "offered_rps": offered,
+                    "capacity_rps": capacity_rps,
+                    "step_ms": step_s * 1e3,
+                    "deadline_ms": deadline_s * 1e3,
+                    "n_requests": n_requests, "size": size,
+                    "max_batch": max_batch,
+                    "qualities": list(TRAFFIC_QUALITIES),
+                    "occupancy": {str(k): v for k, v in
+                                  sorted(stats.occupancy.items())},
+                    "rejected_by_reason": dict(stats.rejected)},
+            metrics={
+                "p50_ms": pct(50),
+                "p99_ms": pct(99),
+                "goodput_rps": in_deadline / makespan,
+                "reject_rate": len(rejects) / n_requests,
+                "served": float(len(served)),
+                "deadline_missed": float(stats.deadline_missed),
+                "failed": float(stats.failed),
+                "cache_hit_rate": (sum(1 for o in served if o[3])
+                                   / max(len(served), 1)),
+                "mean_batch_occupancy": (
+                    sum(k * v for k, v in stats.occupancy.items())
+                    / max(sum(stats.occupancy.values()), 1)),
+            }))
+    return records
+
+
+def traffic_conservation_violations(records) -> list:
+    """CI-gate checks for ``service_traffic`` records.
+
+    Every offered request must reach exactly one terminal outcome
+    (served + rejected + failed == n_requests — the bench completing at
+    all already rules out a dispatch deadlock), and the occupancy
+    histogram must account for every non-cache-hit served request.
+
+    Returns:
+        Human-readable violation strings (empty == gate passes).
+    """
+    out = []
+    for rec in records:
+        n = rec.params["n_requests"]
+        served = rec.metrics["served"]
+        rejected = rec.metrics["reject_rate"] * n
+        failed = rec.metrics["failed"]
+        total = served + rejected + failed
+        if abs(total - n) > 1e-6:
+            out.append(f"{rec.label}: {total:g} outcomes for {n} "
+                       f"requests (served {served:g} + rejected "
+                       f"{rejected:g} + failed {failed:g})")
+        occ = sum(int(k) * v for k, v in
+                  rec.params["occupancy"].items())
+        hits = round(rec.metrics["cache_hit_rate"] * max(served, 1))
+        if occ + hits + failed < served:
+            out.append(f"{rec.label}: occupancy accounts for {occ} "
+                       f"requests + {hits} cache hits < {served:g} "
+                       f"served")
+    return out
+
+
+@benchmark("service_traffic", suites=("smoke", "paper", "full"),
+           description="closed-loop Poisson traffic through the async "
+                       "service: p50/p99 latency, goodput, reject rate")
+def service_traffic(ctx: RunContext) -> list:
+    """The serving SLO view the straight-line benches cannot give:
+    latency percentiles, goodput and shed load at offered loads below,
+    at, and above the engine's measured capacity, through the
+    deadline-aware batching service (docs/serving.md)."""
+    grid = SERVICE_TRAFFIC_GRID.get(ctx.suite,
+                                    SERVICE_TRAFFIC_GRID["paper"])
+    return service_traffic_points(grid["size"], grid["n_requests"],
+                                  grid["loads"])
+
+
 # ---------------------------------------------------------------------------
 # Framework micro-benches (suite "micro"; also in --full runs)
 # ---------------------------------------------------------------------------

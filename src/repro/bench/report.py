@@ -18,6 +18,7 @@ entropy_throughput        Entropy throughput (vectorized host coding)
 entropy_decode            Entropy decode (speculative unpack backends)
 serve_batch_throughput    Batch throughput curve (serving engine)
 serve_ragged              Ragged mixed-size batches (serving engine)
+service_traffic           Closed-loop service traffic (async service)
 framework_micro           Framework micro-benches
 ========================  =========================================
 """
@@ -197,6 +198,34 @@ def _ragged_table(result) -> str:
     return "\n".join(lines)
 
 
+def _service_traffic_table(result) -> str:
+    p0 = result.records[0].params
+    lines = ["## Closed-loop service traffic (async batching service)", "",
+             "Poisson arrivals through the deadline-aware batching "
+             f"service ({p0['n_requests']} requests per level, "
+             f"{p0['size']}px image pool, per-request deadline "
+             f"{p0['deadline_ms']:.0f} ms, max_batch {p0['max_batch']}). "
+             "Offered load is a multiple of the engine's calibrated "
+             f"capacity ({p0['capacity_rps']:.0f} req/s); below capacity "
+             "the service batches for latency, above it the admission "
+             "bound and deadline sweep shed load instead of queueing "
+             "without bound (docs/serving.md).", "",
+             "| offered load | p50 (ms) | p99 (ms) | goodput (req/s) "
+             "| rejected | late | cache hits | mean batch |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in result.records:
+        m = r.metrics
+        lines.append(
+            f"| {r.params['offered_load']:g}x "
+            f"| {m['p50_ms']:.1f} | {m['p99_ms']:.1f} "
+            f"| {m['goodput_rps']:.0f} "
+            f"| {m['reject_rate'] * 100:.0f}% "
+            f"| {m['deadline_missed']:.0f} "
+            f"| {m['cache_hit_rate'] * 100:.0f}% "
+            f"| {m['mean_batch_occupancy']:.1f} |")
+    return "\n".join(lines)
+
+
 def _micro_table(result) -> str:
     lines = ["## Framework micro-benches", "",
              "| bench | time (ms) | derived |",
@@ -237,6 +266,7 @@ _SECTIONS = (
     ("entropy_decode", None),
     ("serve_batch_throughput", None),
     ("serve_ragged", None),
+    ("service_traffic", None),
     ("framework_micro", None),
 )
 
@@ -294,6 +324,8 @@ def render(results) -> str:
             parts.append(_throughput_table(result))
         elif name == "serve_ragged":
             parts.append(_ragged_table(result))
+        elif name == "service_traffic":
+            parts.append(_service_traffic_table(result))
         elif name == "framework_micro":
             parts.append(_micro_table(result))
     extra = sorted(set(by_name) - {n for n, _ in _SECTIONS})

@@ -300,6 +300,16 @@ _SENTINEL = _VAL_BIAS      # ctrl -2, adv 0, val 0
 # ndarray so decode memory stays at 8 bytes per bit position per table
 _WALK_LIST_MAX_BITS = 1 << 20
 
+# payloads above this many bits are routed to the staged decoder
+# (:func:`repro.kernels.unpack_bits.unpack_bits`, which selects its own
+# backend) when :func:`decode_payload` is called without an ``unpacker``:
+# the LUT walk's tables grow linearly with the payload
+# (:func:`walk_table_nbytes` — ~16 B/bit across both alphabets on the
+# ndarray branch) while the staged decoder's scratch is bounded per tile
+# (:func:`repro.kernels.unpack_bits.ref.scratch_nbytes`), so a 100 MB
+# payload costs ~13 GB of walk tables but < 3 MB of staged scratch
+_ROUTED_DECODE_MIN_BITS = _WALK_LIST_MAX_BITS
+
 
 def _decode_table(win: np.ndarray, nbits: int,
                   table: huffman.CanonicalTable):
@@ -359,6 +369,21 @@ def _decode_table(win: np.ndarray, nbits: int,
     return packed
 
 
+def _staged_unpacker():
+    """The routed staged decoder, or ``None`` without the kernels layer.
+
+    Lazy so :mod:`repro.core.entropy` itself stays importable (and
+    cheap) without jax — the import only runs for payloads above
+    :data:`_ROUTED_DECODE_MIN_BITS`, and a missing/broken kernels layer
+    falls back to the linear-memory ndarray walk rather than failing.
+    """
+    try:
+        from repro.kernels import unpack_bits
+    except Exception:       # pragma: no cover - kernels layer optional
+        return None
+    return unpack_bits.unpack_bits
+
+
 def walk_table_nbytes(nbits: int) -> int:
     """Approximate resident bytes of both LUT-walk decode tables.
 
@@ -401,7 +426,11 @@ def decode_payload(payload: bytes, n_blocks: int,
         unpacker: optional ``(payload, n_blocks, dc_table, ac_table) ->
             (dc_diff, ac)`` callable replacing the whole decode, e.g.
             the routed :func:`repro.kernels.unpack_bits.unpack_bits`;
-            ``None`` keeps the zero-indirection LUT walk below.  Any
+            ``None`` keeps the zero-indirection LUT walk below for
+            payloads up to :data:`_ROUTED_DECODE_MIN_BITS` bits and
+            routes larger ones to the staged decoder itself (the walk
+            tables grow linearly with the payload; the staged scratch
+            is bounded per tile).  Any
             unpacker must honour this function's full contract —
             values *and* errors (CI-gated by ``bench_entropy_throughput
             --check-identical``).
@@ -422,6 +451,13 @@ def decode_payload(payload: bytes, n_blocks: int,
             f"DC table codes symbol {max(dc_table.symbols)} > "
             f"{MAX_CATEGORY}: not a magnitude-category alphabet")
     nbits = len(payload) * 8
+    if nbits > _ROUTED_DECODE_MIN_BITS:
+        # the walk tables below would cost ~16 B per payload bit; route
+        # big payloads to the staged decoder's bounded per-tile scratch
+        # (it picks its own backend via unpack_bits.select_backend)
+        unpack = _staged_unpacker()
+        if unpack is not None:
+            return unpack(payload, n_blocks, dc_table, ac_table)
     win = bitio.bit_windows(payload)
     dc_tab = _decode_table(win, nbits, dc_table)
     ac_tab = _decode_table(win, nbits, ac_table)

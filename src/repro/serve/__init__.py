@@ -1,1 +1,14 @@
-"""serve substrate."""
+"""Serving layer: batched codec engine + async front end.
+
+* :mod:`repro.serve.codec_engine` — batched/multi-device encode and
+  decode over the core codec (shape buckets, pipelined entropy edge,
+  device-routed pack/unpack).
+* :mod:`repro.serve.service` — asyncio :class:`~repro.serve.service.
+  CodecService` with deadline-aware adaptive batching, bounded-queue
+  backpressure, per-tenant quality tiers and a hot-stream cache.
+* :mod:`repro.serve.queueing` / :mod:`repro.serve.admission` — the
+  jax-free planner core (per-bucket FIFO queues, dispatch triggers,
+  admission control) the property-test suite drives directly.
+
+See docs/serving.md for the serving semantics and SLO knobs.
+"""

@@ -1,0 +1,118 @@
+"""Admission control for the async codec service (jax-free).
+
+A request is *admitted* when it enters a bucket queue, and every
+admitted request gets exactly one terminal outcome later (a response or
+a reject).  This module holds the pieces that decide the other branch —
+requests that never enter a queue, or are swept out of one:
+
+* :class:`RejectedError` — the one exception type clients see for every
+  load-shedding decision, tagged with a machine-readable ``reason``
+  (:data:`QUEUE_FULL`, :data:`DEADLINE_UNMEETABLE`, :data:`SHUTDOWN`),
+* :class:`TenantTier` — per-tenant quality/deadline policy (a "free"
+  tier encodes at a capped quality; a "gold" tier keeps what it asked
+  for),
+* the feasibility predicates (:func:`feasible`, :func:`urgent`) the
+  batch planner uses to decide when a queued request's deadline is
+  about to expire (dispatch now) versus knowingly unmeetable (reject,
+  never dispatch).
+
+Everything here is pure stdlib so the property tests can drive
+thousands of synthetic schedules without importing jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+#: Reject reasons (``RejectedError.reason``).
+QUEUE_FULL = "queue_full"               # bounded-queue backpressure
+DEADLINE_UNMEETABLE = "deadline_unmeetable"   # could not/cannot make SLO
+SHUTDOWN = "shutdown"                   # service draining or closed
+
+REASONS = (QUEUE_FULL, DEADLINE_UNMEETABLE, SHUTDOWN)
+
+
+class RejectedError(RuntimeError):
+    """A request the service refused to serve (admission control).
+
+    Attributes:
+        reason: one of :data:`REASONS` — why the request was shed.
+        detail: human-readable context (queue depth, deadline math).
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        if reason not in REASONS:
+            raise ValueError(f"unknown reject reason {reason!r}; "
+                             f"expected one of {REASONS}")
+        self.reason = reason
+        self.detail = detail
+        super().__init__(f"rejected ({reason})" + (f": {detail}"
+                                                   if detail else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantTier:
+    """Quality-of-service envelope for one tenant class.
+
+    Attributes:
+        max_quality: requested JPEG quality is clamped to this (paying
+            tiers keep high quality; free tiers encode cheaper/smaller).
+        min_deadline_s: tightest relative deadline the tier may demand;
+            tighter requests are relaxed up to this floor (None = any).
+    """
+    max_quality: int = 100
+    min_deadline_s: float | None = None
+
+    def resolve_quality(self, quality: int) -> int:
+        """Clamp a requested quality into the tier's envelope."""
+        if not 1 <= quality <= 100:
+            raise ValueError(f"quality must be in [1, 100], got {quality}")
+        return min(quality, self.max_quality)
+
+    def resolve_deadline_s(self, deadline_s: float | None) -> float:
+        """Relative deadline after tier policy (``inf`` = no deadline)."""
+        if deadline_s is None:
+            return math.inf
+        if deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, "
+                             f"got {deadline_s}")
+        if self.min_deadline_s is not None:
+            return max(deadline_s, self.min_deadline_s)
+        return deadline_s
+
+
+def feasible(deadline: float, now: float, step_s: float) -> bool:
+    """Could a request dispatched *right now* still meet its deadline?
+
+    ``step_s`` is the planner's current estimate of one model step
+    (batch encode) for the request's bucket.  A request that fails this
+    is *knowingly unmeetable*: dispatching it would burn a batch slot on
+    work whose SLO is already lost, so the planner rejects it instead —
+    the dispatch-loop invariant the property tests pin.
+    """
+    return now + step_s <= deadline
+
+
+def urgent(deadline: float, now: float, step_s: float,
+           safety: float) -> bool:
+    """Is a queued request's deadline about to expire?
+
+    True once ``now`` reaches ``deadline - safety * step_s`` — the
+    last moment (with ``safety`` margin over the EWMA step estimate) at
+    which dispatching still meets the deadline.  The planner dispatches
+    a partial batch rather than waiting out its batching timer when its
+    oldest request turns urgent.
+    """
+    return now >= deadline - safety * step_s
+
+
+def admission_deadline_ok(deadline: float, now: float, step_s: float,
+                          safety: float) -> bool:
+    """Admission-time feasibility: worth queueing at all?
+
+    Slightly stricter than :func:`feasible` (the ``safety`` margin
+    accounts for queueing ahead of the step itself) so hopeless
+    requests are shed at the door instead of occupying queue slots.
+    """
+    return now + safety * step_s <= deadline

@@ -1,0 +1,525 @@
+"""Async codec service: deadline-aware batching over the codec engine.
+
+The serving front end the ROADMAP's "millions of users" story needs:
+callers ``await service.submit(image, ...)`` and the service turns many
+concurrent single-image requests into the batched engine calls
+(:func:`repro.serve.codec_engine.encode_batch`) the hardware actually
+wants, while holding per-request SLOs:
+
+* requests queue per *(shape bucket, quality)* and dispatch when the
+  bucket fills, when the oldest request's deadline (minus a safety
+  multiple of the bucket's measured model-step EWMA) is about to
+  expire, or on a ``max_wait_s`` batching timer
+  (:class:`repro.serve.queueing.BatchPlanner`),
+* bounded queues give explicit backpressure — an overloaded service
+  raises :class:`repro.serve.admission.RejectedError` instead of
+  accepting work it cannot finish, and queued requests whose deadline
+  becomes unmeetable are rejected, never dispatched and never silently
+  dropped,
+* per-tenant :class:`repro.serve.admission.TenantTier` policies clamp
+  quality (and relax too-tight deadlines) before admission,
+* an LRU **hot-stream cache** keyed on ``(payload digest, quality,
+  tables)`` serves repeated images without touching the engine —
+  shared-table ``DCTZ`` streams are cheap to keep (no per-stream table
+  segment),
+* engine failures fail *only* the affected batch's requests (with
+  :class:`EngineFailure`) and the dispatch loop keeps serving — the
+  fault-injection suite drives this with a flaky engine wrapper.
+
+The planner half is synchronous and jax-free
+(:mod:`repro.serve.queueing`); this module adds the asyncio shell: one
+dispatcher task multiplexing queue timers, engine batches running in a
+(default single-worker) thread pool so the event loop never blocks on
+device work, and per-request futures carrying exactly one terminal
+outcome each.  See docs/serving.md for semantics and SLO knobs, and
+``bench/cases.py::service_traffic`` for the closed-loop load test that
+measures p50/p99 latency, goodput and reject rate through this layer.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import concurrent.futures
+import dataclasses
+import hashlib
+import math
+import time
+
+import numpy as np
+
+from repro.serve import admission, queueing
+from repro.serve.admission import RejectedError, TenantTier
+
+
+class EngineFailure(RuntimeError):
+    """The engine batch carrying this request raised; see ``__cause__``."""
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """SLO and batching knobs for :class:`CodecService`.
+
+    Attributes:
+        max_batch: engine batch size a bucket dispatches at.
+        max_wait_s: batching timer — max time the oldest queued request
+            waits for batchmates.
+        max_queue_depth: per-bucket queue bound (backpressure).
+        safety: EWMA multiple for deadline urgency/admission margins.
+        initial_step_s: model-step estimate before any measurement.
+        default_quality: quality when a request does not specify one.
+        default_deadline_s: relative deadline applied when a request
+            has none (None = requests without deadlines never expire).
+        cache_entries: LRU hot-stream cache capacity (0 disables).
+        transform: encoder transform for the default engine.
+        tables: Huffman table policy for the default engine (also part
+            of the cache key).
+        tenants: tenant name -> :class:`TenantTier` policy map.
+        default_tier: tier applied to unknown tenants.
+        engine_concurrency: worker threads running engine batches (1 =
+            strictly one model step at a time, the EWMA's assumption).
+        max_inflight_batches: dispatched-but-unfinished batch cap.
+            When the engine saturates, further requests stay queued —
+            where the depth bound rejects and the deadline sweep sheds
+            — instead of accumulating in an unbounded executor backlog
+            that would serve everything late and reject nothing.
+            Default 2: one batch encoding, one forming/waiting.
+        shape_bucket: shape-bucket granularity (keep at the engine's
+            :data:`repro.serve.codec_engine.SHAPE_BUCKET`).
+    """
+    max_batch: int = 8
+    max_wait_s: float = 0.010
+    max_queue_depth: int = 64
+    safety: float = 1.5
+    initial_step_s: float = 0.050
+    default_quality: int = 50
+    default_deadline_s: float | None = None
+    cache_entries: int = 256
+    transform: str = "exact"
+    tables: str = "auto"
+    tenants: dict = dataclasses.field(default_factory=dict)
+    default_tier: TenantTier = TenantTier()
+    engine_concurrency: int = 1
+    max_inflight_batches: int = 2
+    shape_bucket: int = queueing.DEFAULT_SHAPE_BUCKET
+
+    def tier(self, tenant: str) -> TenantTier:
+        """The tier serving ``tenant`` (unknown tenants get the default)."""
+        return self.tenants.get(tenant, self.default_tier)
+
+
+def default_engine(config: ServiceConfig):
+    """The production engine callable: batched entropy-coded encode.
+
+    Returns ``(images, quality) -> list[bytes]`` running
+    :func:`repro.serve.codec_engine.encode_batch` under the service's
+    transform/table policy.  Import is deferred so constructing a
+    service with a stub engine (tests, property suites) never pays for
+    jax.
+    """
+    from repro.serve import codec_engine
+
+    def encode(images, quality: int):
+        return codec_engine.encode_batch(
+            list(images), quality, transform=config.transform,
+            tables=config.tables)
+    return encode
+
+
+# ---------------------------------------------------------------------------
+# Responses, cache, stats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Response:
+    """Terminal success outcome of one :meth:`CodecService.submit`.
+
+    Attributes:
+        payload: the entropy-coded ``DCTZ`` stream.
+        quality: quality actually encoded at (post tenant tier).
+        latency_s: admission-to-completion wall time.
+        batch_size: engine batch the request rode in (0 = cache hit).
+        cache_hit: served from the hot-stream cache.
+        deadline_missed: completed, but after the request's deadline
+            (counts against goodput, not against delivery).
+        req_id: service-assigned id (-1 for cache hits, which never
+            enter a queue).
+    """
+    payload: bytes
+    quality: int
+    latency_s: float
+    batch_size: int
+    cache_hit: bool = False
+    deadline_missed: bool = False
+    req_id: int = -1
+
+
+class StreamCache:
+    """LRU cache of encoded streams keyed ``(digest, quality, tables)``."""
+
+    def __init__(self, entries: int):
+        self.entries = entries
+        self._data: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(image: np.ndarray, quality: int, tables: str) -> tuple:
+        """Cache key: content digest + the knobs that change the bytes."""
+        h = hashlib.sha1(image.tobytes())
+        h.update(repr((image.shape, str(image.dtype))).encode())
+        return (h.hexdigest(), quality, tables)
+
+    def get(self, key: tuple):
+        if self.entries <= 0:
+            return None
+        blob = self._data.get(key)
+        if blob is None:
+            self.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.hits += 1
+        return blob
+
+    def put(self, key: tuple, blob: bytes) -> None:
+        if self.entries <= 0:
+            return
+        self._data[key] = blob
+        self._data.move_to_end(key)
+        while len(self._data) > self.entries:
+            self._data.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+
+class ServiceStats:
+    """Counters the service maintains; snapshot with :meth:`snapshot`.
+
+    Attributes:
+        submitted: requests entering :meth:`CodecService.submit`.
+        served: requests that got a payload (cache hits included).
+        rejected: reject reason -> count.
+        failed: requests failed by an engine error.
+        engine_failures: engine batches that raised.
+        deadline_missed: served, but past the deadline.
+        occupancy: engine batch size -> dispatch count.
+        latencies_s: admission-to-completion times of served requests.
+    """
+
+    def __init__(self):
+        self.submitted = 0
+        self.served = 0
+        self.rejected: collections.Counter = collections.Counter()
+        self.failed = 0
+        self.engine_failures = 0
+        self.deadline_missed = 0
+        self.occupancy: collections.Counter = collections.Counter()
+        self.latencies_s: list = []
+
+    @property
+    def total_rejected(self) -> int:
+        return sum(self.rejected.values())
+
+    def latency_percentile(self, pct: float) -> float:
+        """Empirical latency percentile in seconds (nan when empty)."""
+        if not self.latencies_s:
+            return math.nan
+        xs = sorted(self.latencies_s)
+        i = min(len(xs) - 1, max(0, round(pct / 100 * (len(xs) - 1))))
+        return xs[i]
+
+    def snapshot(self) -> dict:
+        """JSON-friendly summary of every counter."""
+        return {
+            "submitted": self.submitted,
+            "served": self.served,
+            "rejected": dict(self.rejected),
+            "failed": self.failed,
+            "engine_failures": self.engine_failures,
+            "deadline_missed": self.deadline_missed,
+            "occupancy": {str(k): v for k, v
+                          in sorted(self.occupancy.items())},
+            "p50_latency_s": self.latency_percentile(50),
+            "p99_latency_s": self.latency_percentile(99),
+        }
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Service-side payload attached to each planner request."""
+    image: np.ndarray
+    cache_key: tuple
+    future: asyncio.Future
+
+
+# ---------------------------------------------------------------------------
+# The service
+# ---------------------------------------------------------------------------
+
+class CodecService:
+    """Asyncio front end turning concurrent submits into engine batches.
+
+    Use as an async context manager (or call :meth:`start` /
+    :meth:`close` explicitly)::
+
+        async with CodecService(ServiceConfig(max_batch=8)) as svc:
+            resp = await svc.submit(img, quality=75, tenant="gold",
+                                    deadline_s=0.25)
+            resp.payload    # DCTZ bytes
+
+    Every submit reaches exactly one terminal outcome: a
+    :class:`Response`, a :class:`RejectedError` (admission or queue
+    sweep), or an :class:`EngineFailure` (its batch's engine call
+    raised).  All planner state is touched only from the event loop;
+    engine batches run in a thread pool sized by
+    ``config.engine_concurrency``.
+
+    Args:
+        config: SLO/batching knobs (default :class:`ServiceConfig`).
+        engine: ``(images, quality) -> list[bytes]`` override; defaults
+            to :func:`default_engine` (the real codec engine).  Called
+            from worker threads — must be thread-compatible.
+        clock: monotonic time source (injectable for tests).
+    """
+
+    def __init__(self, config: ServiceConfig | None = None, *,
+                 engine=None, clock=time.monotonic):
+        self.config = config or ServiceConfig()
+        self._engine = engine if engine is not None else \
+            default_engine(self.config)
+        self._clock = clock
+        self._planner = queueing.BatchPlanner(
+            max_batch=self.config.max_batch,
+            max_wait_s=self.config.max_wait_s,
+            max_queue_depth=self.config.max_queue_depth,
+            safety=self.config.safety,
+            initial_step_s=self.config.initial_step_s,
+            bucket=self.config.shape_bucket)
+        self.stats = ServiceStats()
+        self.cache = StreamCache(self.config.cache_entries)
+        self._wake: asyncio.Event | None = None
+        self._dispatcher: asyncio.Task | None = None
+        self._inflight: set = set()
+        self._pool: concurrent.futures.ThreadPoolExecutor | None = None
+        self._draining = False
+        self._closed = False
+
+    # -- lifecycle --------------------------------------------------------
+
+    async def start(self) -> "CodecService":
+        """Start the dispatcher task; idempotent until :meth:`close`."""
+        if self._closed:
+            raise RuntimeError("service already closed")
+        if self._dispatcher is None:
+            self._wake = asyncio.Event()
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=max(1, self.config.engine_concurrency),
+                thread_name_prefix="codec-engine")
+            self._dispatcher = asyncio.get_running_loop().create_task(
+                self._dispatch_loop())
+        return self
+
+    async def close(self) -> None:
+        """Drain queues, finish in-flight batches, stop the dispatcher.
+
+        Every already-admitted request still gets its terminal outcome
+        (queues are drained as forced partial batches); new submits
+        raise ``RejectedError(reason="shutdown")``.
+        """
+        if self._closed:
+            return
+        self._draining = True
+        self._closed = True
+        if self._dispatcher is not None:
+            self._wake.set()
+            await self._dispatcher
+            while self._inflight:
+                await asyncio.gather(*list(self._inflight),
+                                     return_exceptions=True)
+            self._pool.shutdown(wait=True)
+            self._dispatcher = None
+
+    async def __aenter__(self) -> "CodecService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    # -- client API -------------------------------------------------------
+
+    async def submit(self, image, *, quality: int | None = None,
+                     tenant: str = "default",
+                     deadline_s: float | None = None) -> Response:
+        """Encode one image to a ``DCTZ`` stream under the service SLOs.
+
+        Args:
+            image: 2-D (H, W) uint8 array (anything ``np.asarray``
+                accepts).
+            quality: requested JPEG quality (default
+                ``config.default_quality``); clamped by the tenant tier.
+            tenant: tenant name — selects the
+                :class:`~repro.serve.admission.TenantTier` policy.
+            deadline_s: relative SLO; None uses
+                ``config.default_deadline_s`` (which may mean "none").
+
+        Returns:
+            A :class:`Response` (payload bytes + serving metadata).
+
+        Raises:
+            RejectedError: backpressure (``queue_full``), hopeless or
+                expired deadline (``deadline_unmeetable``), or a
+                closing service (``shutdown``).
+            EngineFailure: the engine batch carrying this request
+                raised; the original exception is ``__cause__``.
+        """
+        if self._dispatcher is None and not self._closed:
+            raise RuntimeError("service not started: use `async with "
+                               "CodecService(...)` or await start()")
+        self.stats.submitted += 1
+        if self._draining:
+            exc = RejectedError(admission.SHUTDOWN, "service closing")
+            self.stats.rejected[exc.reason] += 1
+            raise exc
+        image = np.asarray(image)
+        if image.ndim != 2:
+            raise ValueError(f"image must be 2-D (H, W), "
+                             f"got shape {image.shape}")
+        tier = self.config.tier(tenant)
+        q = tier.resolve_quality(quality if quality is not None
+                                 else self.config.default_quality)
+        rel_deadline = tier.resolve_deadline_s(
+            deadline_s if deadline_s is not None
+            else self.config.default_deadline_s)
+        now = self._clock()
+        key = StreamCache.key(image, q, self.config.tables)
+        blob = self.cache.get(key)
+        if blob is not None:
+            self.stats.served += 1
+            self.stats.latencies_s.append(self._clock() - now)
+            return Response(payload=blob, quality=q,
+                            latency_s=self._clock() - now, batch_size=0,
+                            cache_hit=True)
+        deadline = now + rel_deadline      # inf stays inf
+        future = asyncio.get_running_loop().create_future()
+        try:
+            req = self._planner.admit(
+                image.shape, q, tenant, now, deadline=deadline,
+                payload=_Entry(image=image, cache_key=key, future=future))
+        except RejectedError as exc:
+            self.stats.rejected[exc.reason] += 1
+            raise
+        self._wake.set()
+        return await future
+
+    # -- dispatcher -------------------------------------------------------
+
+    async def _dispatch_loop(self) -> None:
+        cap = max(1, self.config.max_inflight_batches)
+        while True:
+            # drop finished tasks here rather than trusting the
+            # done-callback: it runs a loop iteration *after* the task
+            # completes, and counting a done task against the cap when
+            # its completion wake-up was already consumed would leave
+            # the dispatcher sleeping with zero budget forever
+            self._inflight = {t for t in self._inflight
+                              if not t.done()}
+            budget = max(0, cap - len(self._inflight))
+            poll = self._planner.poll(
+                self._clock(), drain=self._draining,
+                max_batches=None if self._draining else budget)
+            for req, exc in poll.rejects:
+                self._finish_reject(req, exc)
+            for batch in poll.batches:
+                task = asyncio.get_running_loop().create_task(
+                    self._run_batch(batch))
+                self._inflight.add(task)
+                task.add_done_callback(self._inflight.discard)
+            if self._draining and self._planner.empty():
+                return
+            now = self._clock()
+            if len(self._inflight) < cap:
+                timeout = self._planner.next_wake(now)
+            else:
+                # dispatch is blocked on the in-flight cap: a batch
+                # completion sets the wake event; until then only the
+                # deadline sweep needs the clock
+                timeout = self._planner.next_sweep(now)
+            try:
+                await asyncio.wait_for(self._wake.wait(), timeout)
+            except asyncio.TimeoutError:
+                pass
+            self._wake.clear()
+
+    def _timed_engine_call(self, images, quality):
+        # runs in the worker thread: time the engine call itself, not
+        # the executor queue wait, so the EWMA tracks the model step
+        t0 = self._clock()
+        blobs = self._engine(images, quality)
+        return blobs, self._clock() - t0
+
+    async def _run_batch(self, batch: queueing.Batch) -> None:
+        try:
+            await self._run_batch_inner(batch)
+        finally:
+            # a completed batch frees an in-flight slot: wake the
+            # dispatcher so blocked queues dispatch immediately
+            self._wake.set()
+
+    async def _run_batch_inner(self, batch: queueing.Batch) -> None:
+        requests = batch.requests
+        images = [r.payload.image for r in requests]
+        quality = batch.key[1]
+        try:
+            blobs, step_s = await asyncio.get_running_loop() \
+                .run_in_executor(self._pool, self._timed_engine_call,
+                                 images, quality)
+            self._planner.observe_step(batch.key, step_s)
+            if len(blobs) != len(requests):
+                raise RuntimeError(
+                    f"engine returned {len(blobs)} streams for "
+                    f"{len(requests)} images")
+        except Exception as exc:     # noqa: BLE001 - isolate the batch
+            self.stats.engine_failures += 1
+            for r in requests:
+                self.stats.failed += 1
+                fut = r.payload.future
+                if not fut.done():
+                    err = EngineFailure(
+                        f"engine batch of {len(requests)} failed")
+                    err.__cause__ = exc
+                    fut.set_exception(err)
+            return
+        end = self._clock()
+        self.stats.occupancy[len(requests)] += 1
+        for r, blob in zip(requests, blobs):
+            entry = r.payload
+            self.cache.put(entry.cache_key, blob)
+            latency = end - r.arrival
+            missed = end > r.deadline
+            self.stats.served += 1
+            self.stats.latencies_s.append(latency)
+            if missed:
+                self.stats.deadline_missed += 1
+            if not entry.future.done():
+                entry.future.set_result(Response(
+                    payload=blob, quality=r.quality, latency_s=latency,
+                    batch_size=len(requests), deadline_missed=missed,
+                    req_id=r.req_id))
+
+    def _finish_reject(self, req: queueing.Request,
+                       exc: RejectedError) -> None:
+        self.stats.rejected[exc.reason] += 1
+        fut = req.payload.future
+        if not fut.done():
+            fut.set_exception(exc)
+
+    # -- introspection ----------------------------------------------------
+
+    def queue_depth(self) -> int:
+        """Requests currently queued (excludes in-flight batches)."""
+        return self._planner.total_depth()

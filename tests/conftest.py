@@ -73,6 +73,10 @@ def pytest_configure(config):
         "markers",
         "multidevice: needs jax.device_count() >= 2 (CI emulates 8 via "
         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running stress tests; excluded from the tier-1 run "
+        "(pytest -m 'not slow') and run in the bench-smoke CI job")
 
 
 def pytest_collection_modifyitems(config, items):

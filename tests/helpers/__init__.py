@@ -1,0 +1,1 @@
+"""Shared test fixtures and fault-injection harnesses."""

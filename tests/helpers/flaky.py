@@ -1,0 +1,113 @@
+"""Fault-injection engine wrappers for the serving-layer tests.
+
+:class:`FlakyEngine` wraps any service engine callable (``(images,
+quality) -> list[bytes]``; e.g. the real
+:func:`repro.serve.service.default_engine` or the cheap
+:class:`EchoEngine`) and injects configurable faults *around* the call:
+
+* **failures** — raise on chosen call indices (``fail_calls``) or with
+  a seeded probability (``fail_rate``), with a configurable exception
+  type,
+* **latency** — sleep before delegating (``latency_s``), either on
+  every call or only on chosen indices (``slow_calls``),
+* **short returns** — drop streams from the result
+  (``short_return_calls``) to exercise the service's
+  wrong-batch-length check.
+
+Every call is recorded in :attr:`FlakyEngine.calls` as ``(n_images,
+quality)`` so tests can assert batching behaviour (occupancy, retries
+absent, etc.).  The wrapper is deliberately synchronous — it runs in
+the service's engine thread pool exactly like the real engine.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import random
+import threading
+import time
+
+
+class InjectedEngineError(RuntimeError):
+    """Default fault raised by :class:`FlakyEngine`."""
+
+
+class EchoEngine:
+    """Deterministic stand-in engine: digest-derived bytes per image.
+
+    Encodes nothing, but keeps the properties tests rely on: output is
+    a pure function of (image bytes, shape, quality), so "same request
+    twice -> same payload" and cache-identity assertions hold without
+    paying for the real codec.
+    """
+
+    def __init__(self, step_s: float = 0.0):
+        self.step_s = step_s
+        self.calls: list = []
+        self._lock = threading.Lock()
+
+    def __call__(self, images, quality: int):
+        with self._lock:
+            self.calls.append((len(images), quality))
+        if self.step_s:
+            time.sleep(self.step_s)
+        out = []
+        for im in images:
+            h = hashlib.sha1(im.tobytes())
+            h.update(repr((im.shape, quality)).encode())
+            out.append(h.digest())
+        return out
+
+
+class FlakyEngine:
+    """Configurable failure/latency injection around an engine callable.
+
+    Args:
+        inner: the wrapped engine callable.
+        fail_calls: 0-based call indices that raise instead of encoding.
+        fail_rate: probability in [0, 1] that any call raises (seeded).
+        latency_s: sleep this long before each delegated call.
+        slow_calls: if given, ``latency_s`` applies only to these call
+            indices (others run at full speed).
+        short_return_calls: call indices whose result drops its last
+            stream (simulates an engine returning too few payloads).
+        exc_type: exception class for injected failures.
+        seed: RNG seed for ``fail_rate`` draws.
+    """
+
+    def __init__(self, inner, *, fail_calls=(), fail_rate: float = 0.0,
+                 latency_s: float = 0.0, slow_calls=None,
+                 short_return_calls=(), exc_type=InjectedEngineError,
+                 seed: int = 0):
+        self.inner = inner
+        self.fail_calls = frozenset(fail_calls)
+        self.fail_rate = fail_rate
+        self.latency_s = latency_s
+        self.slow_calls = (None if slow_calls is None
+                           else frozenset(slow_calls))
+        self.short_return_calls = frozenset(short_return_calls)
+        self.exc_type = exc_type
+        self.calls: list = []
+        self.failures = 0
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def __call__(self, images, quality: int):
+        with self._lock:
+            idx = len(self.calls)
+            self.calls.append((len(images), quality))
+            fail = (idx in self.fail_calls
+                    or (self.fail_rate > 0
+                        and self._rng.random() < self.fail_rate))
+            if fail:
+                self.failures += 1
+        slow = self.latency_s and (self.slow_calls is None
+                                   or idx in self.slow_calls)
+        if slow:
+            time.sleep(self.latency_s)
+        if fail:
+            raise self.exc_type(f"injected failure on engine call {idx}")
+        out = self.inner(images, quality)
+        if idx in self.short_return_calls:
+            out = out[:-1]
+        return out

@@ -1,0 +1,391 @@
+"""Planner/admission unit tests + hypothesis-driven batching invariants.
+
+The serving layer's correctness case rests on four dispatch-loop
+invariants, pinned here against randomized request schedules (arrival
+times, deadlines, shapes, qualities):
+
+1. **no knowingly-unmeetable dispatch** — a request whose deadline the
+   current step estimate rules out is rejected, never dispatched,
+2. **FIFO within a bucket** — dispatch order preserves admission order
+   per (shape bucket, quality) queue,
+3. **bounded depth** — per-bucket queue depth never exceeds
+   ``max_queue_depth``; overflow raises ``RejectedError(queue_full)``,
+4. **conservation** — every admitted request reaches exactly one
+   terminal outcome (dispatched or rejected); a drain poll leaves
+   nothing queued.
+
+The planner is jax-free, so these run thousands of synthetic schedules
+in milliseconds (under the hermetic hypothesis stub they replay seeded
+examples; with real hypothesis they search).
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve import admission, queueing
+from repro.serve.admission import RejectedError, TenantTier
+from repro.serve.queueing import BatchPlanner, Ewma, shape_bucket
+
+QUALITIES = (30, 50, 75)
+SHAPES = ((48, 48), (48, 64), (100, 80), (130, 130))
+
+
+# ---------------------------------------------------------------------------
+# admission primitives
+# ---------------------------------------------------------------------------
+
+def test_rejected_error_carries_reason_and_detail():
+    exc = RejectedError(admission.QUEUE_FULL, "depth 64")
+    assert exc.reason == "queue_full"
+    assert "depth 64" in str(exc)
+    assert isinstance(exc, RuntimeError)
+
+
+def test_rejected_error_rejects_unknown_reason():
+    with pytest.raises(ValueError, match="unknown reject reason"):
+        RejectedError("cosmic_rays")
+
+
+def test_tenant_tier_clamps_quality():
+    tier = TenantTier(max_quality=40)
+    assert tier.resolve_quality(80) == 40
+    assert tier.resolve_quality(25) == 25
+
+
+def test_tenant_tier_validates_quality_range():
+    with pytest.raises(ValueError, match="quality"):
+        TenantTier().resolve_quality(0)
+    with pytest.raises(ValueError, match="quality"):
+        TenantTier().resolve_quality(101)
+
+
+def test_tenant_tier_relaxes_tight_deadlines():
+    tier = TenantTier(min_deadline_s=0.5)
+    assert tier.resolve_deadline_s(0.1) == 0.5
+    assert tier.resolve_deadline_s(2.0) == 2.0
+    assert tier.resolve_deadline_s(None) == math.inf
+
+
+def test_tenant_tier_rejects_nonpositive_deadline():
+    with pytest.raises(ValueError, match="deadline"):
+        TenantTier().resolve_deadline_s(0.0)
+
+
+def test_feasibility_predicates_ordering():
+    # with safety > 1 there is a window where a request is urgent
+    # (dispatch now) but still feasible (not yet swept)
+    step, safety = 0.1, 1.5
+    deadline = 1.0
+    now = deadline - 0.12          # urgent, feasible
+    assert admission.urgent(deadline, now, step, safety)
+    assert admission.feasible(deadline, now, step)
+    assert not admission.admission_deadline_ok(deadline, now, step, safety)
+    assert admission.feasible(math.inf, 1e9, step)
+
+
+# ---------------------------------------------------------------------------
+# queueing building blocks
+# ---------------------------------------------------------------------------
+
+def test_shape_bucket_rounds_up_to_multiple():
+    assert shape_bucket(48, 48) == (64, 64)
+    assert shape_bucket(64, 65) == (64, 128)
+    assert shape_bucket(1, 200) == (64, 256)
+
+
+def test_shape_bucket_matches_codec_engine():
+    codec_engine = pytest.importorskip("repro.serve.codec_engine")
+    assert queueing.DEFAULT_SHAPE_BUCKET == codec_engine.SHAPE_BUCKET
+
+
+def test_ewma_first_observation_initialises():
+    e = Ewma(alpha=0.25)
+    assert e.value is None
+    e.observe(0.1)
+    assert e.value == pytest.approx(0.1)
+    e.observe(0.2)
+    assert e.value == pytest.approx(0.25 * 0.2 + 0.75 * 0.1)
+
+
+def test_ewma_validates_alpha():
+    with pytest.raises(ValueError, match="alpha"):
+        Ewma(alpha=0.0)
+
+
+def test_planner_validates_config():
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchPlanner(max_batch=0)
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        BatchPlanner(max_batch=8, max_queue_depth=4)
+
+
+def test_observe_step_moves_estimate():
+    p = BatchPlanner(initial_step_s=0.05)
+    key = p.bucket_key((48, 48), 50)
+    assert p.step_estimate(key) == 0.05
+    p.observe_step(key, 0.2)
+    assert p.step_estimate(key) == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# dispatch triggers
+# ---------------------------------------------------------------------------
+
+def _planner(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 0.010)
+    kw.setdefault("max_queue_depth", 8)
+    kw.setdefault("initial_step_s", 0.05)
+    return BatchPlanner(**kw)
+
+
+def test_dispatch_on_full_bucket():
+    p = _planner()
+    for _ in range(4):
+        p.admit((48, 48), 50, "t", now=0.0)
+    poll = p.poll(0.0)
+    assert [len(b.requests) for b in poll.batches] == [4]
+    assert p.empty()
+
+
+def test_no_dispatch_before_any_trigger():
+    p = _planner()
+    p.admit((48, 48), 50, "t", now=0.0, deadline=10.0)
+    poll = p.poll(0.001)
+    assert poll.batches == [] and poll.rejects == []
+    assert p.total_depth() == 1
+
+
+def test_dispatch_on_max_wait_timer():
+    p = _planner()
+    p.admit((48, 48), 50, "t", now=0.0)
+    assert p.poll(0.009).batches == []
+    poll = p.poll(0.011)
+    assert len(poll.batches) == 1
+    assert len(poll.batches[0].requests) == 1
+
+
+def test_dispatch_on_urgent_deadline_before_timer():
+    # deadline margin expires before the batching timer would fire
+    p = _planner(max_wait_s=10.0, initial_step_s=0.05, safety=1.5)
+    p.admit((48, 48), 50, "t", now=0.0, deadline=0.080)
+    assert p.poll(0.001).batches == []
+    poll = p.poll(0.006)       # 0.006 >= 0.080 - 1.5*0.05 = 0.005
+    assert len(poll.batches) == 1
+
+
+def test_sweep_rejects_expired_requests_instead_of_dispatching():
+    p = _planner(max_wait_s=10.0, initial_step_s=0.05)
+    r = p.admit((48, 48), 50, "t", now=0.0, deadline=0.080)
+    poll = p.poll(0.05)        # 0.05 + step 0.05 > 0.080: unmeetable
+    assert poll.batches == []
+    assert len(poll.rejects) == 1
+    swept, exc = poll.rejects[0]
+    assert swept.req_id == r.req_id
+    assert exc.reason == admission.DEADLINE_UNMEETABLE
+    assert p.empty()
+
+
+def test_drain_dispatches_partial_batches():
+    p = _planner()
+    p.admit((48, 48), 50, "t", now=0.0)
+    p.admit((100, 80), 50, "t", now=0.0)
+    poll = p.poll(0.0, drain=True)
+    assert sorted(len(b.requests) for b in poll.batches) == [1, 1]
+    assert p.empty()
+
+
+def test_oversize_queue_dispatches_in_max_batch_chunks():
+    p = _planner(max_batch=3, max_queue_depth=8)
+    for _ in range(7):
+        p.admit((48, 48), 50, "t", now=0.0)
+    poll = p.poll(0.0)
+    # two full batches fire; the remainder waits for more batchmates
+    # (or its timer) instead of dispatching a premature partial batch
+    assert [len(b.requests) for b in poll.batches] == [3, 3]
+    assert p.total_depth() == 1
+    assert [len(b.requests)
+            for b in p.poll(0.011).batches] == [1]   # timer fires
+
+
+def test_buckets_isolated_by_shape_and_quality():
+    p = _planner()
+    a = p.admit((48, 48), 50, "t", now=0.0)
+    b = p.admit((48, 48), 75, "t", now=0.0)
+    c = p.admit((200, 48), 50, "t", now=0.0)
+    assert len({p.bucket_key(r.shape, r.quality)
+                for r in (a, b, c)}) == 3
+    assert p.depth((48, 48), 50) == 1
+    poll = p.poll(0.0, drain=True)
+    assert len(poll.batches) == 3
+
+
+def test_admit_rejects_at_depth_bound():
+    p = _planner(max_batch=4, max_queue_depth=4)
+    for _ in range(4):
+        p.admit((48, 48), 50, "t", now=0.0)
+    with pytest.raises(RejectedError) as ei:
+        p.admit((48, 48), 50, "t", now=0.0)
+    assert ei.value.reason == admission.QUEUE_FULL
+    # other buckets unaffected
+    p.admit((48, 48), 75, "t", now=0.0)
+
+
+def test_admit_rejects_hopeless_deadline():
+    p = _planner(initial_step_s=0.05, safety=1.5)
+    with pytest.raises(RejectedError) as ei:
+        p.admit((48, 48), 50, "t", now=0.0, deadline=0.01)
+    assert ei.value.reason == admission.DEADLINE_UNMEETABLE
+    assert p.empty()
+
+
+def test_next_wake_none_when_empty_zero_when_full():
+    p = _planner()
+    assert p.next_wake(0.0) is None
+    p.admit((48, 48), 50, "t", now=0.0, deadline=10.0)
+    # timer at arrival + max_wait_s
+    assert p.next_wake(0.002) == pytest.approx(0.008)
+    for _ in range(3):
+        p.admit((48, 48), 50, "t", now=0.0, deadline=10.0)
+    assert p.next_wake(0.002) == 0.0
+
+
+def test_next_wake_tracks_deadline_margin():
+    p = _planner(max_wait_s=10.0, initial_step_s=0.05, safety=1.5)
+    p.admit((48, 48), 50, "t", now=0.0, deadline=1.0)
+    # wake at deadline - safety*step = 0.925
+    assert p.next_wake(0.0) == pytest.approx(0.925)
+
+
+def test_fifo_within_bucket_simple():
+    p = _planner(max_batch=2, max_queue_depth=8)
+    ids = [p.admit((48, 48), 50, "t", now=0.0).req_id for _ in range(5)]
+    poll = p.poll(0.0, drain=True)
+    got = [r.req_id for b in poll.batches for r in b.requests]
+    assert got == ids
+
+
+# ---------------------------------------------------------------------------
+# randomized schedules (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _run_schedule(seed: int, max_batch: int, max_queue_depth: int,
+                  n_events: int = 120):
+    """Simulate a random schedule; return per-event observations."""
+    rng = np.random.default_rng(seed)
+    planner = BatchPlanner(max_batch=max_batch, max_wait_s=0.010,
+                           max_queue_depth=max_queue_depth,
+                           initial_step_s=0.020)
+    now = 0.0
+    admitted, dispatched, rejected = [], [], []
+    batches = []
+    for _ in range(n_events):
+        now += float(rng.exponential(0.004))
+        ev = rng.random()
+        if ev < 0.55:
+            shape = SHAPES[int(rng.integers(len(SHAPES)))]
+            quality = QUALITIES[int(rng.integers(len(QUALITIES)))]
+            deadline = (math.inf if rng.random() < 0.3
+                        else now + float(rng.uniform(0.001, 0.120)))
+            try:
+                req = planner.admit(shape, quality, "t", now,
+                                    deadline=deadline)
+                admitted.append(req)
+            except RejectedError as exc:
+                rejected.append((None, exc))
+            key = planner.bucket_key(shape, quality)
+            assert planner.depth(shape, quality) <= max_queue_depth, \
+                f"depth bound violated for {key}"
+        else:
+            poll = planner.poll(now)
+            for batch in poll.batches:
+                step = planner.step_estimate(batch.key)
+                for r in batch.requests:
+                    assert admission.feasible(r.deadline, now, step), (
+                        f"dispatched knowingly-unmeetable request "
+                        f"{r.req_id} at t={now}")
+                batches.append(batch)
+                dispatched.extend(batch.requests)
+                if rng.random() < 0.5:
+                    planner.observe_step(
+                        batch.key, float(rng.uniform(0.001, 0.030)))
+            rejected.extend(poll.rejects)
+    # final drain: nothing may stay queued
+    now += 1.0
+    poll = planner.poll(now, drain=True)
+    batches.extend(poll.batches)
+    for batch in poll.batches:
+        dispatched.extend(batch.requests)
+    rejected.extend(poll.rejects)
+    assert planner.empty()
+    return admitted, dispatched, rejected, batches
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 10_000))
+def test_property_every_admit_reaches_one_terminal_outcome(seed):
+    admitted, dispatched, rejected, _ = _run_schedule(seed, 4, 8)
+    admitted_ids = [r.req_id for r in admitted]
+    out_ids = ([r.req_id for r in dispatched]
+               + [r.req_id for r, _ in rejected if r is not None])
+    assert sorted(out_ids) == sorted(admitted_ids)
+    assert len(set(out_ids)) == len(out_ids), "request finished twice"
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_property_fifo_order_within_bucket(seed, max_batch):
+    planner_probe = BatchPlanner(max_batch=max_batch,
+                                 max_queue_depth=4 * max_batch)
+    _, _, _, batches = _run_schedule(seed, max_batch, 4 * max_batch)
+    per_key = {}
+    for b in batches:
+        per_key.setdefault(b.key, []).extend(r.req_id for r in b.requests)
+        assert len(b.requests) <= max_batch
+        assert all(planner_probe.bucket_key(r.shape, r.quality) == b.key
+                   for r in b.requests)
+    for key, ids in per_key.items():
+        assert ids == sorted(ids), f"FIFO violated in bucket {key}"
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 10_000), st.booleans())
+def test_property_depth_bounded_and_overflow_rejects(seed, tight):
+    # tight=True stresses the bound with a queue barely above max_batch
+    max_batch = 3
+    depth = 3 if tight else 6
+    admitted, _, rejected, _ = _run_schedule(seed, max_batch, depth)
+    # schedule asserts depth <= bound after every admit; additionally,
+    # overflow rejections must be tagged queue_full
+    reasons = {exc.reason for r, exc in rejected if r is None}
+    assert reasons <= {admission.QUEUE_FULL,
+                       admission.DEADLINE_UNMEETABLE}
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10_000), st.floats(0.001, 0.05))
+def test_property_next_wake_never_negative_and_none_iff_empty(seed, step):
+    rng = np.random.default_rng(seed)
+    p = BatchPlanner(max_batch=4, max_queue_depth=8, initial_step_s=step)
+    now = 0.0
+    for _ in range(40):
+        now += float(rng.exponential(0.003))
+        try:
+            p.admit(SHAPES[int(rng.integers(len(SHAPES)))],
+                    50, "t", now,
+                    deadline=now + float(rng.uniform(0.05, 0.5)))
+        except RejectedError:
+            pass
+        wake = p.next_wake(now)
+        if p.empty():
+            assert wake is None
+        else:
+            assert wake is not None and wake >= 0.0
+        if rng.random() < 0.4:
+            p.poll(now)
+    p.poll(now + 10.0, drain=True)
+    assert p.next_wake(now + 10.0) is None

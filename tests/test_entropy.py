@@ -673,3 +673,105 @@ class TestEngineBytePath:
         assert measured != proxy            # the proxy is only a model
         # repeated calls reuse the cached streams
         assert cb.to_bytes_list() == streams
+
+
+class TestBigPayloadDecodeRouting:
+    """PR 7 regression: `decode_payload` without an unpacker must not
+    build linear-memory walk tables for huge payloads — above
+    `_ROUTED_DECODE_MIN_BITS` it routes to the staged decoder
+    (`repro.kernels.unpack_bits`), whose scratch is bounded per tile."""
+
+    @staticmethod
+    def _stream(n_blocks, seed=0, density=0.5, amplitude=512):
+        rng = np.random.default_rng(seed)
+        dc = rng.integers(-1024, 1025, (n_blocks,))
+        ac = rng.integers(-amplitude, amplitude + 1, (n_blocks, 63))
+        ac[rng.random((n_blocks, 63)) > density] = 0
+        is_dc, syms, av, al = rle.symbolize(dc, ac)
+        dc_f, ac_f = rle.symbol_frequencies(is_dc, syms)
+        dc_t, ac_t = huffman.build_table(dc_f), huffman.build_table(ac_f)
+        payload = rle.encode_payload(is_dc, syms, av, al, dc_t, ac_t)
+        return payload, dc, ac, dc_t, ac_t
+
+    def test_walk_tables_grow_linearly_but_staged_scratch_saturates(self):
+        from repro.kernels import unpack_bits
+        # the latent blowup: walk memory is ~16 B/bit with no ceiling,
+        # while the staged decoder's scratch stops growing once one
+        # tile's worth of positions is resident
+        assert rle.walk_table_nbytes(1 << 24) > \
+            7 * rle.walk_table_nbytes(1 << 21)
+        assert unpack_bits.scratch_nbytes(1 << 21) == \
+            unpack_bits.scratch_nbytes(1 << 24)
+        # at the routing threshold the walk already costs more than the
+        # staged decoder's (saturated) scratch ever will
+        thr = rle._ROUTED_DECODE_MIN_BITS
+        assert rle.walk_table_nbytes(thr + 8) > \
+            unpack_bits.scratch_nbytes(thr + 8)
+        # and the gap is what routing saves: linear vs constant
+        assert rle.walk_table_nbytes(1 << 27) > \
+            100 * unpack_bits.scratch_nbytes(1 << 27)
+
+    def test_small_payloads_keep_the_walk(self, monkeypatch):
+        payload, dc, ac, dc_t, ac_t = self._stream(8)
+        monkeypatch.setattr(
+            rle, "_staged_unpacker",
+            lambda: (_ for _ in ()).throw(
+                AssertionError("small payload must not route")))
+        got_dc, got_ac = rle.decode_payload(payload, 8, dc_t, ac_t)
+        np.testing.assert_array_equal(got_dc, dc)
+        np.testing.assert_array_equal(got_ac, ac)
+
+    def test_big_payloads_route_to_staged_decoder(self, monkeypatch):
+        # shrink the threshold so routing triggers on a cheap stream,
+        # and poison the walk-table builder: decode succeeding proves
+        # the staged decoder served the request end to end
+        payload, dc, ac, dc_t, ac_t = self._stream(32, seed=1)
+        assert len(payload) * 8 > 256
+        monkeypatch.setattr(rle, "_ROUTED_DECODE_MIN_BITS", 256)
+        monkeypatch.setattr(
+            rle, "_decode_table",
+            lambda *a, **k: (_ for _ in ()).throw(
+                AssertionError("big payload built walk tables")))
+        got_dc, got_ac = rle.decode_payload(payload, 32, dc_t, ac_t)
+        np.testing.assert_array_equal(got_dc, dc)
+        np.testing.assert_array_equal(got_ac, ac)
+
+    def test_missing_kernels_layer_falls_back_to_walk(self, monkeypatch):
+        payload, dc, ac, dc_t, ac_t = self._stream(32, seed=2)
+        monkeypatch.setattr(rle, "_ROUTED_DECODE_MIN_BITS", 256)
+        monkeypatch.setattr(rle, "_staged_unpacker", lambda: None)
+        got_dc, got_ac = rle.decode_payload(payload, 32, dc_t, ac_t)
+        np.testing.assert_array_equal(got_dc, dc)
+        np.testing.assert_array_equal(got_ac, ac)
+
+    def test_above_threshold_payload_end_to_end(self):
+        # a real > 2^20-bit payload: the default decode routes to the
+        # staged decoder and still matches the scalar reference oracle
+        n_blocks = 1400
+        payload, dc, ac, dc_t, ac_t = self._stream(n_blocks, seed=3,
+                                                   density=0.9,
+                                                   amplitude=32767)
+        assert len(payload) * 8 > rle._ROUTED_DECODE_MIN_BITS
+        got_dc, got_ac = rle.decode_payload(payload, n_blocks, dc_t, ac_t)
+        want_dc, want_ac = rle.decode_payload_reference(
+            payload, n_blocks, dc_t, ac_t)
+        np.testing.assert_array_equal(got_dc, want_dc)
+        np.testing.assert_array_equal(got_ac, want_ac)
+
+    def test_container_default_path_reaches_routing(self, monkeypatch):
+        # decode_image with no unpacker (the latent-blowup entry point)
+        # must inherit the routing fix
+        from repro.core.entropy import container
+        calls = []
+        real = rle._staged_unpacker
+
+        def spy():
+            calls.append(True)
+            return real()
+        monkeypatch.setattr(rle, "_ROUTED_DECODE_MIN_BITS", 64)
+        monkeypatch.setattr(rle, "_staged_unpacker", spy)
+        img = images.lena_like(48, 48)
+        blob = container.encode_image(np.asarray(img), quality=50)
+        out = container.decode_image(blob)
+        assert out.shape == (48, 48)
+        assert calls, "decode_image default path bypassed the routing"

@@ -1,0 +1,139 @@
+"""Concurrency stress tests for the async codec service (marked slow).
+
+Excluded from the tier-1 run (``pytest -m "not slow"``); CI runs them in
+the non-blocking bench-smoke job.  The core claims under real
+concurrency: (1) every submitted request reaches exactly one terminal
+outcome — a response, a reject, or an engine failure; nothing deadlocks
+and nothing is dropped silently — and (2) payload bytes are identical
+to a serial :func:`repro.serve.codec_engine.encode_batch` of the same
+image at the same quality, i.e. the ``DCTZ`` stream does not depend on
+how requests happened to be batched under load.
+"""
+
+import asyncio
+import collections
+
+import numpy as np
+import pytest
+from helpers.flaky import EchoEngine, FlakyEngine
+
+from repro.serve.admission import RejectedError, TenantTier
+from repro.serve.service import (CodecService, EngineFailure, Response,
+                                 ServiceConfig)
+
+pytestmark = pytest.mark.slow
+
+QUALITIES = (30, 75)
+SHAPES = ((40, 40), (48, 56), (100, 64))
+
+
+def _pool(rng, per_shape=2):
+    pool = []
+    for shape in SHAPES:
+        for _ in range(per_shape):
+            pool.append(rng.integers(0, 256, shape, dtype=np.uint8))
+    return pool
+
+
+def test_async_clients_match_serial_encode_batch_bytes():
+    codec_engine = pytest.importorskip("repro.serve.codec_engine")
+    rng = np.random.default_rng(0)
+    pool = _pool(rng)
+    n_clients, per_client = 8, 6
+
+    async def client(svc, cid, results):
+        crng = np.random.default_rng(1000 + cid)
+        for _ in range(per_client):
+            idx = int(crng.integers(len(pool)))
+            q = QUALITIES[int(crng.integers(len(QUALITIES)))]
+            resp = await svc.submit(pool[idx], quality=q)
+            results.append((idx, q, resp))
+            await asyncio.sleep(float(crng.uniform(0, 0.005)))
+
+    async def go():
+        cfg = ServiceConfig(max_batch=4, max_wait_s=0.01,
+                            max_queue_depth=64)
+        results = []
+        async with CodecService(cfg) as svc:
+            await asyncio.gather(*[client(svc, c, results)
+                                   for c in range(n_clients)])
+        return results, svc.stats
+
+    results, stats = asyncio.run(go())
+    assert len(results) == n_clients * per_client
+    assert stats.served == len(results)
+    assert stats.failed == 0 and stats.total_rejected == 0
+
+    # serial oracle: one encode per distinct (image, quality)
+    serial = {}
+    for q in QUALITIES:
+        blobs = codec_engine.encode_batch(pool, q)
+        for idx, blob in enumerate(blobs):
+            serial[(idx, q)] = blob
+    for idx, q, resp in results:
+        assert isinstance(resp, Response)
+        assert resp.payload == serial[(idx, q)], (
+            f"bytes diverge for image {idx} q{q} "
+            f"(batch_size={resp.batch_size}, cache={resp.cache_hit})")
+    # with 6 distinct images x 2 qualities and 48 requests, the
+    # hot-stream cache must have absorbed most of the load
+    assert stats.occupancy and sum(
+        k * v for k, v in stats.occupancy.items()) <= len(results)
+
+
+def test_heavy_fault_mix_conserves_every_request():
+    # EchoEngine keeps this CPU-cheap at a volume (400 requests, 20
+    # clients) where a dispatch-loop deadlock or silent drop would hang
+    # or miscount; faults cover engine failures, rejects and deadlines
+    n_clients, per_client = 20, 20
+
+    async def client(svc, cid, counter):
+        crng = np.random.default_rng(2000 + cid)
+        tenant = "free" if cid % 3 == 0 else "default"
+        for i in range(per_client):
+            img = crng.integers(0, 256, SHAPES[cid % len(SHAPES)],
+                                dtype=np.uint8)
+            deadline = (None if crng.random() < 0.5
+                        else float(crng.uniform(0.005, 0.2)))
+            try:
+                resp = await svc.submit(img, quality=50, tenant=tenant,
+                                        deadline_s=deadline)
+                counter["served"] += 1
+                if resp.deadline_missed:
+                    counter["late"] += 1
+            except RejectedError as exc:
+                counter[f"rejected:{exc.reason}"] += 1
+            except EngineFailure:
+                counter["failed"] += 1
+            if crng.random() < 0.3:
+                await asyncio.sleep(float(crng.uniform(0, 0.002)))
+
+    async def go():
+        engine = FlakyEngine(EchoEngine(step_s=0.002), fail_rate=0.1,
+                             seed=3)
+        cfg = ServiceConfig(
+            max_batch=4, max_wait_s=0.004, max_queue_depth=8,
+            initial_step_s=0.002, cache_entries=0,
+            tenants={"free": TenantTier(max_quality=40,
+                                        min_deadline_s=0.05)})
+        counter = collections.Counter()
+        async with CodecService(cfg, engine=engine) as svc:
+            await asyncio.wait_for(
+                asyncio.gather(*[client(svc, c, counter)
+                                 for c in range(n_clients)]),
+                timeout=120)
+        return counter, svc.stats
+
+    counter, stats = asyncio.run(go())
+    total = n_clients * per_client
+    outcomes = (counter["served"] + counter["failed"]
+                + sum(v for k, v in counter.items()
+                      if k.startswith("rejected:")))
+    assert outcomes == total, f"lost/duplicated outcomes: {counter}"
+    assert stats.submitted == total
+    assert stats.served == counter["served"]
+    assert stats.failed == counter["failed"]
+    assert stats.total_rejected == total - counter["served"] \
+        - counter["failed"]
+    assert stats.engine_failures > 0     # faults actually fired
+    assert counter["served"] > 0
