@@ -889,7 +889,13 @@ def calibrate_service_step(pool, max_batch: int) -> float:
 
 def service_traffic_points(size: int, n_requests: int, loads,
                            max_batch: int = 8, seed: int = 0) -> list:
-    """Closed-loop Poisson traffic through :class:`CodecService`.
+    """Open-loop Poisson traffic through :class:`CodecService`.
+
+    Arrivals are scheduled at precomputed absolute times, independent
+    of completions — the standard open-loop methodology for offered
+    load/goodput curves, where clients must keep offering load even
+    when the service falls behind (a closed-loop client would slow
+    down with the server and never drive it past saturation).
 
     For each offered-load level (a multiple of the measured engine
     capacity ``max_batch / step_s``), a fresh service is driven with
@@ -1027,7 +1033,7 @@ def traffic_conservation_violations(records) -> list:
 
 
 @benchmark("service_traffic", suites=("smoke", "paper", "full"),
-           description="closed-loop Poisson traffic through the async "
+           description="open-loop Poisson traffic through the async "
                        "service: p50/p99 latency, goodput, reject rate")
 def service_traffic(ctx: RunContext) -> list:
     """The serving SLO view the straight-line benches cannot give:

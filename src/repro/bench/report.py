@@ -18,7 +18,7 @@ entropy_throughput        Entropy throughput (vectorized host coding)
 entropy_decode            Entropy decode (speculative unpack backends)
 serve_batch_throughput    Batch throughput curve (serving engine)
 serve_ragged              Ragged mixed-size batches (serving engine)
-service_traffic           Closed-loop service traffic (async service)
+service_traffic           Open-loop service traffic (async service)
 framework_micro           Framework micro-benches
 ========================  =========================================
 """
@@ -200,9 +200,9 @@ def _ragged_table(result) -> str:
 
 def _service_traffic_table(result) -> str:
     p0 = result.records[0].params
-    lines = ["## Closed-loop service traffic (async batching service)", "",
-             "Poisson arrivals through the deadline-aware batching "
-             f"service ({p0['n_requests']} requests per level, "
+    lines = ["## Open-loop service traffic (async batching service)", "",
+             "Open-loop Poisson arrivals through the deadline-aware "
+             f"batching service ({p0['n_requests']} requests per level, "
              f"{p0['size']}px image pool, per-request deadline "
              f"{p0['deadline_ms']:.0f} ms, max_batch {p0['max_batch']}). "
              "Offered load is a multiple of the engine's calibrated "

@@ -32,7 +32,7 @@ dispatcher task multiplexing queue timers, engine batches running in a
 (default single-worker) thread pool so the event loop never blocks on
 device work, and per-request futures carrying exactly one terminal
 outcome each.  See docs/serving.md for semantics and SLO knobs, and
-``bench/cases.py::service_traffic`` for the closed-loop load test that
+``bench/cases.py::service_traffic`` for the open-loop load test that
 measures p50/p99 latency, goodput and reject rate through this layer.
 """
 
@@ -208,8 +208,13 @@ class ServiceStats:
         engine_failures: engine batches that raised.
         deadline_missed: served, but past the deadline.
         occupancy: engine batch size -> dispatch count.
-        latencies_s: admission-to-completion times of served requests.
+        latencies_s: admission-to-completion times of the most recent
+            :data:`LATENCY_WINDOW` served requests (a bounded sliding
+            window — a long-running service must not grow memory, or
+            re-sort an ever-longer list per snapshot, without limit).
     """
+
+    LATENCY_WINDOW = 8192
 
     def __init__(self):
         self.submitted = 0
@@ -219,7 +224,8 @@ class ServiceStats:
         self.engine_failures = 0
         self.deadline_missed = 0
         self.occupancy: collections.Counter = collections.Counter()
-        self.latencies_s: list = []
+        self.latencies_s: collections.deque = collections.deque(
+            maxlen=self.LATENCY_WINDOW)
 
     @property
     def total_rejected(self) -> int:
@@ -371,6 +377,9 @@ class CodecService:
             A :class:`Response` (payload bytes + serving metadata).
 
         Raises:
+            ValueError: invalid image/quality/deadline arguments —
+                raised before the request counts as submitted, so the
+                stats conservation invariant is unaffected.
             RejectedError: backpressure (``queue_full``), hopeless or
                 expired deadline (``deadline_unmeetable``), or a
                 closing service (``shutdown``).
@@ -380,11 +389,6 @@ class CodecService:
         if self._dispatcher is None and not self._closed:
             raise RuntimeError("service not started: use `async with "
                                "CodecService(...)` or await start()")
-        self.stats.submitted += 1
-        if self._draining:
-            exc = RejectedError(admission.SHUTDOWN, "service closing")
-            self.stats.rejected[exc.reason] += 1
-            raise exc
         image = np.asarray(image)
         if image.ndim != 2:
             raise ValueError(f"image must be 2-D (H, W), "
@@ -395,6 +399,14 @@ class CodecService:
         rel_deadline = tier.resolve_deadline_s(
             deadline_s if deadline_s is not None
             else self.config.default_deadline_s)
+        # invalid arguments raised above, before the request counts as
+        # submitted: every counted submit reaches exactly one terminal
+        # outcome, so submitted == served + rejected + failed holds
+        self.stats.submitted += 1
+        if self._draining:
+            exc = RejectedError(admission.SHUTDOWN, "service closing")
+            self.stats.rejected[exc.reason] += 1
+            raise exc
         now = self._clock()
         key = StreamCache.key(image, q, self.config.tables)
         blob = self.cache.get(key)
@@ -425,9 +437,12 @@ class CodecService:
             # done-callback: it runs a loop iteration *after* the task
             # completes, and counting a done task against the cap when
             # its completion wake-up was already consumed would leave
-            # the dispatcher sleeping with zero budget forever
-            self._inflight = {t for t in self._inflight
-                              if not t.done()}
+            # the dispatcher sleeping with zero budget forever.  Prune
+            # IN PLACE — the done-callbacks and close()'s drain loop
+            # hold references to this set object, so rebinding it would
+            # strand still-running tasks in a set nobody discards from
+            self._inflight.difference_update(
+                [t for t in self._inflight if t.done()])
             budget = max(0, cap - len(self._inflight))
             poll = self._planner.poll(
                 self._clock(), drain=self._draining,

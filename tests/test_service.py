@@ -99,6 +99,29 @@ def test_invalid_image_shape_raises_valueerror():
                                 engine=EchoEngine()) as svc:
             with pytest.raises(ValueError, match="2-D"):
                 await svc.submit(np.zeros((4, 4, 3), dtype=np.uint8))
+            # validation errors are caller bugs, not requests: they must
+            # not count as submitted, or the conservation invariant
+            # submitted == served + rejected + failed would break
+            assert svc.stats.submitted == 0
+    run(go())
+
+
+def test_close_with_inflight_batch_terminates():
+    async def go():
+        # regression: the dispatcher rebound its in-flight set each
+        # iteration while done-callbacks discarded from the *old* set
+        # object, so a batch still running when close() triggered the
+        # drain iteration stayed "in flight" forever and close() hung
+        eng = EchoEngine(step_s=0.1)
+        svc = CodecService(fast_config(max_batch=1), engine=eng)
+        await svc.start()
+        task = asyncio.ensure_future(svc.submit(make_images(1)[0]))
+        while not eng.calls:            # batch dispatched, engine busy
+            await asyncio.sleep(0.001)
+        await asyncio.wait_for(svc.close(), timeout=10.0)
+        resp = await task
+        assert isinstance(resp, Response)
+        assert svc.stats.served == 1
     run(go())
 
 
@@ -435,6 +458,17 @@ def test_flaky_latency_only_on_selected_calls():
     slow = time.monotonic() - t0
     assert fast < 0.02 < slow
     assert engine.calls == [(1, 50), (1, 50)]
+
+
+def test_latency_reservoir_is_bounded():
+    from repro.serve.service import ServiceStats
+    stats = ServiceStats()
+    for i in range(ServiceStats.LATENCY_WINDOW + 100):
+        stats.latencies_s.append(float(i))
+    assert len(stats.latencies_s) == ServiceStats.LATENCY_WINDOW
+    # the window keeps the most recent samples
+    assert stats.latency_percentile(100) == float(
+        ServiceStats.LATENCY_WINDOW + 99)
 
 
 def test_stats_snapshot_shape():
