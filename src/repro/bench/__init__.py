@@ -11,11 +11,17 @@ The measurement backbone of the repo (docs/benchmarks.md):
 * :mod:`repro.bench.schema` — versioned JSON artifact
   (:class:`~repro.bench.schema.BenchResult`);
 * :mod:`repro.bench.runner` — :func:`~repro.bench.runner.run_suite`;
+* :mod:`repro.bench.autotune` — pow2 tile sweeps per (kernel, backend,
+  shape bucket); winners persist to ``results/tuning.json`` for the
+  kernel routers (:mod:`repro.kernels.tuning`);
 * :mod:`repro.bench.report` — regenerates ``RESULTS.md`` (Tables 1-4 +
-  throughput curves) from artifacts alone;
-* :mod:`repro.bench.cli` — ``python -m repro.bench run | report | list``.
+  throughput curves, tile-tuning winners, kernel roofline) from
+  artifacts alone;
+* :mod:`repro.bench.cli` — ``python -m repro.bench
+  run | autotune | report | list``.
 """
 
+from repro.bench.autotune import run_autotune                        # noqa: F401
 from repro.bench.registry import (RunContext, all_cases, benchmark,  # noqa: F401
                                   get, resolve)
 from repro.bench.runner import run_suite                             # noqa: F401

@@ -1143,3 +1143,144 @@ def framework_micro(ctx: RunContext) -> list:
         timings_us={"step": t_d.to_json()},
         metrics={"tok_per_s": 8 / (t_d.median_us / 1e6)}))
     return records
+
+
+# ---------------------------------------------------------------------------
+# Codec-kernel roofline: achieved FLOP/s and bytes/s vs documented peaks
+# ---------------------------------------------------------------------------
+
+ROOFLINE_GRID = {
+    "smoke": {"size": 64, "entropy_size": 48},
+    "paper": {"size": 256, "entropy_size": 128},
+    "full": {"size": 512, "entropy_size": 256},
+}
+
+
+def kernel_cost_terms(fn, *args) -> tuple:
+    """(flops, bytes_accessed) from XLA's lowered cost analysis of ``fn``.
+
+    ``cost_analysis()`` returns a dict on newer jax and a one-element
+    list of dicts on 0.4.x CPU; both forms are handled.  Missing terms
+    count as zero (interpret-mode Pallas bodies, for instance, report
+    nothing — that is why the roofline lowers the *jnp reference*
+    implementations, which XLA can fully analyse).
+    """
+    cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = cost or {}
+    return (float(cost.get("flops", 0.0) or 0.0),
+            float(cost.get("bytes accessed", 0.0) or 0.0))
+
+
+def roofline_points(size: int, entropy_size: int, warmup: int,
+                    iters: int) -> list:
+    """Measured records for the ``roofline`` case.
+
+    One record per routed kernel: wall time of the *routed* call (tile
+    knobs at ``None``, so the tuned-tile artifact applies when valid),
+    FLOP and byte counts from XLA cost analysis of the kernel's jnp
+    reference at the same shape (analytic byte counts for the two
+    bit-stream kernels, whose FLOP content is ~0), and achieved
+    GFLOP/s / GB/s against the documented per-chip peaks
+    (:data:`repro.launch.mesh.HW` — TPU v5e terms, so off-TPU fractions
+    read as a pipeline proof, not an efficiency claim).
+
+    Shared by the registry case and ``benchmarks/roofline.py``.
+    """
+    from repro.core.entropy import rle
+    from repro.kernels import pack_bits as pb
+    from repro.kernels import unpack_bits as ub
+    from repro.kernels.cordic_loeffler import ops as cl_ops
+    from repro.kernels.cordic_loeffler import ref as cl_ref
+    from repro.kernels.dct8x8 import ops as d_ops
+    from repro.kernels.dct8x8 import ref as d_ref
+    from repro.kernels.fused_codec import ops as f_ops
+    from repro.kernels.fused_codec import ref as f_ref
+    from repro.launch.mesh import HW
+
+    img = jnp.asarray(images.lena_like(size, size), jnp.float32)
+    f32 = img.size * 4
+
+    points = []
+
+    def add(kernel, run, flops, nbytes, params):
+        t = measure(run, warmup=warmup, iters=iters)
+        sec = t.median_us / 1e6
+        achieved_flops = flops / sec
+        achieved_bw = nbytes / sec
+        # Ridge point: intensity above flops_peak/bw_peak is compute-bound.
+        intensity = flops / nbytes if nbytes else float("inf")
+        ridge = HW["peak_flops_bf16"] / HW["hbm_bw"]
+        points.append(BenchRecord(
+            label=kernel,
+            params={"kernel": kernel, **params},
+            timings_us={"routed": t.to_json()},
+            metrics={
+                "flops": flops,
+                "bytes_accessed": nbytes,
+                "achieved_gflop_s": achieved_flops / 1e9,
+                "achieved_gb_s": achieved_bw / 1e9,
+                "frac_peak_flops": achieved_flops / HW["peak_flops_bf16"],
+                "frac_peak_bw": achieved_bw / HW["hbm_bw"],
+                "intensity_flop_per_byte": intensity,
+                "compute_bound": float(intensity > ridge),
+            }))
+
+    fl, by = kernel_cost_terms(d_ref.dct8x8_ref, img)
+    add("dct8x8", lambda: d_ops.dct8x8(img), fl, by,
+        {"height": size, "width": size})
+
+    fl, by = kernel_cost_terms(cl_ref.cordic_loeffler_ref, img)
+    add("cordic_loeffler", lambda: cl_ops.cordic_loeffler_dct(img), fl, by,
+        {"height": size, "width": size})
+
+    fl, by = kernel_cost_terms(f_ref.fused_codec_ref, img)
+    add("fused_codec", lambda: f_ops.fused_codec(img), fl, by,
+        {"height": size, "width": size, "quality": QUALITY})
+
+    (_, dc_diff, ac, payload, (dc_t, ac_t),
+     n_blocks) = _entropy_stage_inputs(entropy_size)
+    syms = rle.symbolize(dc_diff, ac)
+    from repro.core.entropy import bitio
+    captured = {}
+
+    def cap(fields, widths):
+        captured["cl"] = (np.asarray(fields), np.asarray(widths))
+        return bitio.pack_bits(fields, widths)
+
+    rle.encode_payload(*syms, dc_t, ac_t, packer=cap)
+    codes, lengths = captured["cl"]
+    nbits = len(payload) * 8
+
+    # The bit kernels are pure data movement: FLOP content ~0, byte
+    # traffic is analytic — three int32 field columns in, payload out
+    # (pack); bit windows in, three per-offset word planes out (unpack).
+    pack_bytes = 3 * codes.size * 4 + len(payload)
+    add("pack_bits",
+        lambda: pb.pack_bits(codes, lengths, backend="pallas"),
+        0.0, float(pack_bytes),
+        {"entropy_size": entropy_size, "fields": int(codes.size),
+         "payload_bits": nbits})
+
+    unpack_bytes = (nbits + 1) * 4 + 3 * (nbits + 1) * 4
+    add("unpack_bits",
+        lambda: ub.unpack_bits(payload, n_blocks, dc_t, ac_t,
+                               backend="pallas"),
+        0.0, float(unpack_bytes),
+        {"entropy_size": entropy_size, "payload_bits": nbits,
+         "n_blocks": n_blocks})
+    return points
+
+
+@benchmark("roofline", suites=("smoke", "paper", "full"),
+           description="per-kernel achieved FLOP/s and bytes/s from XLA "
+                       "cost analysis vs documented per-chip peaks")
+def roofline(ctx: RunContext) -> list:
+    """Achieved-vs-peak view of every routed codec kernel: the paper's
+    computational-efficiency claim expressed as roofline coordinates
+    instead of speedup-vs-reference."""
+    grid = ROOFLINE_GRID.get(ctx.suite, ROOFLINE_GRID["paper"])
+    timer = ctx.timer.scaled(warmup=max(ctx.timer.warmup, 1))
+    return roofline_points(grid["size"], grid["entropy_size"],
+                           warmup=timer.warmup, iters=timer.iters)

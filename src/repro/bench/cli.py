@@ -1,10 +1,13 @@
-"""``python -m repro.bench`` — run suites, render RESULTS.md.
+"""``python -m repro.bench`` — run suites, autotune tiles, render RESULTS.md.
 
     python -m repro.bench run --suite paper --out results/
+    python -m repro.bench autotune --suite paper --out results/
     python -m repro.bench report results/*.json --md RESULTS.md
     python -m repro.bench list
 
-``report`` with no artifact arguments picks up ``results/*.json``.
+``report`` with no artifact arguments picks up ``results/*.json``
+(minus ``tuning.json``, the kernel-routing document ``autotune``
+writes alongside its ``autotune.json`` sweep artifact).
 """
 
 from __future__ import annotations
@@ -22,6 +25,18 @@ def _cmd_run(args) -> int:
         timer = base.scaled(warmup=args.warmup, iters=args.iters)
     runner.run_suite(args.suite, out_dir=args.out, cases=args.cases,
                      timer=timer)
+    return 0
+
+
+def _cmd_autotune(args) -> int:
+    from repro.bench import autotune
+    from repro.bench.timer import TimerConfig
+    suite = "smoke" if args.smoke else args.suite
+    timer = None
+    if args.warmup is not None or args.iters is not None:
+        base = autotune.SUITE_TIMERS.get(suite, TimerConfig(1, 3))
+        timer = base.scaled(warmup=args.warmup, iters=args.iters)
+    autotune.run_autotune(suite, out_dir=args.out, timer=timer)
     return 0
 
 
@@ -73,6 +88,22 @@ def build_parser() -> argparse.ArgumentParser:
     run.add_argument("--iters", type=int, default=None,
                      help="override timed iterations")
     run.set_defaults(fn=_cmd_run)
+
+    at = sub.add_parser("autotune",
+                        help="sweep kernel tile candidates, write "
+                             "results/tuning.json + autotune.json")
+    at.add_argument("--suite", default="paper",
+                    choices=("smoke", "paper", "full"),
+                    help="sweep grid size (default: paper)")
+    at.add_argument("--smoke", action="store_true",
+                    help="shorthand for --suite smoke (tiny CI sweep)")
+    at.add_argument("--out", default="results",
+                    help="artifact directory (default: results/)")
+    at.add_argument("--warmup", type=int, default=None,
+                    help="override warmup iterations")
+    at.add_argument("--iters", type=int, default=None,
+                    help="override timed iterations")
+    at.set_defaults(fn=_cmd_autotune)
 
     rep = sub.add_parser("report", help="render RESULTS.md from artifacts")
     rep.add_argument("artifacts", nargs="*",

@@ -19,6 +19,8 @@ entropy_decode            Entropy decode (speculative unpack backends)
 serve_batch_throughput    Batch throughput curve (serving engine)
 serve_ragged              Ragged mixed-size batches (serving engine)
 service_traffic           Open-loop service traffic (async service)
+autotune                  Kernel tile autotuning (sweep winners)
+roofline                  Kernel roofline (achieved vs peak)
 framework_micro           Framework micro-benches
 ========================  =========================================
 """
@@ -226,6 +228,65 @@ def _service_traffic_table(result) -> str:
     return "\n".join(lines)
 
 
+def _tuning_table(result) -> str:
+    lines = ["## Kernel tile autotuning", "",
+             "Pow2 tile sweep per (kernel, shape bucket) on backend "
+             f"`{result.environment.get('backend', '?')}` "
+             "(`python -m repro.bench autotune`).  Winners persist to "
+             "`results/tuning.json`; each kernel's `ops.py` router loads "
+             "them when its tile knob is left at `None` — on a different "
+             "backend the artifact is rejected and built-in defaults "
+             "apply.  Identity across every candidate is pinned by the "
+             "tile-invariance property tests, so tuning can only change "
+             "speed, never bits.", "",
+             "| kernel | bucket | winner | best (ms) | vs default "
+             "| candidates swept |",
+             "|---|---|---|---|---|---|"]
+    for r in result.records:
+        kernel = r.params["kernel"]
+        param = "tile_bits" if "tile_bits" in r.params else "tile"
+        vs = r.metrics.get("speedup_vs_default")
+        lines.append(
+            f"| {kernel} | {r.params['bucket']} "
+            f"| {param}={r.params[param]} "
+            f"| {r.metrics['best_us'] / 1e3:.3f} "
+            f"| {f'{vs:.2f}x' if vs is not None else '—'} "
+            f"| {len(r.timings_us)} |")
+    return "\n".join(lines)
+
+
+def _roofline_table(result) -> str:
+    lines = ["## Kernel roofline (achieved vs peak)", "",
+             "Achieved FLOP/s and bytes/s of every routed codec kernel: "
+             "wall time of the routed call (tuned tiles when a valid "
+             "artifact applies) against FLOP/byte counts from XLA's "
+             "lowered cost analysis of the jnp reference at the same "
+             "shape (analytic byte counts for the two bit-stream "
+             "kernels).  Peaks are the documented TPU v5e per-chip "
+             "terms (`repro.launch.mesh.HW`), so off-TPU the fractions "
+             "prove the pipeline, not efficiency.", "",
+             "| kernel | shape | time (ms) | GFLOP/s | GB/s "
+             "| % peak FLOPs | % peak BW | FLOP/byte | bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in result.records:
+        m = r.metrics
+        if "height" in r.params:
+            shape = f"{r.params['height']}x{r.params['width']}"
+        else:
+            shape = f"{r.params['payload_bits']} bits"
+        bound = "compute" if m["compute_bound"] else "memory"
+        lines.append(
+            f"| {r.params['kernel']} | {shape} "
+            f"| {_ms(r.timings_us['routed'])} "
+            f"| {m['achieved_gflop_s']:.2f} "
+            f"| {m['achieved_gb_s']:.2f} "
+            f"| {m['frac_peak_flops'] * 100:.4f}% "
+            f"| {m['frac_peak_bw'] * 100:.4f}% "
+            f"| {m['intensity_flop_per_byte']:.2f} "
+            f"| {bound} |")
+    return "\n".join(lines)
+
+
 def _micro_table(result) -> str:
     lines = ["## Framework micro-benches", "",
              "| bench | time (ms) | derived |",
@@ -267,6 +328,8 @@ _SECTIONS = (
     ("serve_batch_throughput", None),
     ("serve_ragged", None),
     ("service_traffic", None),
+    ("autotune", None),
+    ("roofline", None),
     ("framework_micro", None),
 )
 
@@ -326,6 +389,10 @@ def render(results) -> str:
             parts.append(_ragged_table(result))
         elif name == "service_traffic":
             parts.append(_service_traffic_table(result))
+        elif name == "autotune":
+            parts.append(_tuning_table(result))
+        elif name == "roofline":
+            parts.append(_roofline_table(result))
         elif name == "framework_micro":
             parts.append(_micro_table(result))
     extra = sorted(set(by_name) - {n for n, _ in _SECTIONS})

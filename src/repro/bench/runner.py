@@ -63,5 +63,12 @@ def run_suite(suite: str, out_dir: str = "results", cases=None,
 
 
 def default_artifacts(out_dir: str = "results") -> list:
-    """All ``*.json`` artifacts under ``out_dir``, sorted by name."""
-    return sorted(pathlib.Path(out_dir).glob("*.json"))
+    """All ``*.json`` bench artifacts under ``out_dir``, sorted by name.
+
+    ``tuning.json`` is excluded: it is the kernel-routing document
+    (:mod:`repro.kernels.tuning` schema), not a
+    :class:`~repro.bench.schema.BenchResult` the renderer can read —
+    the sweep grid behind it lands in ``autotune.json`` instead.
+    """
+    return sorted(p for p in pathlib.Path(out_dir).glob("*.json")
+                  if p.name != "tuning.json")

@@ -13,4 +13,10 @@ ops.py (jit wrapper) / ref.py (pure-jnp oracle) layout:
   unpack_bits     entropy-stage speculative Huffman decode (per-offset
                   unit words + pointer doubling, resolved per block on
                   the host); staged NumPy ref.py for the same reason
+
+`tuning` is the shared tuned-tile lookup: when an ops.py router's tile
+knob is left at None it consults the autotuned winners persisted in
+``results/tuning.json`` (written by ``python -m repro.bench autotune``),
+falling back to built-in defaults — with a single warning — when the
+artifact is missing, invalid, or tuned for a different backend.
 """

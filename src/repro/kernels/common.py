@@ -30,9 +30,15 @@ def pad2d_to_multiple(x: jnp.ndarray, mh: int, mw: int) -> jnp.ndarray:
 def pick_tile(dim: int, target: int = 256, multiple: int = 8) -> int:
     """Largest tile <= target that divides ``dim`` and is a multiple of 8.
 
-    Image dims here are always multiples of 8 (ops pad first), so a valid
-    tile always exists (worst case: ``multiple`` itself).
+    Image dims here are always positive multiples of 8 (ops pad first),
+    so a valid tile always exists — worst case ``multiple`` itself,
+    which is also the answer whenever ``target < multiple``: the tile
+    must stay a multiple of ``multiple`` to keep whole 8x8 blocks per
+    grid cell, so the target is a ceiling on the *search*, not on the
+    returned tile.
     """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
     if dim % multiple:
         raise ValueError(f"dim {dim} not a multiple of {multiple}")
     best = multiple

@@ -6,17 +6,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cordic
-from repro.kernels import common
+from repro.kernels import common, tuning
 from repro.kernels.cordic_loeffler import kernel
 
 
 def _run(img: jnp.ndarray, config: cordic.CordicConfig, inverse: bool,
-         tile: int, interpret: bool | None) -> jnp.ndarray:
+         tile: int | None, interpret: bool | None) -> jnp.ndarray:
     if interpret is None:
         interpret = common.interpret_default()
     h, w = img.shape[-2:]
     padded = common.pad2d_to_multiple(img, 8, 8)
     ph, pw = padded.shape[-2:]
+    if tile is None:
+        tile = tuning.tile_for("cordic_loeffler", max(ph, pw))
     th = common.pick_tile(ph, tile)
     tw = common.pick_tile(pw, tile)
 
@@ -31,15 +33,19 @@ def _run(img: jnp.ndarray, config: cordic.CordicConfig, inverse: bool,
 
 def cordic_loeffler_dct(img: jnp.ndarray, *,
                         config: cordic.CordicConfig = cordic.PAPER_CONFIG,
-                        tile: int = 256,
+                        tile: int | None = None,
                         interpret: bool | None = None) -> jnp.ndarray:
-    """Paper-faithful Cordic-Loeffler blockwise DCT.  (..., H, W)."""
+    """Paper-faithful Cordic-Loeffler blockwise DCT.  (..., H, W).
+
+    ``tile=None`` routes through the tuned-tile artifact
+    (:func:`repro.kernels.tuning.tile_for`); an explicit tile pins it.
+    """
     return _run(img, config, inverse=False, tile=tile, interpret=interpret)
 
 
 def cordic_loeffler_idct(coeffs: jnp.ndarray, *,
                          config: cordic.CordicConfig = cordic.PAPER_CONFIG,
-                         tile: int = 256,
+                         tile: int | None = None,
                          interpret: bool | None = None) -> jnp.ndarray:
     """Paper-faithful Cordic-Loeffler blockwise inverse DCT."""
     return _run(coeffs, config, inverse=True, tile=tile, interpret=interpret)

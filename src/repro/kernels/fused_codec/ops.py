@@ -6,17 +6,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cordic, dct, quant
-from repro.kernels import common
+from repro.kernels import common, tuning
 from repro.kernels.fused_codec import kernel
 
 
 def fused_codec(img: jnp.ndarray, *, quality: int = 50,
                 transform: str = "exact",
                 config: cordic.CordicConfig = cordic.PAPER_CONFIG,
-                tile: int = 256, interpret: bool | None = None):
+                tile: int | None = None, interpret: bool | None = None):
     """One-pass codec roundtrip.  (..., H, W) uint8/float.
 
     Returns (reconstructed uint8, quantised coeffs int32 block-planar).
+    ``tile=None`` routes through the tuned-tile artifact
+    (:func:`repro.kernels.tuning.tile_for`); an explicit tile pins it.
     """
     if interpret is None:
         interpret = common.interpret_default()
@@ -24,6 +26,8 @@ def fused_codec(img: jnp.ndarray, *, quality: int = 50,
     h, w = img.shape[-2:]
     padded = common.pad2d_to_multiple(img, 8, 8).astype(jnp.float32)
     ph, pw = padded.shape[-2:]
+    if tile is None:
+        tile = tuning.tile_for("fused_codec", max(ph, pw))
     th = common.pick_tile(ph, tile)
     tw = common.pick_tile(pw, tile)
     t = dct.kron_dct_matrix(8)

@@ -15,10 +15,12 @@ import functools
 import jax
 import numpy as np
 
+from repro.kernels import tuning
 from repro.kernels.pack_bits import kernel, ref
 
-TILE_BITS = 1024                    # output bits per kernel program
+TILE_BITS = 1024                    # default output bits per kernel program
 WINDOW = TILE_BITS + 16             # fields gathered per tile (>= T+15)
+WINDOW_MARGIN = 16                  # window = tile_bits + this margin
 
 # Above this many kept fields the stream falls back to the NumPy
 # reference: the kernel holds the three (m_pad, 1) int32 field arrays
@@ -43,6 +45,7 @@ def select_backend(backend: str = "auto") -> str:
 
 
 def pack_bits(codes, lengths, *, backend: str = "auto",
+              tile_bits: int | None = None,
               interpret: bool | None = None) -> bytes:
     """Concatenate MSB-first bit fields into padded payload bytes.
 
@@ -56,18 +59,25 @@ def pack_bits(codes, lengths, *, backend: str = "auto",
         lengths: (M,) field widths in [0, 16].
         backend: "auto" (Pallas on TPU, NumPy elsewhere), "pallas", or
             "numpy".
+        tile_bits: output bits per kernel program (pow2, byte multiple);
+            ``None`` routes through the tuned-tile artifact
+            (:func:`repro.kernels.tuning.tile_for`, falling back to
+            :data:`TILE_BITS`).  Ignored by "numpy".  The gather window
+            is always ``tile_bits + WINDOW_MARGIN``.
         interpret: Pallas interpret-mode override (None = interpret
             exactly when no TPU is present); ignored by "numpy".
 
     Returns:
-        The packed payload bytes, identical across backends.
+        The packed payload bytes, identical across backends and across
+        every ``tile_bits``.
     """
     if select_backend(backend) == "numpy":
         return ref.pack_bits_ref(codes, lengths)
-    return _pack_bits_device(codes, lengths, interpret)
+    return _pack_bits_device(codes, lengths, interpret, tile_bits)
 
 
-def make_packer(backend: str = "auto", interpret: bool | None = None):
+def make_packer(backend: str = "auto", interpret: bool | None = None,
+                tile_bits: int | None = None):
     """Packing callable for the entropy encoders' ``packer`` argument.
 
     Returns ``None`` when the resolved backend is "numpy" — callers
@@ -78,7 +88,7 @@ def make_packer(backend: str = "auto", interpret: bool | None = None):
     if select_backend(backend) == "numpy":
         return None
     return functools.partial(pack_bits, backend="pallas",
-                             interpret=interpret)
+                             tile_bits=tile_bits, interpret=interpret)
 
 
 def _pow2(n: int) -> int:
@@ -88,7 +98,8 @@ def _pow2(n: int) -> int:
     return p
 
 
-def _pack_bits_device(codes, lengths, interpret: bool | None) -> bytes:
+def _pack_bits_device(codes, lengths, interpret: bool | None,
+                      tile_bits: int | None = None) -> bytes:
     """Host orchestration of the device scatter-pack.
 
     Stages 1–2 (filter + prefix-sum offsets, plus the per-tile
@@ -105,11 +116,14 @@ def _pack_bits_device(codes, lengths, interpret: bool | None) -> bytes:
     m = int(c.size)
     if m > MAX_DEVICE_FIELDS:
         return ref.scatter_pack_ref(c, ln, s, total).tobytes()
-    n_tiles = _pow2(-(-total // TILE_BITS))
-    m_pad = _pow2(m + WINDOW)
+    if tile_bits is None:
+        tile_bits = tuning.tile_for("pack_bits", total)
+    window = tile_bits + WINDOW_MARGIN
+    n_tiles = _pow2(-(-total // tile_bits))
+    m_pad = _pow2(m + window)
     first = np.searchsorted(s + ln, np.arange(n_tiles, dtype=np.int64)
-                            * TILE_BITS, side="right")
-    first = np.minimum(first, m_pad - WINDOW).astype(np.int32)
+                            * tile_bits, side="right")
+    first = np.minimum(first, m_pad - window).astype(np.int32)
 
     def col(arr):
         out = np.zeros((m_pad, 1), np.int32)
@@ -117,7 +131,7 @@ def _pack_bits_device(codes, lengths, interpret: bool | None) -> bytes:
         return out
 
     out = kernel.pack_bits_pallas(col(c), col(ln), col(s), first,
-                                  tile_bits=TILE_BITS, window=WINDOW,
+                                  tile_bits=tile_bits, window=window,
                                   interpret=interpret)
     nbytes = (total + 7) // 8
     by = np.asarray(out).astype(np.uint8).reshape(-1)[:nbytes].copy()

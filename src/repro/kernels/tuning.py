@@ -1,0 +1,241 @@
+"""Tuned-tile artifact: the routing side of the kernel autotuner.
+
+The autotuner (:mod:`repro.bench.autotune`) sweeps pow2 tile candidates
+per (kernel, backend, shape bucket) and persists the winners as a
+versioned, git-sha-stamped JSON artifact (``results/tuning.json`` by
+default).  This module is the *consumer*: each kernel's ``ops.py``
+router calls :func:`tile_for` when the caller leaves the tile knob at
+``None``, and gets either a tuned winner or the built-in default.
+
+The loader is deliberately paranoid and quiet:
+
+* the artifact is read lazily, once, under a lock (engine worker
+  threads route ``pack_bits`` concurrently);
+* a missing file, unparseable JSON, wrong ``schema_version``, invalid
+  entries, or a backend mismatch each fall back to :data:`DEFAULTS`
+  with a **single** :class:`TuningWarning` per failure reason — never
+  an exception, never a repeat warning, never a silent misroute;
+* ``REPRO_TUNING_PATH`` overrides the artifact location (tests and
+  multi-machine result trees).
+
+This module imports without jax so the jax-free entropy decode workers
+can keep importing the kernel packages' neighbours cheaply; only
+:func:`tile_for` touches the backend name, and callers pass it in.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+
+TUNING_SCHEMA_VERSION = 1
+
+ENV_VAR = "REPRO_TUNING_PATH"
+
+# Built-in defaults: the pre-autotuner hard-coded knobs, kept as the
+# fallback whenever no valid tuned entry applies.  ``tile`` is the
+# pick_tile target for the image kernels; ``tile_bits`` is the per-tile
+# bit budget of the entropy pack/unpack kernels (window margins are
+# derived by the ops modules, not stored here).
+DEFAULTS = {
+    "dct8x8": {"tile": 256},
+    "cordic_loeffler": {"tile": 256},
+    "fused_codec": {"tile": 256},
+    "pack_bits": {"tile_bits": 1024},
+    "unpack_bits": {"tile_bits": 2048},
+}
+
+KERNELS = tuple(DEFAULTS)
+
+# The single knob each kernel exposes to the autotuner.
+PARAM_OF = {k: next(iter(v)) for k, v in DEFAULTS.items()}
+
+
+class TuningWarning(UserWarning):
+    """A tuning artifact could not be used; built-in defaults apply."""
+
+
+_lock = threading.Lock()
+_cache: dict = {"path": None, "doc": None}
+_warned: set = set()
+
+
+def default_path() -> pathlib.Path:
+    """Artifact path: ``$REPRO_TUNING_PATH`` or ``<repo>/results/tuning.json``."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path(__file__).resolve().parents[3] / "results" / "tuning.json"
+
+
+def bucket_of(dim: int) -> int:
+    """Pow2 shape bucket a dimension (or bit count) falls into (min 8).
+
+    Tuned entries are keyed by pow2 buckets, the same bounded-shape-set
+    idiom the serving engine and the pack/unpack routers already use,
+    so one sweep covers a family of nearby sizes.
+    """
+    b = 8
+    while b < dim:
+        b *= 2
+    return b
+
+
+def validate(doc) -> list:
+    """Check an artifact document; returns its entries or raises ValueError."""
+    if not isinstance(doc, dict):
+        raise ValueError("tuning artifact is not a JSON object")
+    version = doc.get("schema_version")
+    if version != TUNING_SCHEMA_VERSION:
+        raise ValueError(
+            f"tuning schema_version={version!r} but this reader understands "
+            f"{TUNING_SCHEMA_VERSION}; re-run `python -m repro.bench autotune`")
+    if not isinstance(doc.get("backend"), str):
+        raise ValueError("tuning artifact has no backend string")
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        raise ValueError("tuning artifact has no entries list")
+    for e in entries:
+        if not isinstance(e, dict):
+            raise ValueError("tuning entry is not an object")
+        kern = e.get("kernel")
+        if kern not in KERNELS:
+            raise ValueError(f"tuning entry for unknown kernel {kern!r}")
+        bucket = e.get("bucket")
+        if not (isinstance(bucket, int) and bucket >= 8
+                and bucket & (bucket - 1) == 0):
+            raise ValueError(f"tuning entry bucket {bucket!r} is not a pow2 >= 8")
+        params = e.get("params")
+        if not isinstance(params, dict) or PARAM_OF[kern] not in params:
+            raise ValueError(
+                f"tuning entry for {kern!r} lacks param {PARAM_OF[kern]!r}")
+        value = params[PARAM_OF[kern]]
+        if not (isinstance(value, int) and value >= 8
+                and value & (value - 1) == 0):
+            raise ValueError(
+                f"tuning value {value!r} for {kern!r} is not a pow2 >= 8")
+        if PARAM_OF[kern] == "tile_bits" and value % 8:
+            raise ValueError(f"tile_bits {value} is not a byte multiple")
+    return entries
+
+
+def make_doc(entries: list, *, backend: str, environment: dict | None = None
+             ) -> dict:
+    """Assemble an artifact document (the autotuner's writer half)."""
+    doc = {
+        "schema_version": TUNING_SCHEMA_VERSION,
+        "backend": backend,
+        "environment": dict(environment or {}),
+        "entries": list(entries),
+    }
+    validate(doc)
+    return doc
+
+
+def save(doc: dict, path: str | os.PathLike | None = None) -> pathlib.Path:
+    """Write a validated artifact document; returns the path written."""
+    validate(doc)
+    p = pathlib.Path(path) if path is not None else default_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(doc, indent=1) + "\n")
+    return p
+
+
+def invalidate_cache() -> None:
+    """Forget the cached artifact (and warning history): next lookup reloads."""
+    with _lock:
+        _cache["path"] = None
+        _cache["doc"] = None
+        _warned.clear()
+
+
+def _warn_once(reason_key: str, message: str) -> None:
+    # Caller holds _lock.
+    if reason_key in _warned:
+        return
+    _warned.add(reason_key)
+    import warnings
+    warnings.warn(message, TuningWarning, stacklevel=4)
+
+
+def _load_doc() -> dict | None:
+    """The cached artifact document, or None when defaults apply."""
+    path = default_path()
+    with _lock:
+        if _cache["path"] == path:
+            return _cache["doc"]
+        doc = None
+        try:
+            raw = path.read_text()
+        except FileNotFoundError:
+            _warn_once("missing", f"no tuning artifact at {path}; using "
+                       f"built-in tile defaults (run `python -m repro.bench "
+                       f"autotune` to generate one)")
+        except OSError as e:
+            _warn_once("unreadable", f"tuning artifact {path} unreadable "
+                       f"({e}); using built-in tile defaults")
+        else:
+            try:
+                parsed = json.loads(raw)
+                validate(parsed)
+                doc = parsed
+            except (ValueError, TypeError) as e:
+                _warn_once("invalid", f"tuning artifact {path} rejected "
+                           f"({e}); using built-in tile defaults")
+        _cache["path"] = path
+        _cache["doc"] = doc
+        return doc
+
+
+def lookup(kernel: str, dim: int, *, backend: str) -> dict | None:
+    """Tuned params for ``kernel`` at ``dim`` on ``backend``, or None.
+
+    Bucket precedence: the smallest swept bucket >= the requested
+    bucket (a sweep at 256 covers a 200-wide image padded into the
+    256 bucket), else the largest swept bucket (better a measured
+    winner from a nearby smaller shape than an unmeasured default).
+    Returns None — defaults apply — when no valid artifact entry for
+    this kernel/backend exists.
+    """
+    if kernel not in KERNELS:
+        raise KeyError(f"unknown kernel {kernel!r}; expected one of {KERNELS}")
+    doc = _load_doc()
+    if doc is None:
+        return None
+    if doc["backend"] != backend:
+        with _lock:
+            _warn_once("backend", f"tuning artifact was swept on backend "
+                       f"{doc['backend']!r} but this process runs "
+                       f"{backend!r}; using built-in tile defaults "
+                       f"(re-run `python -m repro.bench autotune` here)")
+        return None
+    mine = [e for e in doc["entries"] if e["kernel"] == kernel]
+    if not mine:
+        return None
+    want = bucket_of(dim)
+    at_least = [e for e in mine if e["bucket"] >= want]
+    if at_least:
+        entry = min(at_least, key=lambda e: e["bucket"])
+    else:
+        entry = max(mine, key=lambda e: e["bucket"])
+    return dict(entry["params"])
+
+
+def tile_for(kernel: str, dim: int, backend: str | None = None) -> int:
+    """The routed tile knob: tuned winner when one applies, else default.
+
+    ``dim`` is the padded image dimension for the image kernels and the
+    payload bit count for ``pack_bits``/``unpack_bits``.  ``backend``
+    defaults to the current jax backend (imported lazily so this module
+    stays importable without jax).
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    params = lookup(kernel, dim, backend=backend)
+    name = PARAM_OF[kernel]
+    if params is not None:
+        return int(params[name])
+    return int(DEFAULTS[kernel][name])

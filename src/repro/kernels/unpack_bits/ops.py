@@ -16,9 +16,10 @@ import jax
 import numpy as np
 
 from repro.core.entropy import bitio, huffman
+from repro.kernels import tuning
 from repro.kernels.unpack_bits import kernel, ref
 
-TILE_BITS = 2048                    # bit offsets resolved per program
+TILE_BITS = 2048                    # default bit offsets resolved per program
 WINDOW = TILE_BITS + ref.MARGIN_BITS
 
 # Above this many payload bits the stream falls back to the NumPy
@@ -48,6 +49,7 @@ def unpack_bits(payload: bytes, n_blocks: int,
                 dc_table: huffman.CanonicalTable,
                 ac_table: huffman.CanonicalTable, *,
                 backend: str = "auto",
+                tile_bits: int | None = None,
                 interpret: bool | None = None) -> tuple:
     """Decode one entropy payload into ``(dc_diff, ac)`` coefficients.
 
@@ -62,19 +64,26 @@ def unpack_bits(payload: bytes, n_blocks: int,
         ac_table: (run, size) Huffman table.
         backend: "auto" (Pallas on TPU, NumPy elsewhere), "pallas", or
             "numpy".
+        tile_bits: bit offsets resolved per kernel program (pow2);
+            ``None`` routes through the tuned-tile artifact
+            (:func:`repro.kernels.tuning.tile_for`, falling back to
+            :data:`TILE_BITS`).  Ignored by "numpy".  The speculative
+            window is always ``tile_bits + ref.MARGIN_BITS``.
         interpret: Pallas interpret-mode override (None = interpret
             exactly when no TPU is present); ignored by "numpy".
 
     Returns:
         ``(dc_diff (n_blocks,) int32, ac (n_blocks, 63) int32)``,
-        identical across backends.
+        identical across backends and across every ``tile_bits``.
     """
     if select_backend(backend) == "numpy":
         return ref.unpack_bits_ref(payload, n_blocks, dc_table, ac_table)
-    return _unpack_device(payload, n_blocks, dc_table, ac_table, interpret)
+    return _unpack_device(payload, n_blocks, dc_table, ac_table, interpret,
+                          tile_bits)
 
 
-def make_unpacker(backend: str = "auto", interpret: bool | None = None):
+def make_unpacker(backend: str = "auto", interpret: bool | None = None,
+                  tile_bits: int | None = None):
     """Unpacking callable for the entropy decoders' ``unpacker`` argument.
 
     Returns ``None`` when the resolved backend is "numpy" — callers
@@ -87,7 +96,7 @@ def make_unpacker(backend: str = "auto", interpret: bool | None = None):
     if select_backend(backend) == "numpy":
         return None
     return functools.partial(unpack_bits, backend="pallas",
-                             interpret=interpret)
+                             tile_bits=tile_bits, interpret=interpret)
 
 
 def _pow2(n: int) -> int:
@@ -130,7 +139,8 @@ def table_params(table: huffman.CanonicalTable) -> tuple:
 def _unpack_device(payload: bytes, n_blocks: int,
                    dc_table: huffman.CanonicalTable,
                    ac_table: huffman.CanonicalTable,
-                   interpret: bool | None) -> tuple:
+                   interpret: bool | None,
+                   tile_bits: int | None = None) -> tuple:
     """Host orchestration of the device speculative decode.
 
     The kernel stages unit/outcome words for every bit offset; chain
@@ -151,9 +161,12 @@ def _unpack_device(payload: bytes, n_blocks: int,
     nbits = len(payload) * 8
     if nbits == 0 or nbits > MAX_DEVICE_BITS:
         return ref.unpack_bits_ref(payload, n_blocks, dc_table, ac_table)
+    if tile_bits is None:
+        tile_bits = tuning.tile_for("unpack_bits", nbits)
+    window = tile_bits + ref.MARGIN_BITS
     win = bitio.bit_windows(payload)
-    n_tiles = _pow2(-(-(nbits + 1) // TILE_BITS))
-    n_pad = n_tiles * TILE_BITS + WINDOW
+    n_tiles = _pow2(-(-(nbits + 1) // tile_bits))
+    n_pad = n_tiles * tile_bits + window
     win_col = np.full((n_pad, 1), 0xFFFF, np.int32)
     win_col[:win.size, 0] = win
     dc_params, dc_syms = table_params(dc_table)
@@ -162,11 +175,11 @@ def _unpack_device(payload: bytes, n_blocks: int,
         np.array([nbits], np.int32),
         np.concatenate([dc_params, ac_params]),
         win_col, dc_syms.reshape(1, -1), ac_syms.reshape(1, -1),
-        n_tiles=n_tiles, tile_bits=TILE_BITS, window=WINDOW,
+        n_tiles=n_tiles, tile_bits=tile_bits, window=window,
         interpret=interpret)
     dcw, acw, outc = (np.asarray(a) for a in (dcw, acw, outc))
 
     def get_tile(t):
         return dcw[t], acw[t], outc[t]
 
-    return ref.resolve(win, nbits, n_blocks, TILE_BITS, get_tile)
+    return ref.resolve(win, nbits, n_blocks, tile_bits, get_tile)

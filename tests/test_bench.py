@@ -24,7 +24,8 @@ def test_registry_has_paper_tables_and_serve_cases():
     for name in PAPER_TABLE_CASES + ("rate_distortion",
                                      "entropy_throughput",
                                      "serve_batch_throughput",
-                                     "serve_ragged", "framework_micro"):
+                                     "serve_ragged", "framework_micro",
+                                     "roofline"):
         assert name in cases
     # each paper table declares which table it feeds
     assert cases["table1_lena"].table == "Table 1"
@@ -260,6 +261,107 @@ def test_entropy_identity_gate_and_adversarial_blocks():
     assert longest_run >= 16
 
 
+def test_render_golden_snippet_tuning_table():
+    rec = schema.BenchRecord(
+        label="dct8x8_b256",
+        params={"kernel": "dct8x8", "bucket": 256, "tile": 128,
+                "candidates": [64, 128, 256]},
+        timings_us={"tile_64": {"median_us": 900.0, "best_us": 880.0,
+                                "iters": 3},
+                    "tile_128": {"median_us": 500.0, "best_us": 480.0,
+                                 "iters": 3},
+                    "tile_256": {"median_us": 700.0, "best_us": 690.0,
+                                 "iters": 3}},
+        metrics={"best_us": 500.0, "speedup_vs_default": 1.4})
+    md = report.render([schema.BenchResult(
+        name="autotune", suite="paper", records=[rec],
+        environment={"backend": "cpu"})])
+    assert "## Kernel tile autotuning" in md
+    assert "| dct8x8 | 256 | tile=128 | 0.500 | 1.40x | 3 |" in md
+
+
+def test_render_golden_snippet_roofline_table():
+    rec = schema.BenchRecord(
+        label="dct8x8",
+        params={"kernel": "dct8x8", "height": 256, "width": 256},
+        timings_us={"routed": {"median_us": 2000.0, "best_us": 1900.0,
+                               "iters": 3}},
+        metrics={"flops": 2.1e6, "bytes_accessed": 2.6e6,
+                 "achieved_gflop_s": 1.05, "achieved_gb_s": 1.31,
+                 "frac_peak_flops": 5.33e-6, "frac_peak_bw": 1.6e-3,
+                 "intensity_flop_per_byte": 0.81, "compute_bound": 0.0})
+    bits = schema.BenchRecord(
+        label="pack_bits",
+        params={"kernel": "pack_bits", "payload_bits": 32768,
+                "entropy_size": 128, "fields": 4000},
+        timings_us={"routed": {"median_us": 800.0, "best_us": 790.0,
+                               "iters": 3}},
+        metrics={"flops": 0.0, "bytes_accessed": 52096.0,
+                 "achieved_gflop_s": 0.0, "achieved_gb_s": 0.065,
+                 "frac_peak_flops": 0.0, "frac_peak_bw": 7.9e-5,
+                 "intensity_flop_per_byte": 0.0, "compute_bound": 0.0})
+    md = report.render([schema.BenchResult(
+        name="roofline", suite="paper", records=[rec, bits],
+        environment={})])
+    assert "## Kernel roofline (achieved vs peak)" in md
+    assert "| dct8x8 | 256x256 | 2.000 | 1.05 | 1.31 " in md
+    assert "| pack_bits | 32768 bits | 0.800 | 0.00 | 0.07 " in md
+    assert "| memory |" in md
+
+
+def test_default_artifacts_excludes_tuning_json(tmp_path):
+    schema.save(_fake_result(), tmp_path)
+    (tmp_path / "tuning.json").write_text("{}")
+    paths = runner.default_artifacts(tmp_path)
+    assert [p.name for p in paths] == ["table1_lena.json"]
+    # ... so a report glob over a tuned results/ tree never crashes
+    assert "Table 1" in report.render(schema.load_many(paths))
+
+
+def test_autotune_sweep_machinery():
+    """The sweep->entries->artifact pipeline on a fake candidate runner
+    (no kernel timing): winner selection, record layout, tuning schema."""
+    from repro.bench import autotune
+    from repro.bench.timer import TimerConfig
+    from repro.kernels import tuning
+
+    fake_us = {8: 300.0, 16: 100.0, 32: 200.0}
+    calls = []
+
+    def run_candidate(tile):
+        calls.append(tile)
+
+    import repro.bench.timer as timer_mod
+    real_measure = autotune.measure
+    try:
+        autotune.measure = lambda fn, cand, warmup, iters: (
+            fn(cand) or timer_mod.Timing(median_us=fake_us[cand],
+                                         best_us=fake_us[cand], iters=iters))
+        rec = autotune._sweep_one(
+            "dct8x8", 64, (8, 16, 32), run_candidate,
+            TimerConfig(warmup=1, iters=2), lambda *_: None,
+            extra_params={"image_hw": 64})
+    finally:
+        autotune.measure = real_measure
+
+    assert calls == [8, 16, 32]
+    assert rec.params["tile"] == 16 and rec.metrics["best_us"] == 100.0
+    assert set(rec.timings_us) == {"tile_8", "tile_16", "tile_32"}
+    entries = autotune.tuning_entries([rec])
+    doc = tuning.make_doc(entries, backend="cpu")
+    assert tuning.validate(doc)[0] == {
+        "kernel": "dct8x8", "bucket": 64, "params": {"tile": 16},
+        "best_us": 100.0}
+
+
+def test_cli_has_autotune_subcommand():
+    from repro.bench import cli
+    args = cli.build_parser().parse_args(
+        ["autotune", "--smoke", "--out", "r/"])
+    assert args.fn is cli._cmd_autotune
+    assert args.smoke and args.out == "r/"
+
+
 def test_check_rd_monotone():
     good = [(10, 0.1, 30.0), (50, 0.4, 37.0), (90, 1.5, 40.0)]
     assert check_rd_monotone(good) == []
@@ -289,7 +391,8 @@ def test_smoke_suite_end_to_end(tmp_path):
     for title in ("## Table 1", "## Table 2", "## Table 3", "## Table 4",
                   "## Rate–distortion (measured bytes)",
                   "## Entropy throughput (vectorized host coding)",
-                  "## Batch throughput", "## Ragged mixed-size batches"):
+                  "## Batch throughput", "## Ragged mixed-size batches",
+                  "## Kernel roofline (achieved vs peak)"):
         assert title in md, f"missing section {title}"
     # sanity on reproduced physics: PSNR gap is positive (exact > cordic)
     t3 = next(r for r in results if r.name == "table3_psnr_lena")
