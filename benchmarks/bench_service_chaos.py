@@ -1,0 +1,82 @@
+"""Chaos traffic through the resilient service — thin entrypoint.
+
+The storm itself is :func:`repro.bench.cases.service_chaos_points`
+(shared with the ``service_chaos`` registry case that feeds
+RESULTS.md): open-loop Poisson traffic at a multiple of the calibrated
+engine capacity while a seeded, call-indexed fault plan injects engine
+exceptions, latency spikes past the attempt timeout, one worker death
+and a payload-corruption burst.  ``--check`` is the CI gate: it exits
+nonzero on any :func:`chaos_violations` finding — an outcome that is
+not conserved, a served payload that differs from serial
+``encode_batch``, an unhandled exception escaping the dispatch loop, a
+breaker that never completed its closed→open→half-open→closed cycle,
+or a scripted fault kind that never fired.
+
+    PYTHONPATH=src python benchmarks/bench_service_chaos.py
+    PYTHONPATH=src python benchmarks/bench_service_chaos.py \
+        --size 48 --requests 80 --load 1.0 --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.bench.cases import chaos_violations, service_chaos_points
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=48,
+                    help="base square image side for the mixed-size pool")
+    ap.add_argument("--requests", type=int, default=80,
+                    help="Poisson arrivals driven through the storm")
+    ap.add_argument("--load", type=float, default=1.0,
+                    help="offered load as a multiple of calibrated "
+                         "engine capacity")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds the fault plan, backoff jitter and "
+                         "arrival process")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any conservation / byte-identity / "
+                         "breaker-cycle / unhandled-exception violation")
+    args = ap.parse_args()
+
+    print(f"# backend={jax.default_backend()} "
+          f"devices={jax.local_device_count()} size={args.size} "
+          f"requests={args.requests} load={args.load:g} "
+          f"seed={args.seed}")
+    records = service_chaos_points(args.size, args.requests, args.load,
+                                   max_batch=args.max_batch,
+                                   seed=args.seed)
+    print("load,p50_ms,p99_ms,goodput_rps,served,reject_rate,failed,"
+          "retry_rate,timeouts,corrupt_caught,degraded_served,"
+          "byte_mismatches")
+    for r in records:
+        m = r.metrics
+        print(f"{r.params['offered_load']:g},{m['p50_ms']:.2f},"
+              f"{m['p99_ms']:.2f},{m['goodput_rps']:.1f},"
+              f"{m['served']:.0f},{m['reject_rate']:.3f},"
+              f"{m['failed']:.0f},{m['retry_rate']:.3f},"
+              f"{m['timeouts']:.0f},{m['corrupt_caught']:.0f},"
+              f"{m['degraded_served']:.0f},{m['byte_mismatches']:.0f}")
+        cyc = " -> ".join(f"{frm}->{to}@{t:.2f}s" for t, frm, to
+                          in r.params["breaker_transitions"])
+        print(f"# breaker: {cyc or 'no transitions'}")
+        print(f"# faults injected: {r.params['fault_events']} over "
+              f"{r.params['engine_calls']} engine calls")
+
+    if args.check:
+        violations = chaos_violations(records)
+        if violations:
+            for v in violations:
+                print(f"VIOLATION: {v}", file=sys.stderr)
+            raise SystemExit(1)
+        print("# chaos gate: OK")
+
+
+if __name__ == "__main__":
+    main()

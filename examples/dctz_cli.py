@@ -10,7 +10,14 @@ Cable-car stand-ins so the example runs with no input files at all.
         /tmp/lena.dctz --quality 50
     PYTHONPATH=src python examples/dctz_cli.py info   /tmp/lena.dctz
     PYTHONPATH=src python examples/dctz_cli.py decode /tmp/lena.dctz \
-        /tmp/lena_rec.pgm
+        /tmp/lena_rec.pgm --verify-crc
+
+``info`` and ``decode`` exit nonzero with a one-line ``error:``
+diagnostic on a malformed stream (truncation, trailing bytes, CRC
+mismatch, bad tables) instead of a traceback, so shell pipelines can
+gate on corruption; ``decode --verify-crc`` checks the container CRC
+explicitly before parsing and names the stored vs computed digests on
+mismatch.
 """
 
 from __future__ import annotations
@@ -102,17 +109,39 @@ def cmd_encode(args) -> int:
     return 0
 
 
+def _stream_error(path: str, exc: Exception) -> int:
+    """One-line diagnostic on stderr for a malformed stream, exit 1."""
+    kind = ("truncated stream" if isinstance(exc, entropy.TruncatedStream)
+            else "bad stream")
+    print(f"error: {path}: {kind}: {exc}", file=sys.stderr)
+    return 1
+
+
 def cmd_decode(args) -> int:
     blob = pathlib.Path(args.input).read_bytes()
-    if args.time:
-        rec, dt = _timed(entropy.decode_image, blob, args.mode)
-        rec = np.asarray(rec)
-        h, w = rec.shape
-        print(f"decode: {dt * 1e3:.2f} ms "
-              f"({h * w / 1e6 / dt:.1f} MB/s of pixels, "
-              f"{1 / dt:.1f} img/s)")
-    else:
-        rec = np.asarray(entropy.decode_image(blob, mode=args.mode))
+    if args.verify_crc:
+        try:
+            hdr = entropy.read_header(blob)
+            if not entropy.verify_crc(blob):
+                return _stream_error(
+                    args.input, entropy.BitstreamError(
+                        f"CRC mismatch (header says "
+                        f"{hdr['crc32']:#010x})"))
+        except (entropy.BitstreamError, entropy.TruncatedStream) as exc:
+            return _stream_error(args.input, exc)
+        print(f"{args.input}: crc ok")
+    try:
+        if args.time:
+            rec, dt = _timed(entropy.decode_image, blob, args.mode)
+            rec = np.asarray(rec)
+            h, w = rec.shape
+            print(f"decode: {dt * 1e3:.2f} ms "
+                  f"({h * w / 1e6 / dt:.1f} MB/s of pixels, "
+                  f"{1 / dt:.1f} img/s)")
+        else:
+            rec = np.asarray(entropy.decode_image(blob, mode=args.mode))
+    except (entropy.BitstreamError, entropy.TruncatedStream) as exc:
+        return _stream_error(args.input, exc)
     write_gray(pathlib.Path(args.output), rec)
     print(f"{args.output}: {rec.shape[0]}x{rec.shape[1]} reconstructed")
     if args.original:
@@ -129,17 +158,23 @@ def _table_desc(table_id: int) -> str:
 
 def cmd_info(args) -> int:
     data = pathlib.Path(args.input).read_bytes()
-    hdr = entropy.read_header(data)
+    try:
+        hdr = entropy.read_header(data)
+        crc_ok = entropy.verify_crc(data)
+    except (entropy.BitstreamError, entropy.TruncatedStream) as exc:
+        return _stream_error(args.input, exc)
     px = hdr["height"] * hdr["width"]
-    crc = "ok" if entropy.verify_crc(data) else "MISMATCH"
     print(f"{args.input}: DCTZ v{hdr['version']} "
           f"{hdr['height']}x{hdr['width']} quality={hdr['quality']} "
           f"transform={hdr['transform']} "
           f"tables=(dc:{_table_desc(hdr['dc_table_id'])},"
           f"ac:{_table_desc(hdr['ac_table_id'])}) "
-          f"crc={crc} "
+          f"crc={'ok' if crc_ok else 'MISMATCH'} "
           f"payload={hdr['payload_nbytes']}B "
           f"total={len(data)}B ({len(data) * 8 / px:.3f} bits/px)")
+    if not crc_ok:
+        return _stream_error(args.input, entropy.BitstreamError(
+            f"CRC mismatch (header says {hdr['crc32']:#010x})"))
     return 0
 
 
@@ -171,6 +206,10 @@ def main() -> int:
                      choices=["standard", "matched"])
     dec.add_argument("--original", default=None,
                      help="optional original image to PSNR against")
+    dec.add_argument("--verify-crc", action="store_true",
+                     help="check the container CRC before parsing and "
+                          "fail with the stored vs computed digests on "
+                          "mismatch")
     dec.add_argument("--time", action="store_true",
                      help="print decode wall time and MB/s (one warmup "
                           "call first, so jit compilation is excluded)")

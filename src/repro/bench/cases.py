@@ -1046,6 +1046,302 @@ def service_traffic(ctx: RunContext) -> list:
                                   grid["loads"])
 
 
+SERVICE_CHAOS_GRID = {
+    "smoke": {"size": 48, "n_requests": 80, "load": 1.0},
+    "paper": {"size": 64, "n_requests": 160, "load": 1.0},
+    "full": {"size": 64, "n_requests": 240, "load": 1.5},
+}
+
+#: Fault-kind coverage the chaos gate requires (every kind must fire).
+CHAOS_FAULT_KINDS = ("fail", "latency", "corrupt", "kill")
+
+
+def chaos_fault_plan(step_s: float, timeout_s: float, seed: int = 0):
+    """The seeded fault storm the chaos bench replays, by call index.
+
+    Phases are indexed by **engine-call number** (not wall time), so the
+    same (plan, seed) injects the same faults regardless of scheduler
+    jitter: a clean warm-up, an exception storm long enough to trip the
+    breaker *and* feed its half-open probes (probes consume call
+    indices, so the closed→open→half-open→closed cycle completes
+    deterministically in call space), a clean recovery window, latency
+    spikes past the attempt timeout, one worker death, a corruption
+    burst (every payload byte-flipped — the CRC validator must catch
+    all of them), then a clean tail that drains the retry backlog.
+    """
+    from repro.serve.chaos import FaultPhase, FaultPlan
+    return FaultPlan(phases=(
+        # exception storm: trips the breaker by call 3 (min_calls=4,
+        # threshold 0.5); the first half-open probe lands on call 4
+        # (fails, re-opens), later probes land in the clean window
+        # [5, 8) and close the breaker — cycle provable in call space
+        FaultPhase(start=2, stop=5, fail_rate=1.0),
+        FaultPhase(start=8, stop=9, latency_rate=1.0,
+                   latency_s=2.0 * timeout_s),
+        FaultPhase(start=9, stop=10, kill_rate=1.0),
+        FaultPhase(start=10, stop=12, corrupt_rate=1.0),
+    ), seed=seed)
+
+
+def service_chaos_points(size: int, n_requests: int, load: float,
+                         max_batch: int = 4, seed: int = 0) -> list:
+    """Open-loop Poisson traffic through a *resilient* service under a
+    scripted fault storm (engine exceptions, latency spikes past the
+    attempt timeout, worker death, payload byte flips).
+
+    Same methodology as :func:`service_traffic_points` — arrivals at
+    precomputed absolute times against the calibrated engine capacity —
+    but the engine is wrapped in the deterministic
+    :class:`repro.serve.chaos.ChaosEngine` and the service runs with
+    the full resilience envelope: bounded retries, per-attempt
+    timeouts, a circuit breaker, CRC payload validation
+    (:func:`repro.serve.chaos.dctz_crc_ok`) and graceful degradation.
+
+    The record carries everything :func:`chaos_violations` CI-gates:
+    outcome conservation, the breaker's transition log, injected-fault
+    coverage, the unhandled-exception guard counter, and byte identity
+    of every served payload against serial ``encode_batch``.
+
+    Shared by the ``service_chaos`` registry case and
+    ``benchmarks/bench_service_chaos.py --check``.
+    """
+    import asyncio
+
+    from repro.serve import codec_engine
+    from repro.serve.admission import RejectedError
+    from repro.serve.chaos import ChaosEngine, dctz_crc_ok
+    from repro.serve.resilience import (BreakerConfig, DegradeConfig,
+                                        ResilienceConfig, RetryPolicy)
+    from repro.serve.service import (CodecService, EngineFailure,
+                                     ServiceConfig)
+
+    pool = _traffic_pool(size)
+    step_s = calibrate_service_step(pool, max_batch)
+    capacity_rps = max_batch / step_s
+    offered_rps = load * capacity_rps
+    timeout_s = max(6 * step_s, 0.05)
+    deadline_s = max(24 * step_s, 5 * timeout_s)
+    plan = chaos_fault_plan(step_s, timeout_s, seed=seed)
+
+    def inner(imgs, quality):
+        return codec_engine.encode_batch(list(imgs), quality)
+
+    eng = ChaosEngine(inner, plan)
+    cfg = ServiceConfig(
+        max_batch=max_batch,
+        max_wait_s=min(max(step_s / 2, 0.001), 0.05),
+        max_queue_depth=4 * max_batch,
+        initial_step_s=step_s,
+        default_deadline_s=deadline_s,
+        # the traffic reuses ~a dozen (image, quality) pairs — a warm
+        # cache would absorb nearly every request and starve the fault
+        # phases of engine calls, so the chaos run disables it
+        cache_entries=0,
+        # a timed-out attempt abandons its worker thread until the
+        # engine returns; a second worker keeps the service moving
+        # through the latency-spike phase
+        engine_concurrency=2,
+        resilience=ResilienceConfig(
+            timeout_s=timeout_s,
+            retry=RetryPolicy(max_attempts=3,
+                              backoff_base_s=step_s / 4,
+                              backoff_cap_s=2 * step_s,
+                              budget_rate=2 * offered_rps,
+                              budget_burst=2 * max_batch * 4),
+            breaker=BreakerConfig(window=8, min_calls=4,
+                                  failure_threshold=0.5,
+                                  reset_timeout_s=2 * step_s,
+                                  half_open_max_calls=1,
+                                  half_open_successes=2),
+            # level-1 cap = 30, already in TRAFFIC_QUALITIES: degraded
+            # encodes hit warm compilations only
+            degrade=DegradeConfig(quality_caps=(100, 30),
+                                  urgent_batch_caps=(None, 2),
+                                  enter_pressure=0.85,
+                                  exit_pressure=0.3,
+                                  sustain_s=step_s,
+                                  cool_s=4 * step_s),
+            validate_payload=dctz_crc_ok,
+            seed=seed))
+
+    async def run_storm(rng) -> tuple:
+        arrivals = np.cumsum(rng.exponential(1.0 / offered_rps,
+                                             n_requests))
+        outcomes: list = []
+        served_payloads: list = []      # (pool_idx, quality, payload)
+
+        async def one(at: float, pool_idx: int, quality: int):
+            await asyncio.sleep(at)
+            t0 = time.perf_counter()
+            try:
+                resp = await svc.submit(pool[pool_idx], quality=quality)
+                outcomes.append(("served", time.perf_counter() - t0,
+                                 resp.deadline_missed))
+                served_payloads.append((pool_idx, resp.quality,
+                                        resp.payload))
+            except RejectedError as exc:
+                outcomes.append((f"rejected:{exc.reason}",
+                                 time.perf_counter() - t0, False))
+            except EngineFailure:
+                outcomes.append(("failed", time.perf_counter() - t0,
+                                 False))
+
+        async with CodecService(cfg, engine=eng) as svc:
+            t_start = time.perf_counter()
+            await asyncio.gather(*[
+                one(float(arrivals[i]),
+                    int(rng.integers(len(pool))),
+                    TRAFFIC_QUALITIES[int(rng.integers(
+                        len(TRAFFIC_QUALITIES)))])
+                for i in range(n_requests)])
+            makespan = time.perf_counter() - t_start
+        return outcomes, served_payloads, makespan, svc
+
+    rng = np.random.default_rng(seed)
+    outcomes, served_payloads, makespan, svc = asyncio.run(
+        run_storm(rng))
+    stats = svc.stats
+
+    # byte identity: every successfully served payload must match the
+    # serial single-image encode exactly — resilience may delay or shed
+    # work, never alter it
+    byte_mismatches = 0
+    reference: dict = {}
+    for pool_idx, quality, payload in served_payloads:
+        k = (pool_idx, quality)
+        if k not in reference:
+            reference[k] = inner([pool[pool_idx]], quality)[0]
+        if payload != reference[k]:
+            byte_mismatches += 1
+
+    served = [o for o in outcomes if o[0] == "served"]
+    lat_ms = sorted(o[1] * 1e3 for o in served)
+    in_deadline = sum(1 for o in served if not o[2])
+    rejects = [o for o in outcomes if o[0].startswith("rejected:")]
+
+    def pct(p):
+        if not lat_ms:
+            return float("nan")
+        return lat_ms[min(len(lat_ms) - 1,
+                          round(p / 100 * (len(lat_ms) - 1)))]
+
+    transitions = [[t, frm, to] for t, frm, to in
+                   svc.breaker.transitions]
+    return [BenchRecord(
+        label=f"storm_{load:g}x",
+        params={"offered_load": load, "offered_rps": offered_rps,
+                "capacity_rps": capacity_rps,
+                "step_ms": step_s * 1e3,
+                "timeout_ms": timeout_s * 1e3,
+                "deadline_ms": deadline_s * 1e3,
+                "n_requests": n_requests, "size": size,
+                "max_batch": max_batch, "seed": seed,
+                "qualities": list(TRAFFIC_QUALITIES),
+                "engine_calls": eng.calls,
+                "fault_events": eng.event_counts(),
+                "breaker_transitions": transitions,
+                "rejected_by_reason": dict(stats.rejected),
+                "dispatcher_ok": svc.dispatcher_error is None},
+        metrics={
+            "p50_ms": pct(50),
+            "p99_ms": pct(99),
+            "goodput_rps": in_deadline / makespan,
+            "served": float(len(served)),
+            "reject_rate": len(rejects) / n_requests,
+            "failed": float(stats.failed),
+            "retries": float(stats.retries),
+            "retry_rate": stats.retries / n_requests,
+            "timeouts": float(stats.timeouts),
+            "corrupt_caught": float(stats.corrupt_payloads),
+            "degraded_served": float(stats.degraded_served),
+            "closed_unserved": float(stats.closed_unserved),
+            "unhandled": float(stats.unhandled),
+            "byte_mismatches": float(byte_mismatches),
+        })]
+
+
+def chaos_violations(records) -> list:
+    """CI-gate checks for ``service_chaos`` records.
+
+    The resilience acceptance criteria, checked per record: outcome
+    conservation (served + rejected + failed == n_requests, degraded ⊆
+    served), zero byte mismatches against serial encode, zero unhandled
+    exceptions escaping the dispatch loop, a live dispatcher at close,
+    a provable closed→open→half-open→closed breaker cycle, and every
+    scripted fault kind having actually fired.
+
+    Returns:
+        Human-readable violation strings (empty == gate passes).
+    """
+    out = []
+    for rec in records:
+        n = rec.params["n_requests"]
+        served = rec.metrics["served"]
+        rejected = rec.metrics["reject_rate"] * n
+        failed = rec.metrics["failed"]
+        total = served + rejected + failed
+        if abs(total - n) > 1e-6:
+            out.append(f"{rec.label}: {total:g} outcomes for {n} "
+                       f"requests (served {served:g} + rejected "
+                       f"{rejected:g} + failed {failed:g})")
+        if rec.metrics["degraded_served"] > served:
+            out.append(f"{rec.label}: degraded_served "
+                       f"{rec.metrics['degraded_served']:g} exceeds "
+                       f"served {served:g}")
+        if rec.metrics["byte_mismatches"]:
+            out.append(f"{rec.label}: "
+                       f"{rec.metrics['byte_mismatches']:g} served "
+                       f"payloads differ from serial encode_batch")
+        if rec.metrics["unhandled"]:
+            out.append(f"{rec.label}: {rec.metrics['unhandled']:g} "
+                       f"unhandled exceptions escaped batch handling")
+        if not rec.params["dispatcher_ok"]:
+            out.append(f"{rec.label}: dispatcher crashed during the run")
+        if rec.metrics["closed_unserved"]:
+            out.append(f"{rec.label}: "
+                       f"{rec.metrics['closed_unserved']:g} futures "
+                       f"dangling at close")
+        cycle = ["closed", "open", "half_open", "closed"]
+        trans = rec.params["breaker_transitions"]
+        # the visited-state sequence: every from-state plus the final
+        # to-state; the required cycle must appear as a subsequence
+        states = [frm for _, frm, _ in trans]
+        if trans:
+            states.append(trans[-1][2])
+        i = 0
+        for s in states:
+            if i < len(cycle) and s == cycle[i]:
+                i += 1
+        if i < len(cycle):
+            out.append(f"{rec.label}: breaker never completed the "
+                       f"closed→open→half-open→closed cycle "
+                       f"(transitions: "
+                       f"{rec.params['breaker_transitions']})")
+        fired = rec.params["fault_events"]
+        for kind in CHAOS_FAULT_KINDS:
+            if not fired.get(kind):
+                out.append(f"{rec.label}: scripted fault kind "
+                           f"{kind!r} never fired "
+                           f"({rec.params['engine_calls']} engine "
+                           f"calls)")
+    return out
+
+
+@benchmark("service_chaos", suites=("smoke", "paper", "full"),
+           description="seeded fault storm through the resilient "
+                       "service: goodput, retry rate, breaker cycle, "
+                       "byte-identical payloads")
+def service_chaos(ctx: RunContext) -> list:
+    """The failure-mode view the clean traffic bench cannot give: how
+    goodput, latency and shed load behave through an engine exception
+    storm, timeout-tripping latency spikes, a worker death and a
+    payload-corruption burst — with retries, circuit breaking, CRC
+    validation and graceful degradation turned on (docs/serving.md)."""
+    grid = SERVICE_CHAOS_GRID.get(ctx.suite, SERVICE_CHAOS_GRID["paper"])
+    return service_chaos_points(grid["size"], grid["n_requests"],
+                                grid["load"])
+
+
 # ---------------------------------------------------------------------------
 # Framework micro-benches (suite "micro"; also in --full runs)
 # ---------------------------------------------------------------------------

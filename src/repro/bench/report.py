@@ -19,6 +19,7 @@ entropy_decode            Entropy decode (speculative unpack backends)
 serve_batch_throughput    Batch throughput curve (serving engine)
 serve_ragged              Ragged mixed-size batches (serving engine)
 service_traffic           Open-loop service traffic (async service)
+service_chaos             Fault-storm traffic (resilient service)
 autotune                  Kernel tile autotuning (sweep winners)
 roofline                  Kernel roofline (achieved vs peak)
 framework_micro           Framework micro-benches
@@ -228,6 +229,42 @@ def _service_traffic_table(result) -> str:
     return "\n".join(lines)
 
 
+def _service_chaos_table(result) -> str:
+    lines = ["## Fault-storm traffic (resilient service)", ""]
+    for r in result.records:
+        p, m = r.params, r.metrics
+        faults = ", ".join(f"{k} x{v}" for k, v in
+                           sorted(p["fault_events"].items()))
+        cycle = " → ".join([p["breaker_transitions"][0][1]] +
+                           [t[2] for t in p["breaker_transitions"]]) \
+            if p["breaker_transitions"] else "none"
+        lines += [
+            "Open-loop Poisson traffic at "
+            f"{p['offered_load']:g}x calibrated capacity "
+            f"({p['n_requests']} requests, {p['size']}px pool, "
+            f"deadline {p['deadline_ms']:.0f} ms, attempt timeout "
+            f"{p['timeout_ms']:.0f} ms) while a seeded call-indexed "
+            f"fault plan injects {faults} across {p['engine_calls']} "
+            "engine calls.  The resilience envelope (bounded retries, "
+            "circuit breaker, CRC payload validation, graceful "
+            "degradation) keeps every outcome conserved and every "
+            "served payload byte-identical to serial encode "
+            "(docs/serving.md); the chaos gate in CI enforces it.", "",
+            "| offered load | p50 (ms) | p99 (ms) | goodput (req/s) "
+            "| served | rejected | failed | retries | timeouts "
+            "| corrupt caught | byte mismatches |",
+            "|---|---|---|---|---|---|---|---|---|---|---|",
+            f"| {p['offered_load']:g}x | {m['p50_ms']:.1f} "
+            f"| {m['p99_ms']:.1f} | {m['goodput_rps']:.0f} "
+            f"| {m['served']:.0f} | {m['reject_rate'] * 100:.0f}% "
+            f"| {m['failed']:.0f} | {m['retries']:.0f} "
+            f"| {m['timeouts']:.0f} | {m['corrupt_caught']:.0f} "
+            f"| {m['byte_mismatches']:.0f} |", "",
+            f"Breaker cycle: {cycle}.",
+        ]
+    return "\n".join(lines)
+
+
 def _tuning_table(result) -> str:
     lines = ["## Kernel tile autotuning", "",
              "Pow2 tile sweep per (kernel, shape bucket) on backend "
@@ -328,6 +365,7 @@ _SECTIONS = (
     ("serve_batch_throughput", None),
     ("serve_ragged", None),
     ("service_traffic", None),
+    ("service_chaos", None),
     ("autotune", None),
     ("roofline", None),
     ("framework_micro", None),
@@ -389,6 +427,8 @@ def render(results) -> str:
             parts.append(_ragged_table(result))
         elif name == "service_traffic":
             parts.append(_service_traffic_table(result))
+        elif name == "service_chaos":
+            parts.append(_service_chaos_table(result))
         elif name == "autotune":
             parts.append(_tuning_table(result))
         elif name == "roofline":

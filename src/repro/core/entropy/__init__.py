@@ -30,6 +30,7 @@ byte layout a third-party decoder needs is specified in
 which is what makes the engine's process-pool decode fallback cheap.
 """
 
+from repro.core.entropy.bitio import TruncatedStream
 from repro.core.entropy.container import (BitstreamError, decode_image,
                                           decode_qcoeffs,
                                           decode_zigzag_host, encode_image,
@@ -37,6 +38,7 @@ from repro.core.entropy.container import (BitstreamError, decode_image,
                                           encode_zigzag_host, read_header,
                                           verify_crc)
 
-__all__ = ["BitstreamError", "decode_image", "decode_qcoeffs",
-           "decode_zigzag_host", "encode_image", "encode_qcoeffs",
-           "encode_zigzag_host", "read_header", "verify_crc"]
+__all__ = ["BitstreamError", "TruncatedStream", "decode_image",
+           "decode_qcoeffs", "decode_zigzag_host", "encode_image",
+           "encode_qcoeffs", "encode_zigzag_host", "read_header",
+           "verify_crc"]

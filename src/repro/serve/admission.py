@@ -7,7 +7,10 @@ requests that never enter a queue, or are swept out of one:
 
 * :class:`RejectedError` — the one exception type clients see for every
   load-shedding decision, tagged with a machine-readable ``reason``
-  (:data:`QUEUE_FULL`, :data:`DEADLINE_UNMEETABLE`, :data:`SHUTDOWN`),
+  (:data:`QUEUE_FULL`, :data:`DEADLINE_UNMEETABLE`, :data:`SHUTDOWN`,
+  :data:`CIRCUIT_OPEN`); :class:`ServiceClosed` and
+  :class:`repro.serve.resilience.CircuitOpen` are typed subclasses for
+  the two reasons callers most often branch on,
 * :class:`TenantTier` — per-tenant quality/deadline policy (a "free"
   tier encodes at a capped quality; a "gold" tier keeps what it asked
   for),
@@ -29,8 +32,9 @@ import math
 QUEUE_FULL = "queue_full"               # bounded-queue backpressure
 DEADLINE_UNMEETABLE = "deadline_unmeetable"   # could not/cannot make SLO
 SHUTDOWN = "shutdown"                   # service draining or closed
+CIRCUIT_OPEN = "circuit_open"           # engine-path breaker tripped
 
-REASONS = (QUEUE_FULL, DEADLINE_UNMEETABLE, SHUTDOWN)
+REASONS = (QUEUE_FULL, DEADLINE_UNMEETABLE, SHUTDOWN, CIRCUIT_OPEN)
 
 
 class RejectedError(RuntimeError):
@@ -49,6 +53,22 @@ class RejectedError(RuntimeError):
         self.detail = detail
         super().__init__(f"rejected ({reason})" + (f": {detail}"
                                                    if detail else ""))
+
+
+class ServiceClosed(RejectedError):
+    """Typed reject: the service shut down before serving this request.
+
+    Raised (via the request's future) for every submit still pending
+    when :meth:`repro.serve.service.CodecService.close` finishes — a
+    queued request the drain could not serve, a request parked in a
+    retry backoff, or anything stranded by a dispatcher crash.  A
+    :class:`RejectedError` with reason :data:`SHUTDOWN`, so the
+    conservation invariant (submitted == served + rejected + failed)
+    covers shutdown too: no awaiting client is ever left dangling.
+    """
+
+    def __init__(self, detail: str = ""):
+        super().__init__(SHUTDOWN, detail or "service closed")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,200 @@
+"""Deterministic fault injection for the codec service (jax-free).
+
+Generalises the ad-hoc ``FlakyEngine`` test stub into a scripted,
+seeded fault-plan engine usable both from the unit/property tests
+(re-exported as ``tests/helpers/faults.py``) and from the
+``service_chaos`` traffic bench (:mod:`repro.bench.cases`):
+
+* a :class:`FaultPlan` is a sequence of :class:`FaultPhase` windows
+  indexed by **engine-call number**, not wall time — the i-th engine
+  call always sees the same phase and the same RNG draws, so a chaos
+  run is bit-reproducible regardless of scheduling jitter,
+* :class:`ChaosEngine` wraps any engine callable and, per call, may
+  raise a scripted exception (:class:`InjectedFault`), sleep through a
+  latency spike, corrupt returned payloads via byte flips (caught
+  downstream by the ``DCTZ`` CRC — :func:`dctz_crc_ok`), or kill the
+  executor worker with :class:`WorkerKilled` (a ``SystemExit``
+  subclass, exercising the service's BaseException containment).
+
+Each injected event is recorded in :attr:`ChaosEngine.events` so tests
+and the bench gate can assert that every scripted fault kind actually
+fired.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+import threading
+import time
+
+
+class InjectedFault(RuntimeError):
+    """A scripted engine exception (distinct from real engine bugs)."""
+
+
+class WorkerKilled(SystemExit):
+    """Scripted executor-worker death.
+
+    ``SystemExit`` subclasses ``BaseException`` (not ``Exception``), so
+    this exercises the service's containment of non-``Exception``
+    escapes from the engine thread — ``concurrent.futures`` delivers it
+    through the work-item future like any other exception, and the
+    dispatch loop must treat it as a failed batch, not crash.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPhase:
+    """One window of scripted faults over an engine-call index range.
+
+    Applies to calls with ``start <= call_index < stop``.  Rates are
+    independent per-call probabilities; draws come from the plan's
+    seeded RNG in call-index order, so a given (plan, seed) always
+    injects the same events at the same calls.
+
+    Attributes:
+        start: first engine-call index the phase covers (inclusive).
+        stop: end of the range (exclusive; ``math.inf`` = open-ended).
+        fail_rate: probability the call raises ``exc_type``.
+        exc_type: exception class raised on a scripted failure.
+        latency_s: extra sleep injected on a latency spike.
+        latency_rate: probability of a latency spike.
+        corrupt_rate: probability each *returned payload* gets one
+            byte flipped (``bytes`` results only; non-byte results
+            pass through untouched).
+        kill_rate: probability the call raises :class:`WorkerKilled`.
+    """
+    start: int
+    stop: float = math.inf
+    fail_rate: float = 0.0
+    exc_type: type = InjectedFault
+    latency_s: float = 0.0
+    latency_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    kill_rate: float = 0.0
+
+    def __post_init__(self):
+        if self.start < 0 or self.stop < self.start:
+            raise ValueError(f"bad phase range [{self.start}, {self.stop})")
+        for name in ("fail_rate", "latency_rate", "corrupt_rate",
+                     "kill_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded sequence of fault phases over engine-call indexes.
+
+    Phases may overlap; the *first* phase covering a call index wins.
+    Calls covered by no phase run clean.
+    """
+    phases: tuple
+    seed: int = 0
+
+    def for_call(self, idx: int) -> FaultPhase | None:
+        for p in self.phases:
+            if p.start <= idx < p.stop:
+                return p
+        return None
+
+
+class ChaosEngine:
+    """Wrap an engine callable with a deterministic fault plan.
+
+    Call signature matches ``codec_engine.encode_batch``:
+    ``engine(images, quality, ...) -> list[bytes]``.  Thread-safe: the
+    call index is assigned and all RNG draws for that call are made
+    under one lock, in call order, so concurrency never perturbs which
+    call sees which fault.
+
+    Attributes:
+        calls: total engine calls observed.
+        events: ``(call_index, kind)`` tuples for every injected event,
+            kind in {"fail", "latency", "corrupt", "kill"}.
+    """
+
+    def __init__(self, inner, plan: FaultPlan):
+        self.inner = inner
+        self.plan = plan
+        self.calls = 0
+        self.events: list = []
+        self._rng = random.Random(plan.seed)
+        self._lock = threading.Lock()
+
+    def event_counts(self) -> dict:
+        """Injected events by kind (for reporting and gates)."""
+        counts: dict = {}
+        for _, kind in self.events:
+            counts[kind] = counts.get(kind, 0) + 1
+        return counts
+
+    def __call__(self, images, quality, **kwargs):
+        # Assign the call index and make every RNG draw for this call
+        # under the lock, so (plan, seed) fully determines the faults
+        # even when engine_concurrency > 1.
+        with self._lock:
+            idx = self.calls
+            self.calls += 1
+            phase = self.plan.for_call(idx)
+            fail = spike = kill = False
+            corrupt: list = []
+            if phase is not None:
+                fail = (phase.fail_rate > 0
+                        and self._rng.random() < phase.fail_rate)
+                spike = (phase.latency_rate > 0
+                         and self._rng.random() < phase.latency_rate)
+                kill = (phase.kill_rate > 0
+                        and self._rng.random() < phase.kill_rate)
+                if phase.corrupt_rate > 0:
+                    # one draw per image, plus a position draw per hit —
+                    # still strictly call-ordered
+                    for i in range(len(images)):
+                        if self._rng.random() < phase.corrupt_rate:
+                            corrupt.append((i, self._rng.random()))
+            if fail:
+                self.events.append((idx, "fail"))
+            if spike:
+                self.events.append((idx, "latency"))
+            if kill:
+                self.events.append((idx, "kill"))
+            for i, _ in corrupt:
+                self.events.append((idx, "corrupt"))
+        if spike:
+            time.sleep(phase.latency_s)
+        if kill:
+            raise WorkerKilled(f"scripted worker death at call {idx}")
+        if fail:
+            raise phase.exc_type(f"scripted failure at call {idx}")
+        out = self.inner(images, quality, **kwargs)
+        if corrupt:
+            out = list(out)
+            for i, pos_frac in corrupt:
+                if i < len(out) and isinstance(out[i], (bytes, bytearray)) \
+                        and len(out[i]) > 0:
+                    blob = bytearray(out[i])
+                    pos = int(pos_frac * len(blob))
+                    blob[pos] ^= 0xFF
+                    out[i] = bytes(blob)
+        return out
+
+
+def dctz_crc_ok(payload) -> bool:
+    """Integrity validator for framed ``DCTZ`` streams.
+
+    True iff ``payload`` parses as a ``DCTZ`` container whose CRC32
+    matches — the ``validate_payload`` hook a resilient service uses to
+    catch corrupted engine output before serving it.  Imports the
+    entropy container lazily so this module stays importable without
+    the core package (it is pure-stdlib otherwise).
+    """
+    from repro.core.entropy import container
+    if not isinstance(payload, (bytes, bytearray)):
+        return False
+    try:
+        return container.verify_crc(bytes(payload))
+    except container.BitstreamError:
+        return False

@@ -195,10 +195,35 @@ class BatchPlanner:
         q.append(req)
         return req
 
+    def readmit(self, req: Request) -> None:
+        """Re-queue an already-admitted request (the retry path).
+
+        The request object is reused verbatim — same ``req_id``,
+        ``arrival`` and ``deadline`` — so SLO and latency accounting
+        span every attempt.  Applies the depth bound (a retry does not
+        get to overflow a bucket new work is being shed from) but not
+        the admission deadline margin: the poll-time sweep decides
+        feasibility with the request's original deadline.
+
+        Raises:
+            RejectedError: ``queue_full`` at the depth bound.
+        """
+        key = self.bucket_key(req.shape, req.quality)
+        q = self._queues.get(key)
+        if q is not None and len(q) >= self.max_queue_depth:
+            raise RejectedError(
+                admission.QUEUE_FULL,
+                f"bucket {key} at depth bound {self.max_queue_depth} "
+                f"(retry re-admission)")
+        if q is None:
+            q = self._queues[key] = deque()
+        q.append(req)
+
     # -- dispatch ---------------------------------------------------------
 
     def poll(self, now: float, drain: bool = False,
-             max_batches: int | None = None) -> PlannerPoll:
+             max_batches: int | None = None,
+             urgent_cap: int | None = None) -> PlannerPoll:
         """Sweep unmeetable requests, then collect dispatchable batches.
 
         Args:
@@ -211,6 +236,12 @@ class BatchPlanner:
                 deadline sweep still apply — instead of piling up in an
                 unbounded executor backlog).  ``None`` = unlimited;
                 sweeping is never limited.
+            urgent_cap: graceful-degradation hook — when a batch
+                dispatches because its oldest request turned deadline-
+                *urgent* (not full, not timer), cap its size at this
+                many requests: a smaller batch completes sooner, so the
+                urgent request's SLO survives overload at the cost of
+                occupancy.  ``None`` = no cap.
 
         Returns:
             :class:`PlannerPoll` — batches preserve FIFO order within
@@ -235,9 +266,14 @@ class BatchPlanner:
                         f"{step:.4f}s)")))
             self._queues[key] = q = kept
             while q and (max_batches is None
-                         or len(batches) < max_batches) \
-                    and (drain or self._should_dispatch(q, now, step)):
+                         or len(batches) < max_batches):
+                trigger = ("drain" if drain
+                           else self._dispatch_trigger(q, now, step))
+                if trigger is None:
+                    break
                 take = min(len(q), self.max_batch)
+                if trigger == "urgent" and urgent_cap is not None:
+                    take = min(take, max(1, urgent_cap))
                 batches.append(Batch(
                     key=key,
                     requests=[q.popleft() for _ in range(take)]))
@@ -245,13 +281,23 @@ class BatchPlanner:
                 del self._queues[key]
         return PlannerPoll(batches=batches, rejects=rejects)
 
-    def _should_dispatch(self, q: deque, now: float, step: float) -> bool:
+    def _dispatch_trigger(self, q: deque, now: float, step: float
+                          ) -> str | None:
+        """Why this queue dispatches now: "full" | "timer" | "urgent".
+
+        Checked in that order — a full bucket is a full engine batch
+        regardless of deadlines, and an expired batching timer already
+        waited long enough; only a pure deadline-urgency dispatch is
+        eligible for the degradation-time ``urgent_cap``.
+        """
         if len(q) >= self.max_batch:
-            return True
+            return "full"
         oldest = q[0]
         if now - oldest.arrival >= self.max_wait_s:
-            return True
-        return admission.urgent(oldest.deadline, now, step, self.safety)
+            return "timer"
+        if admission.urgent(oldest.deadline, now, step, self.safety):
+            return "urgent"
+        return None
 
     def next_wake(self, now: float) -> float | None:
         """Seconds until the earliest timer/urgency trigger, or None.
@@ -305,6 +351,18 @@ class BatchPlanner:
     def total_depth(self) -> int:
         """Requests queued across all buckets."""
         return sum(len(q) for q in self._queues.values())
+
+    def pressure(self) -> float:
+        """Queue pressure in [0, 1]: the fullest bucket's depth fraction.
+
+        The overload signal the degradation controller consumes — max
+        (not mean) across buckets, because backpressure (``queue_full``)
+        engages per bucket and one saturated bucket is already shedding.
+        """
+        if not self._queues:
+            return 0.0
+        return min(1.0, max(len(q) for q in self._queues.values())
+                   / self.max_queue_depth)
 
     def empty(self) -> bool:
         return self.total_depth() == 0

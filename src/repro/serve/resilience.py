@@ -1,0 +1,440 @@
+"""Resilience primitives for the async codec service (jax-free).
+
+The serving front end (:mod:`repro.serve.service`) survives real
+failures with four cooperating mechanisms, all configured through
+:class:`ResilienceConfig` and all **disabled by default** so the
+baseline service semantics (docs/serving.md) are unchanged until a
+deployment opts in:
+
+* **per-attempt timeout** — an engine call that exceeds ``timeout_s``
+  is abandoned (the worker thread keeps running; size
+  ``engine_concurrency`` accordingly) and treated as a retryable
+  failure,
+* **bounded retry** (:class:`RetryPolicy`) — failed requests re-enter
+  their bucket queue after an exponential backoff with *decorrelated
+  jitter* (the AWS architecture-blog variant: each delay is drawn
+  uniformly from ``[base, 3 x previous]``, capped), guarded by a
+  **token-bucket retry budget** (:class:`TokenBucket`) so a persistent
+  outage cannot amplify offered load into a retry storm,
+* a **failure-rate circuit breaker** (:class:`CircuitBreaker`) over the
+  engine path — ``closed`` counts outcomes in a sliding window and
+  trips ``open`` at a failure rate; ``open`` fast-fails submits with a
+  typed :class:`CircuitOpen` reject and blocks dispatch until
+  ``reset_timeout_s`` elapses; ``half_open`` lets a bounded number of
+  probe batches through and closes after consecutive successes (every
+  transition is recorded for observability and for the chaos bench's
+  CI gate),
+* **graceful degradation** (:class:`DegradationController`) — under
+  sustained queue pressure the service first *downshifts* quality (a
+  cheaper encode drains queues faster and the payload stays useful)
+  and shrinks deadline-urgent batches (a smaller batch completes
+  sooner), and only sheds load when the existing backpressure bounds
+  engage; degrade events are counted in ``ServiceStats`` and
+  degraded-served stays a subset of served.
+
+Everything here is pure stdlib (no jax, no numpy) so the property and
+unit tests drive thousands of synthetic schedules directly, exactly
+like :mod:`repro.serve.queueing`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.serve import admission
+
+# Circuit-breaker states.
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+
+
+class CircuitOpen(admission.RejectedError):
+    """Typed reject: the engine-path circuit breaker is open.
+
+    A :class:`~repro.serve.admission.RejectedError` with reason
+    :data:`repro.serve.admission.CIRCUIT_OPEN`, so every existing
+    conservation invariant (submitted == served + rejected + failed)
+    and reject-accounting path treats breaker rejects like any other
+    load-shedding decision.
+    """
+
+    def __init__(self, detail: str = ""):
+        super().__init__(admission.CIRCUIT_OPEN, detail)
+
+
+class TokenBucket:
+    """Deterministic token bucket (the retry budget).
+
+    Refills at ``rate`` tokens/second up to ``burst``; :meth:`take`
+    consumes one token if available.  Driven entirely by caller-passed
+    clock values so tests are exact.
+
+    Args:
+        rate: tokens added per second (<= 0 disables refill).
+        burst: bucket capacity (also the initial fill).
+    """
+
+    def __init__(self, rate: float, burst: float):
+        if burst < 0:
+            raise ValueError(f"burst must be >= 0, got {burst}")
+        self.rate = rate
+        self.burst = burst
+        self._tokens = float(burst)
+        self._last: float | None = None
+
+    def _refill(self, now: float) -> None:
+        if self._last is not None and self.rate > 0 and now > self._last:
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._last) * self.rate)
+        self._last = now
+
+    def take(self, now: float, n: float = 1.0) -> bool:
+        """Consume ``n`` tokens at time ``now``; False = budget empty."""
+        self._refill(now)
+        if self._tokens >= n:
+            self._tokens -= n
+            return True
+        return False
+
+    def available(self, now: float) -> float:
+        """Tokens available at ``now`` (after refill accounting)."""
+        self._refill(now)
+        return self._tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with decorrelated-jitter backoff and a budget.
+
+    Attributes:
+        max_attempts: total attempts per request (1 = retries off).
+        backoff_base_s: floor of every backoff draw.
+        backoff_cap_s: ceiling of every backoff draw.
+        budget_rate: retry-budget tokens per second (a global bound on
+            retries/s across all requests, so an outage cannot turn
+            offered load into an amplified retry storm).
+        budget_burst: retry-budget bucket capacity.
+    """
+    max_attempts: int = 1
+    backoff_base_s: float = 0.005
+    backoff_cap_s: float = 0.5
+    budget_rate: float = 10.0
+    budget_burst: float = 20.0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, "
+                             f"got {self.max_attempts}")
+        if self.backoff_cap_s < self.backoff_base_s:
+            raise ValueError("backoff_cap_s must be >= backoff_base_s")
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_attempts > 1
+
+    def make_budget(self) -> TokenBucket:
+        return TokenBucket(self.budget_rate, self.budget_burst)
+
+    def backoff_s(self, prev_s: float, rng) -> float:
+        """Next backoff: decorrelated jitter.
+
+        ``min(cap, uniform(base, 3 x prev))`` — each delay is drawn
+        from a range anchored on the *previous* delay, which spreads
+        retry times apart (decorrelates clients) while still growing
+        exponentially in expectation.
+
+        Args:
+            prev_s: the previous delay (pass 0.0 before the first
+                retry; the draw then starts at ``backoff_base_s``).
+            rng: a ``random.Random`` (seeded by the service).
+        """
+        hi = max(self.backoff_base_s, 3.0 * prev_s)
+        return min(self.backoff_cap_s,
+                   rng.uniform(self.backoff_base_s, hi))
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakerConfig:
+    """Knobs for :class:`CircuitBreaker`.
+
+    Attributes:
+        window: sliding window of recent engine-call outcomes the
+            failure rate is computed over.
+        min_calls: volume threshold — never trip on fewer outcomes
+            (a single failure out of one call is not a 100% outage).
+        failure_threshold: failure rate in (0, 1] that trips open.
+        reset_timeout_s: open -> half-open delay.
+        half_open_max_calls: concurrent probe calls allowed half-open.
+        half_open_successes: consecutive probe successes that close.
+    """
+    window: int = 16
+    min_calls: int = 4
+    failure_threshold: float = 0.5
+    reset_timeout_s: float = 1.0
+    half_open_max_calls: int = 1
+    half_open_successes: int = 2
+
+    def __post_init__(self):
+        if self.window < 1 or self.min_calls < 1:
+            raise ValueError("window and min_calls must be >= 1")
+        if not 0.0 < self.failure_threshold <= 1.0:
+            raise ValueError(f"failure_threshold must be in (0, 1], "
+                             f"got {self.failure_threshold}")
+        if self.half_open_max_calls < 1 or self.half_open_successes < 1:
+            raise ValueError("half_open_max_calls and "
+                             "half_open_successes must be >= 1")
+
+
+class CircuitBreaker:
+    """Failure-rate circuit breaker with an explicit transition log.
+
+    States: :data:`CLOSED` (counting outcomes), :data:`OPEN` (engine
+    path blocked until ``reset_timeout_s``), :data:`HALF_OPEN` (bounded
+    probes).  All methods take the clock value explicitly and the class
+    is event-loop-confined in the service (no locking).
+
+    Attributes:
+        transitions: ``(at, from_state, to_state)`` tuples, in order —
+            the observable record the chaos bench's CI gate checks the
+            ``closed -> open -> half_open -> closed`` cycle against.
+    """
+
+    def __init__(self, config: BreakerConfig):
+        self.config = config
+        self._state = CLOSED
+        self._outcomes: list = []        # sliding window, True = failure
+        self._opened_at = -math.inf
+        self._probes_inflight = 0
+        self._probe_successes = 0
+        self.transitions: list = []
+
+    # -- state ------------------------------------------------------------
+
+    def state(self, now: float) -> str:
+        """Current state, applying a due open -> half-open transition."""
+        self._maybe_half_open(now)
+        return self._state
+
+    def _transition(self, now: float, to: str) -> None:
+        self.transitions.append((now, self._state, to))
+        self._state = to
+
+    def _maybe_half_open(self, now: float) -> None:
+        if (self._state == OPEN
+                and now - self._opened_at >= self.config.reset_timeout_s):
+            self._transition(now, HALF_OPEN)
+            self._probes_inflight = 0
+            self._probe_successes = 0
+
+    # -- admission / dispatch gates ---------------------------------------
+
+    def admission_open(self, now: float) -> bool:
+        """May a new request be *admitted*? False only while OPEN.
+
+        Half-open admits (the request queues; the dispatch budget
+        below bounds how many reach the engine as probes).
+        """
+        return self.state(now) != OPEN
+
+    def dispatch_budget(self, now: float) -> int | None:
+        """How many engine calls may start now; None = unlimited.
+
+        CLOSED: unlimited.  OPEN: 0 (nothing dispatches; queued work
+        waits for half-open or the deadline sweep).  HALF_OPEN: the
+        remaining probe slots.
+        """
+        s = self.state(now)
+        if s == CLOSED:
+            return None
+        if s == OPEN:
+            return 0
+        return max(0, self.config.half_open_max_calls
+                   - self._probes_inflight)
+
+    def retry_after_s(self, now: float) -> float:
+        """Seconds until OPEN turns HALF_OPEN (0 when not OPEN)."""
+        if self.state(now) != OPEN:
+            return 0.0
+        return max(0.0, self._opened_at + self.config.reset_timeout_s
+                   - now)
+
+    def on_dispatch(self, now: float) -> None:
+        """An engine call is starting (counts half-open probes)."""
+        if self.state(now) == HALF_OPEN:
+            self._probes_inflight += 1
+
+    # -- outcomes ---------------------------------------------------------
+
+    def record_success(self, now: float) -> None:
+        if self.state(now) == HALF_OPEN:
+            self._probes_inflight = max(0, self._probes_inflight - 1)
+            self._probe_successes += 1
+            if self._probe_successes >= self.config.half_open_successes:
+                self._transition(now, CLOSED)
+                self._outcomes = []
+            return
+        self._push(False)
+
+    def record_failure(self, now: float) -> None:
+        s = self.state(now)
+        if s == HALF_OPEN:
+            # a failed probe re-opens immediately
+            self._transition(now, OPEN)
+            self._opened_at = now
+            return
+        if s == OPEN:      # stragglers from before the trip
+            return
+        self._push(True)
+        n = len(self._outcomes)
+        if n >= self.config.min_calls:
+            rate = sum(self._outcomes) / n
+            if rate >= self.config.failure_threshold:
+                self._transition(now, OPEN)
+                self._opened_at = now
+
+    def _push(self, failed: bool) -> None:
+        self._outcomes.append(failed)
+        if len(self._outcomes) > self.config.window:
+            del self._outcomes[0]
+
+    # -- introspection ----------------------------------------------------
+
+    def snapshot(self, now: float) -> dict:
+        """JSON-friendly view (state, window fill, transition count)."""
+        return {"state": self.state(now),
+                "window_outcomes": len(self._outcomes),
+                "window_failures": sum(self._outcomes),
+                "transitions": len(self.transitions)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    """Knobs for :class:`DegradationController`.
+
+    Attributes:
+        quality_caps: per-level quality ceiling; index 0 is the
+            healthy level and must be 100 (no cap).  Length defines
+            the number of degradation levels.
+        urgent_batch_caps: per-level cap on deadline-*urgent* batch
+            sizes (None = no cap).  A smaller urgent batch completes
+            sooner, trading occupancy for SLO attainment under
+            overload.
+        enter_pressure: queue-pressure level (0..1, the fullest
+            bucket's depth fraction) that starts escalating.
+        exit_pressure: pressure below which levels decay.
+        sustain_s: pressure must persist this long before escalating
+            one level (debounces bursts).
+        cool_s: pressure must stay below ``exit_pressure`` this long
+            before de-escalating one level.
+    """
+    quality_caps: tuple = (100, 60, 35)
+    urgent_batch_caps: tuple = (None, 4, 2)
+    enter_pressure: float = 0.75
+    exit_pressure: float = 0.25
+    sustain_s: float = 0.050
+    cool_s: float = 0.200
+
+    def __post_init__(self):
+        if len(self.quality_caps) != len(self.urgent_batch_caps):
+            raise ValueError("quality_caps and urgent_batch_caps must "
+                             "have equal length (one entry per level)")
+        if not self.quality_caps or self.quality_caps[0] != 100:
+            raise ValueError("quality_caps[0] must be 100 (level 0 is "
+                             "the undegraded service)")
+        if not 0.0 <= self.exit_pressure <= self.enter_pressure <= 1.0:
+            raise ValueError("need 0 <= exit_pressure <= enter_pressure "
+                             "<= 1")
+
+
+class DegradationController:
+    """Hysteretic overload-level tracker driving graceful degradation.
+
+    :meth:`observe` folds a pressure sample (0..1) in and returns the
+    current level; escalation needs pressure >= ``enter_pressure``
+    sustained for ``sustain_s``, decay needs pressure <
+    ``exit_pressure`` for ``cool_s`` — so a single burst or a single
+    idle poll does not flap the level.  Level 0 is the undegraded
+    service; each level above caps quality
+    (:meth:`quality_cap`) and shrinks deadline-urgent batches
+    (:meth:`urgent_cap`).
+    """
+
+    def __init__(self, config: DegradeConfig):
+        self.config = config
+        self.level = 0
+        self._hot_since: float | None = None
+        self._cool_since: float | None = None
+        self.escalations = 0
+
+    @property
+    def max_level(self) -> int:
+        return len(self.config.quality_caps) - 1
+
+    def observe(self, now: float, pressure: float) -> int:
+        """Fold one pressure sample in; returns the (new) level."""
+        cfg = self.config
+        if pressure >= cfg.enter_pressure:
+            self._cool_since = None
+            if self._hot_since is None:
+                self._hot_since = now
+            if (now - self._hot_since >= cfg.sustain_s
+                    and self.level < self.max_level):
+                self.level += 1
+                self.escalations += 1
+                self._hot_since = now    # next level needs its own dwell
+        elif pressure < cfg.exit_pressure:
+            self._hot_since = None
+            if self._cool_since is None:
+                self._cool_since = now
+            if now - self._cool_since >= cfg.cool_s and self.level > 0:
+                self.level -= 1
+                self._cool_since = now
+        else:                            # hysteresis band: hold level
+            self._hot_since = None
+            self._cool_since = None
+        return self.level
+
+    def quality_cap(self) -> int:
+        """Quality ceiling at the current level (100 = no cap)."""
+        return self.config.quality_caps[self.level]
+
+    def urgent_cap(self) -> int | None:
+        """Deadline-urgent batch cap at the current level (None = off)."""
+        return self.config.urgent_batch_caps[self.level]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """The service's resilience envelope; defaults are all no-ops.
+
+    Attributes:
+        timeout_s: per-attempt engine-call timeout (None = none).  A
+            timed-out attempt is abandoned and counted as a retryable
+            failure; its worker thread keeps running until the engine
+            returns, so pair timeouts with ``engine_concurrency`` > 1
+            when the engine can actually stall.
+        retry: :class:`RetryPolicy` (``max_attempts=1`` = off).
+        breaker: :class:`BreakerConfig`, or None for no breaker.
+        degrade: :class:`DegradeConfig`, or None for no degradation.
+        validate_payload: optional ``bytes -> bool`` integrity check
+            applied to every engine-produced payload (e.g.
+            :func:`repro.serve.chaos.dctz_crc_ok` for ``DCTZ``
+            streams); a failing payload is a retryable per-request
+            corruption failure, never served.
+        seed: RNG seed for backoff jitter.
+    """
+    timeout_s: float | None = None
+    retry: RetryPolicy = RetryPolicy()
+    breaker: BreakerConfig | None = None
+    degrade: DegradeConfig | None = None
+    validate_payload: object = None
+    seed: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        """True when any mechanism is active (used to skip overhead)."""
+        return (self.timeout_s is not None or self.retry.enabled
+                or self.breaker is not None or self.degrade is not None
+                or self.validate_payload is not None)

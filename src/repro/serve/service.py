@@ -24,7 +24,15 @@ wants, while holding per-request SLOs:
   segment),
 * engine failures fail *only* the affected batch's requests (with
   :class:`EngineFailure`) and the dispatch loop keeps serving — the
-  fault-injection suite drives this with a flaky engine wrapper.
+  fault-injection suite drives this with a flaky engine wrapper,
+* an optional **resilience envelope** (:mod:`repro.serve.resilience`,
+  off by default) adds per-attempt engine timeouts, bounded
+  budget-guarded retries with decorrelated-jitter backoff, a
+  failure-rate circuit breaker over the engine path (typed
+  :class:`~repro.serve.resilience.CircuitOpen` rejects while open),
+  payload integrity validation, and graceful quality degradation under
+  sustained queue pressure — all without breaking the one-terminal-
+  outcome invariant (a retried request is still one submit).
 
 The planner half is synchronous and jax-free
 (:mod:`repro.serve.queueing`); this module adds the asyncio shell: one
@@ -32,8 +40,9 @@ dispatcher task multiplexing queue timers, engine batches running in a
 (default single-worker) thread pool so the event loop never blocks on
 device work, and per-request futures carrying exactly one terminal
 outcome each.  See docs/serving.md for semantics and SLO knobs, and
-``bench/cases.py::service_traffic`` for the open-loop load test that
-measures p50/p99 latency, goodput and reject rate through this layer.
+``bench/cases.py::service_traffic`` / ``service_chaos`` for the
+open-loop load tests that measure p50/p99 latency, goodput, reject
+rate and fault-storm behaviour through this layer.
 """
 
 from __future__ import annotations
@@ -44,16 +53,35 @@ import concurrent.futures
 import dataclasses
 import hashlib
 import math
+import random
 import time
 
 import numpy as np
 
-from repro.serve import admission, queueing
-from repro.serve.admission import RejectedError, TenantTier
+from repro.serve import admission, queueing, resilience
+from repro.serve.admission import RejectedError, ServiceClosed, TenantTier
 
 
 class EngineFailure(RuntimeError):
     """The engine batch carrying this request raised; see ``__cause__``."""
+
+
+class EngineTimeout(RuntimeError):
+    """An engine attempt exceeded ``ResilienceConfig.timeout_s``.
+
+    Used as the ``__cause__`` of the :class:`EngineFailure` a request
+    sees when its timed-out attempt was its last; the abandoned worker
+    thread keeps running until the engine returns (its result is
+    discarded).
+    """
+
+
+class PayloadCorrupt(RuntimeError):
+    """An engine-produced payload failed ``validate_payload``.
+
+    Never served; used as the ``__cause__`` of the terminal
+    :class:`EngineFailure` when retries are off or exhausted.
+    """
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +118,10 @@ class ServiceConfig:
             Default 2: one batch encoding, one forming/waiting.
         shape_bucket: shape-bucket granularity (keep at the engine's
             :data:`repro.serve.codec_engine.SHAPE_BUCKET`).
+        resilience: timeout/retry/breaker/degradation envelope
+            (:class:`repro.serve.resilience.ResilienceConfig`); the
+            default disables every mechanism, preserving the baseline
+            service semantics exactly.
     """
     max_batch: int = 8
     max_wait_s: float = 0.010
@@ -106,6 +138,8 @@ class ServiceConfig:
     engine_concurrency: int = 1
     max_inflight_batches: int = 2
     shape_bucket: int = queueing.DEFAULT_SHAPE_BUCKET
+    resilience: resilience.ResilienceConfig = dataclasses.field(
+        default_factory=resilience.ResilienceConfig)
 
     def tier(self, tenant: str) -> TenantTier:
         """The tier serving ``tenant`` (unknown tenants get the default)."""
@@ -148,6 +182,10 @@ class Response:
             (counts against goodput, not against delivery).
         req_id: service-assigned id (-1 for cache hits, which never
             enter a queue).
+        degraded: quality was downshifted by the graceful-degradation
+            controller (``quality`` reflects what was actually served).
+        attempts: engine attempts this request rode in (> 1 = retried;
+            0 for cache hits).
     """
     payload: bytes
     quality: int
@@ -156,6 +194,8 @@ class Response:
     cache_hit: bool = False
     deadline_missed: bool = False
     req_id: int = -1
+    degraded: bool = False
+    attempts: int = 1
 
 
 class StreamCache:
@@ -212,6 +252,24 @@ class ServiceStats:
             :data:`LATENCY_WINDOW` served requests (a bounded sliding
             window — a long-running service must not grow memory, or
             re-sort an ever-longer list per snapshot, without limit).
+        retries: retry attempts scheduled (a retried request still
+            counts once in ``submitted`` and reaches one terminal
+            outcome).
+        retry_budget_exhausted: retries denied by the token-bucket
+            retry budget (the request fails instead).
+        timeouts: engine attempts abandoned at ``timeout_s``.
+        corrupt_payloads: engine payloads that failed
+            ``validate_payload`` (never served).
+        degraded: requests whose quality the degradation controller
+            downshifted at admission.
+        degraded_served: degraded requests that were served (always
+            ⊆ ``served``).
+        closed_unserved: futures resolved with
+            :class:`~repro.serve.admission.ServiceClosed` at close
+            (also counted under ``rejected["shutdown"]``).
+        unhandled: batch tasks whose failure handling itself raised —
+            the dispatch loop's last-resort containment guard; must
+            stay 0 (CI-gated by the chaos bench).
     """
 
     LATENCY_WINDOW = 8192
@@ -226,6 +284,14 @@ class ServiceStats:
         self.occupancy: collections.Counter = collections.Counter()
         self.latencies_s: collections.deque = collections.deque(
             maxlen=self.LATENCY_WINDOW)
+        self.retries = 0
+        self.retry_budget_exhausted = 0
+        self.timeouts = 0
+        self.corrupt_payloads = 0
+        self.degraded = 0
+        self.degraded_served = 0
+        self.closed_unserved = 0
+        self.unhandled = 0
 
     @property
     def total_rejected(self) -> int:
@@ -252,15 +318,32 @@ class ServiceStats:
                           in sorted(self.occupancy.items())},
             "p50_latency_s": self.latency_percentile(50),
             "p99_latency_s": self.latency_percentile(99),
+            "retries": self.retries,
+            "retry_budget_exhausted": self.retry_budget_exhausted,
+            "timeouts": self.timeouts,
+            "corrupt_payloads": self.corrupt_payloads,
+            "degraded": self.degraded,
+            "degraded_served": self.degraded_served,
+            "closed_unserved": self.closed_unserved,
+            "unhandled": self.unhandled,
         }
 
 
 @dataclasses.dataclass
 class _Entry:
-    """Service-side payload attached to each planner request."""
+    """Service-side payload attached to each planner request.
+
+    ``attempts``/``backoff_s`` track the retry state across engine
+    attempts (the planner ``Request`` object — id, arrival, deadline —
+    is reused verbatim on re-admission so latency and SLO accounting
+    span the whole request, not just the last attempt).
+    """
     image: np.ndarray
     cache_key: tuple
     future: asyncio.Future
+    degraded: bool = False
+    attempts: int = 0
+    backoff_s: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -314,6 +397,19 @@ class CodecService:
         self._pool: concurrent.futures.ThreadPoolExecutor | None = None
         self._draining = False
         self._closed = False
+        res = self.config.resilience
+        self.breaker = (resilience.CircuitBreaker(res.breaker)
+                        if res.breaker is not None else None)
+        self.degrade = (resilience.DegradationController(res.degrade)
+                        if res.degrade is not None else None)
+        self._retry_budget = res.retry.make_budget()
+        self._retry_rng = random.Random(res.seed)
+        self._retry_tasks: set = set()
+        # every admitted request's future, until it resolves: close()
+        # uses this to guarantee no awaiting client dangles even after
+        # a dispatcher crash or a cancelled retry backoff
+        self._pending: set = set()
+        self.dispatcher_error: BaseException | None = None
 
     # -- lifecycle --------------------------------------------------------
 
@@ -335,7 +431,13 @@ class CodecService:
 
         Every already-admitted request still gets its terminal outcome
         (queues are drained as forced partial batches); new submits
-        raise ``RejectedError(reason="shutdown")``.
+        raise ``RejectedError(reason="shutdown")``.  Requests the drain
+        could not serve — parked in a retry backoff, or stranded by a
+        dispatcher crash (recorded in :attr:`dispatcher_error`) — are
+        resolved with a typed
+        :class:`~repro.serve.admission.ServiceClosed` rejection and
+        counted in ``stats.closed_unserved``: no awaiting client is
+        ever left dangling.
         """
         if self._closed:
             return
@@ -343,12 +445,28 @@ class CodecService:
         self._closed = True
         if self._dispatcher is not None:
             self._wake.set()
-            await self._dispatcher
+            try:
+                await self._dispatcher
+            except Exception as exc:    # noqa: BLE001 - record, keep closing
+                self.dispatcher_error = exc
             while self._inflight:
                 await asyncio.gather(*list(self._inflight),
                                      return_exceptions=True)
+            # retries parked in a backoff sleep never re-admit now:
+            # cancel them; the sweep below resolves their futures
+            for t in list(self._retry_tasks):
+                t.cancel()
+            if self._retry_tasks:
+                await asyncio.gather(*list(self._retry_tasks),
+                                     return_exceptions=True)
             self._pool.shutdown(wait=True)
             self._dispatcher = None
+        for fut in [f for f in self._pending if not f.done()]:
+            self.stats.closed_unserved += 1
+            self.stats.rejected[admission.SHUTDOWN] += 1
+            fut.set_exception(ServiceClosed(
+                "service closed before serving this request"))
+        self._pending.clear()
 
     async def __aenter__(self) -> "CodecService":
         return await self.start()
@@ -381,10 +499,14 @@ class CodecService:
                 raised before the request counts as submitted, so the
                 stats conservation invariant is unaffected.
             RejectedError: backpressure (``queue_full``), hopeless or
-                expired deadline (``deadline_unmeetable``), or a
-                closing service (``shutdown``).
-            EngineFailure: the engine batch carrying this request
-                raised; the original exception is ``__cause__``.
+                expired deadline (``deadline_unmeetable``), a closing
+                service (``shutdown``; :class:`ServiceClosed` when the
+                request was admitted but shutdown beat its outcome), or
+                an open engine-path breaker (``circuit_open``, typed
+                :class:`~repro.serve.resilience.CircuitOpen`).
+            EngineFailure: every engine attempt carrying this request
+                raised, timed out or produced a corrupt payload; the
+                last underlying exception is ``__cause__``.
         """
         if self._dispatcher is None and not self._closed:
             raise RuntimeError("service not started: use `async with "
@@ -404,27 +526,45 @@ class CodecService:
         # outcome, so submitted == served + rejected + failed holds
         self.stats.submitted += 1
         if self._draining:
-            exc = RejectedError(admission.SHUTDOWN, "service closing")
+            exc = ServiceClosed("service closing")
             self.stats.rejected[exc.reason] += 1
             raise exc
         now = self._clock()
+        degraded = False
+        if self.degrade is not None:
+            cap = self.degrade.quality_cap()
+            if q > cap:
+                q = cap
+                degraded = True
+                self.stats.degraded += 1
         key = StreamCache.key(image, q, self.config.tables)
         blob = self.cache.get(key)
         if blob is not None:
             self.stats.served += 1
+            if degraded:
+                self.stats.degraded_served += 1
             self.stats.latencies_s.append(self._clock() - now)
             return Response(payload=blob, quality=q,
                             latency_s=self._clock() - now, batch_size=0,
-                            cache_hit=True)
+                            cache_hit=True, degraded=degraded, attempts=0)
+        if self.breaker is not None and not self.breaker.admission_open(now):
+            exc = resilience.CircuitOpen(
+                f"engine path open; retry in "
+                f"{self.breaker.retry_after_s(now):.3f}s")
+            self.stats.rejected[exc.reason] += 1
+            raise exc
         deadline = now + rel_deadline      # inf stays inf
         future = asyncio.get_running_loop().create_future()
         try:
             req = self._planner.admit(
                 image.shape, q, tenant, now, deadline=deadline,
-                payload=_Entry(image=image, cache_key=key, future=future))
+                payload=_Entry(image=image, cache_key=key, future=future,
+                               degraded=degraded))
         except RejectedError as exc:
             self.stats.rejected[exc.reason] += 1
             raise
+        self._pending.add(future)
+        future.add_done_callback(self._pending.discard)
         self._wake.set()
         return await future
 
@@ -443,13 +583,28 @@ class CodecService:
             # strand still-running tasks in a set nobody discards from
             self._inflight.difference_update(
                 [t for t in self._inflight if t.done()])
+            now = self._clock()
             budget = max(0, cap - len(self._inflight))
+            if self.breaker is not None and not self._draining:
+                # the breaker gates *dispatch*: 0 while open (queued
+                # work waits for half-open or the deadline sweep),
+                # bounded probes while half-open.  Draining ignores it
+                # — shutdown must resolve everything, and a failed
+                # drain batch is still a terminal outcome.
+                b = self.breaker.dispatch_budget(now)
+                if b is not None:
+                    budget = min(budget, b)
+            urgent_cap = (self.degrade.urgent_cap()
+                          if self.degrade is not None else None)
             poll = self._planner.poll(
-                self._clock(), drain=self._draining,
-                max_batches=None if self._draining else budget)
+                now, drain=self._draining,
+                max_batches=None if self._draining else budget,
+                urgent_cap=urgent_cap)
             for req, exc in poll.rejects:
                 self._finish_reject(req, exc)
             for batch in poll.batches:
+                if self.breaker is not None:
+                    self.breaker.on_dispatch(now)
                 task = asyncio.get_running_loop().create_task(
                     self._run_batch(batch))
                 self._inflight.add(task)
@@ -457,13 +612,25 @@ class CodecService:
             if self._draining and self._planner.empty():
                 return
             now = self._clock()
-            if len(self._inflight) < cap:
-                timeout = self._planner.next_wake(now)
-            else:
-                # dispatch is blocked on the in-flight cap: a batch
-                # completion sets the wake event; until then only the
-                # deadline sweep needs the clock
+            if self.degrade is not None:
+                self.degrade.observe(now, self._planner.pressure())
+            breaker_blocked = (
+                self.breaker is not None
+                and not self._planner.empty()
+                and self.breaker.dispatch_budget(now) == 0)
+            if len(self._inflight) >= cap or breaker_blocked:
+                # dispatch is blocked (in-flight cap, or the breaker):
+                # a batch completion sets the wake event; until then
+                # only the deadline sweep — and, while open, the
+                # breaker's reset timer — need the clock
                 timeout = self._planner.next_sweep(now)
+                if breaker_blocked:
+                    retry_after = self.breaker.retry_after_s(now)
+                    if retry_after > 0:
+                        timeout = (retry_after if timeout is None
+                                   else min(timeout, retry_after))
+            else:
+                timeout = self._planner.next_wake(now)
             try:
                 await asyncio.wait_for(self._wake.wait(), timeout)
             except asyncio.TimeoutError:
@@ -480,43 +647,101 @@ class CodecService:
     async def _run_batch(self, batch: queueing.Batch) -> None:
         try:
             await self._run_batch_inner(batch)
+        except asyncio.CancelledError:
+            raise
+        except BaseException as exc:   # noqa: BLE001 - last-resort guard
+            # nothing may escape into the dispatch loop — not even a
+            # bug in the failure handling itself.  Fail the batch's
+            # requests terminally and count the guard trip (the chaos
+            # bench CI-gates this counter to zero).
+            self.stats.unhandled += 1
+            for r in batch.requests:
+                fut = r.payload.future
+                if not fut.done():
+                    self.stats.failed += 1
+                    err = EngineFailure("batch handling failed")
+                    err.__cause__ = exc
+                    fut.set_exception(err)
         finally:
             # a completed batch frees an in-flight slot: wake the
             # dispatcher so blocked queues dispatch immediately
             self._wake.set()
 
     async def _run_batch_inner(self, batch: queueing.Batch) -> None:
+        res = self.config.resilience
         requests = batch.requests
         images = [r.payload.image for r in requests]
         quality = batch.key[1]
+        call = asyncio.get_running_loop().run_in_executor(
+            self._pool, self._timed_engine_call, images, quality)
+        # if the attempt times out the call is abandoned, not awaited:
+        # retrieve its eventual exception so it never surfaces as an
+        # "exception was never retrieved" warning
+        call.add_done_callback(
+            lambda f: None if f.cancelled() else f.exception())
         try:
-            blobs, step_s = await asyncio.get_running_loop() \
-                .run_in_executor(self._pool, self._timed_engine_call,
-                                 images, quality)
+            if res.timeout_s is not None:
+                done, _ = await asyncio.wait({call},
+                                             timeout=res.timeout_s)
+                if not done:
+                    # the worker thread keeps running (a thread cannot
+                    # be interrupted); its result is discarded and the
+                    # attempt is treated as a retryable failure
+                    raise EngineTimeout(
+                        f"engine attempt exceeded {res.timeout_s}s")
+                blobs, step_s = call.result()
+            else:
+                blobs, step_s = await call
             self._planner.observe_step(batch.key, step_s)
             if len(blobs) != len(requests):
                 raise RuntimeError(
                     f"engine returned {len(blobs)} streams for "
                     f"{len(requests)} images")
-        except Exception as exc:     # noqa: BLE001 - isolate the batch
+        except asyncio.CancelledError:
+            raise
+        except BaseException as exc:  # noqa: BLE001 - isolate the batch;
+            # BaseException because a dying worker delivers SystemExit
+            # through the executor future, and that too must only fail
+            # this batch, never the service
+            now = self._clock()
             self.stats.engine_failures += 1
-            for r in requests:
-                self.stats.failed += 1
-                fut = r.payload.future
-                if not fut.done():
-                    err = EngineFailure(
-                        f"engine batch of {len(requests)} failed")
-                    err.__cause__ = exc
-                    fut.set_exception(err)
+            if isinstance(exc, EngineTimeout):
+                self.stats.timeouts += 1
+            if self.breaker is not None:
+                self.breaker.record_failure(now)
+            self._fail_or_retry(requests, batch.key, exc, now)
             return
         end = self._clock()
         self.stats.occupancy[len(requests)] += 1
+        validate = res.validate_payload
+        corrupt: list = []
+        serve: list = []
         for r, blob in zip(requests, blobs):
+            if validate is not None and not validate(blob):
+                corrupt.append(r)
+            else:
+                serve.append((r, blob))
+        if self.breaker is not None:
+            # one outcome per engine call keeps the breaker window in
+            # call units; any corrupt payload marks the call failed
+            if corrupt:
+                self.breaker.record_failure(end)
+            else:
+                self.breaker.record_success(end)
+        if corrupt:
+            self.stats.corrupt_payloads += len(corrupt)
+            self._fail_or_retry(
+                corrupt, batch.key,
+                PayloadCorrupt(f"{len(corrupt)}/{len(requests)} payloads "
+                               f"failed integrity validation"), end)
+        for r, blob in serve:
             entry = r.payload
             self.cache.put(entry.cache_key, blob)
             latency = end - r.arrival
             missed = end > r.deadline
             self.stats.served += 1
+            if entry.degraded:
+                self.stats.degraded_served += 1
             self.stats.latencies_s.append(latency)
             if missed:
                 self.stats.deadline_missed += 1
@@ -524,7 +749,67 @@ class CodecService:
                 entry.future.set_result(Response(
                     payload=blob, quality=r.quality, latency_s=latency,
                     batch_size=len(requests), deadline_missed=missed,
-                    req_id=r.req_id))
+                    req_id=r.req_id, degraded=entry.degraded,
+                    attempts=entry.attempts + 1))
+
+    def _fail_or_retry(self, requests: list, key: tuple,
+                       exc: BaseException, now: float) -> None:
+        """Route each failed request to a backoff retry or a terminal
+        :class:`EngineFailure`, preserving one-outcome-per-submit."""
+        retry = self.config.resilience.retry
+        step = self._planner.step_estimate(key)
+        for r in requests:
+            entry = r.payload
+            entry.attempts += 1
+            if entry.future.done():
+                continue
+            if retry.enabled and entry.attempts < retry.max_attempts \
+                    and not self._draining:
+                if self._retry_budget.take(now):
+                    delay = retry.backoff_s(entry.backoff_s,
+                                            self._retry_rng)
+                    entry.backoff_s = delay
+                    if now + delay + step <= r.deadline:
+                        self.stats.retries += 1
+                        task = asyncio.get_running_loop().create_task(
+                            self._retry_later(r, delay))
+                        self._retry_tasks.add(task)
+                        task.add_done_callback(self._retry_tasks.discard)
+                        continue
+                    # deadline rules the retry out: fall through to the
+                    # terminal failure below
+                else:
+                    self.stats.retry_budget_exhausted += 1
+            self.stats.failed += 1
+            err = EngineFailure(
+                f"engine attempt {entry.attempts} of "
+                f"{retry.max_attempts} failed")
+            err.__cause__ = exc
+            entry.future.set_exception(err)
+
+    async def _retry_later(self, req: queueing.Request,
+                           delay: float) -> None:
+        """Sleep out a backoff, then re-queue the original request.
+
+        The planner ``Request`` is re-admitted verbatim (same req_id,
+        arrival, deadline), so the eventual response's latency spans
+        every attempt.  If the service closes first the task is
+        cancelled and :meth:`close` resolves the future with
+        :class:`~repro.serve.admission.ServiceClosed`; if the queue is
+        full at re-admission the request is rejected like any other.
+        """
+        try:
+            await asyncio.sleep(delay)
+        except asyncio.CancelledError:
+            return
+        if self._draining or req.payload.future.done():
+            return      # close() resolves the future via _pending
+        try:
+            self._planner.readmit(req)
+        except RejectedError as exc:
+            self._finish_reject(req, exc)
+            return
+        self._wake.set()
 
     def _finish_reject(self, req: queueing.Request,
                        exc: RejectedError) -> None:

@@ -1,0 +1,21 @@
+"""Deterministic fault-plan injection for service tests.
+
+The real implementation lives in :mod:`repro.serve.chaos` so the
+``service_chaos`` bench (which runs with only ``src`` on the path) can
+use the identical fault engine; this module re-exports it for tests and
+keeps the test-facing import path stable next to ``flaky.py`` (whose
+``EchoEngine``/``FlakyEngine`` remain the simple per-call stubs — use
+:class:`ChaosEngine` when a test needs a scripted multi-phase plan).
+"""
+
+from repro.serve.chaos import (  # noqa: F401
+    ChaosEngine,
+    FaultPhase,
+    FaultPlan,
+    InjectedFault,
+    WorkerKilled,
+    dctz_crc_ok,
+)
+
+__all__ = ["ChaosEngine", "FaultPhase", "FaultPlan", "InjectedFault",
+           "WorkerKilled", "dctz_crc_ok"]

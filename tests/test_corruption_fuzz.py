@@ -1,0 +1,178 @@
+"""Byte-flip / truncation fuzz over DCTZ containers, across backends.
+
+Every mutation of a valid v1 (embedded tables) or v2 (shared tables)
+stream must be rejected with :class:`BitstreamError` — never an
+IndexError, struct.error or a wrong-shaped "success" — and the three
+payload-decode backends (the scalar LUT walk, the staged NumPy
+reference and the Pallas kernel in interpret mode) must agree on the
+outcome.  The CRC-repair tests re-seal the container after the flip so
+the corrupt bits actually reach the entropy decoders instead of being
+stopped at the framing check; that path is exactly what the service's
+``validate_payload`` hook and the chaos bench's corruption phase rely
+on (docs/serving.md).
+
+Runs against real hypothesis when installed, or the deterministic
+seeded stub from conftest.py in the hermetic container.
+"""
+
+import struct
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entropy
+from repro.core.entropy import container
+from repro.kernels import unpack_bits
+from repro.kernels.unpack_bits import ref as unpack_ref
+
+
+def _stream(tables: str) -> bytes:
+    rng = np.random.default_rng(7)
+    z = np.zeros((9, 64), np.int64)
+    z[:, 0] = rng.integers(-300, 300, 9)
+    nz = rng.random((9, 63)) < 0.2
+    z[:, 1:][nz] = rng.integers(-40, 40, int(nz.sum()))
+    return entropy.encode_zigzag_host(z, 50, "exact", (24, 24),
+                                      tables=tables)
+
+
+STREAMS = {
+    "v1-embedded": _stream("embedded"),
+    "v2-shared": _stream("shared"),
+}
+
+BACKENDS = {
+    "scalar": None,
+    "staged": unpack_ref.unpack_bits_ref,
+    "pallas-interpret": lambda *a: unpack_bits.unpack_bits(
+        *a, backend="pallas", interpret=True),
+}
+
+
+def _decode(data: bytes, unpacker):
+    """("ok", z bytes, header tuple) or ("error", exception)."""
+    try:
+        z, hdr = entropy.decode_zigzag_host(data, unpacker=unpacker)
+        return ("ok", z.tobytes(), hdr["height"], hdr["width"])
+    except entropy.BitstreamError as exc:
+        return ("error", exc)
+
+
+def _reseal(data: bytes) -> bytes:
+    """Recompute the CRC so a mutated body passes the framing check."""
+    crc = zlib.crc32(data[4:24] + data[container.HEADER_NBYTES:])
+    return data[:24] + struct.pack("<I", crc & 0xFFFFFFFF) + data[28:]
+
+
+def _agree(data: bytes):
+    """Decode with every backend; assert they agree, return one result."""
+    results = {name: _decode(data, up) for name, up in BACKENDS.items()}
+    kinds = {name: r[0] for name, r in results.items()}
+    assert len(set(kinds.values())) == 1, f"backends disagree: {kinds}"
+    first = results["scalar"]
+    if first[0] == "ok":
+        for name, r in results.items():
+            assert r == first, f"{name} decoded different values"
+    return first
+
+
+class TestVariantsAreValid:
+    def test_both_streams_round_trip(self):
+        for name, data in STREAMS.items():
+            kind, *_ = _agree(data)
+            assert kind == "ok", name
+        assert entropy.read_header(STREAMS["v1-embedded"])["version"] == 1
+        assert entropy.read_header(STREAMS["v2-shared"])["version"] == 2
+
+
+class TestRawMutations:
+    """Mutations of the sealed container: the CRC / framing layer must
+    reject them all, identically, before any backend runs."""
+
+    @settings(max_examples=40)
+    @given(st.sampled_from(sorted(STREAMS)),
+           st.floats(0.0, 0.999999))
+    def test_byte_flip_rejected(self, variant, frac):
+        data = bytearray(STREAMS[variant])
+        data[int(frac * len(data))] ^= 0xFF
+        kind, exc = _agree(bytes(data))
+        assert kind == "error"
+        assert isinstance(exc, entropy.BitstreamError)
+
+    @settings(max_examples=40)
+    @given(st.sampled_from(sorted(STREAMS)),
+           st.floats(0.0, 0.999999))
+    def test_truncation_rejected(self, variant, frac):
+        data = STREAMS[variant]
+        kind, exc = _agree(data[:int(frac * len(data))])
+        assert kind == "error"
+        assert isinstance(exc, entropy.BitstreamError)
+
+    @settings(max_examples=20)
+    @given(st.sampled_from(sorted(STREAMS)), st.integers(1, 16))
+    def test_trailing_garbage_rejected(self, variant, n_extra):
+        kind, exc = _agree(STREAMS[variant] + b"\xAA" * n_extra)
+        assert kind == "error"
+        assert isinstance(exc, entropy.BitstreamError)
+
+
+class TestResealedMutations:
+    """Flips hidden behind a recomputed CRC: the corrupt bits reach the
+    entropy decoders, which must either all reject with BitstreamError
+    or all decode the same alternative stream (padding-bit flips and
+    value-preserving amplitude aliases are legitimately decodable)."""
+
+    @settings(max_examples=60)
+    @given(st.sampled_from(sorted(STREAMS)),
+           st.floats(0.0, 0.999999), st.integers(1, 255))
+    def test_body_flip_outcomes_agree(self, variant, frac, mask):
+        data = bytearray(STREAMS[variant])
+        body = range(container.HEADER_NBYTES, len(data))
+        data[body[int(frac * len(body))]] ^= mask
+        kind, *rest = _agree(_reseal(bytes(data)))
+        if kind == "error":
+            assert isinstance(rest[0], entropy.BitstreamError)
+
+    @settings(max_examples=30)
+    @given(st.sampled_from(sorted(STREAMS)),
+           st.floats(0.0, 0.999999))
+    def test_resealed_payload_truncation_agrees(self, variant, frac):
+        data = STREAMS[variant]
+        hdr = entropy.read_header(data)
+        body_len = len(data) - container.HEADER_NBYTES
+        keep = int(frac * hdr["payload_nbytes"])
+        cut = data[:len(data) - (hdr["payload_nbytes"] - keep)]
+        patched = cut[:20] + struct.pack("<I", keep) + cut[24:]
+        kind, *rest = _agree(_reseal(patched))
+        if keep and body_len:
+            assert kind == "error"
+            assert isinstance(rest[0], entropy.BitstreamError)
+
+
+class TestServiceValidatorConsistency:
+    """chaos.dctz_crc_ok — the bench/service payload validator — must
+    track verify_crc on every mutation the fuzzers generate."""
+
+    @settings(max_examples=30)
+    @given(st.sampled_from(sorted(STREAMS)),
+           st.floats(0.0, 0.999999), st.booleans())
+    def test_crc_ok_matches_verify(self, variant, frac, truncate):
+        from repro.serve.chaos import dctz_crc_ok
+        data = bytearray(STREAMS[variant])
+        if truncate:
+            data = data[:int(frac * len(data))]
+        else:
+            data[int(frac * len(data))] ^= 0xFF
+        blob = bytes(data)
+        try:
+            want = entropy.verify_crc(blob)
+        except entropy.BitstreamError:
+            want = False
+        assert dctz_crc_ok(blob) is want
+        assert dctz_crc_ok(bytes(STREAMS[variant])) is True
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,105 @@
+"""examples/dctz_cli.py: exit codes and diagnostics on corrupt streams.
+
+The CLI is the shell-facing edge of the failure model: ``info`` and
+``decode`` must exit nonzero with a one-line ``error:`` diagnostic on
+any malformed stream (so pipelines can gate on corruption), and
+``decode --verify-crc`` must catch a CRC mismatch before parsing.
+"""
+
+import importlib.util
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+_CLI = pathlib.Path(__file__).resolve().parents[1] / "examples" \
+    / "dctz_cli.py"
+_spec = importlib.util.spec_from_file_location("dctz_cli", _CLI)
+cli = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cli)
+
+from repro.core import entropy  # noqa: E402
+
+
+@pytest.fixture
+def stream(tmp_path):
+    img = (np.arange(32 * 32).reshape(32, 32) % 251).astype(np.uint8)
+    path = tmp_path / "img.dctz"
+    path.write_bytes(entropy.encode_image(img, 50, "exact"))
+    return path
+
+
+def _run(argv, capsys):
+    sys_argv, sys.argv = sys.argv, ["dctz_cli.py", *argv]
+    try:
+        rc = cli.main()
+    finally:
+        sys.argv = sys_argv
+    out = capsys.readouterr()
+    return rc, out.out, out.err
+
+
+def _flip(path, offset=40):
+    blob = bytearray(path.read_bytes())
+    blob[offset] ^= 0xFF
+    bad = path.with_suffix(".bad.dctz")
+    bad.write_bytes(bytes(blob))
+    return bad
+
+
+class TestInfo:
+    def test_clean_stream_exits_zero(self, stream, capsys):
+        rc, out, err = _run(["info", str(stream)], capsys)
+        assert rc == 0 and "crc=ok" in out and err == ""
+
+    def test_crc_mismatch_exits_nonzero(self, stream, capsys):
+        bad = _flip(stream)
+        rc, out, err = _run(["info", str(bad)], capsys)
+        assert rc == 1
+        assert "crc=MISMATCH" in out          # header still printable
+        assert err.startswith("error:") and "CRC mismatch" in err
+        assert len(err.strip().splitlines()) == 1
+
+    def test_truncated_header_exits_nonzero(self, stream, capsys):
+        bad = stream.with_suffix(".trunc.dctz")
+        bad.write_bytes(stream.read_bytes()[:10])
+        rc, out, err = _run(["info", str(bad)], capsys)
+        assert rc == 1 and err.startswith("error:")
+        assert "truncated" in err
+
+
+class TestDecode:
+    def test_clean_round_trip(self, stream, tmp_path, capsys):
+        out_path = tmp_path / "rec.npy"
+        rc, out, err = _run(
+            ["decode", str(stream), str(out_path), "--verify-crc"],
+            capsys)
+        assert rc == 0 and "crc ok" in out and err == ""
+        assert np.load(out_path).shape == (32, 32)
+
+    def test_corrupt_stream_exits_nonzero(self, stream, tmp_path,
+                                          capsys):
+        bad = _flip(stream)
+        out_path = tmp_path / "rec.npy"
+        rc, out, err = _run(["decode", str(bad), str(out_path)], capsys)
+        assert rc == 1 and err.startswith("error:")
+        assert "CRC mismatch" in err
+        assert not out_path.exists()          # nothing written on error
+
+    def test_verify_crc_catches_before_parse(self, stream, tmp_path,
+                                             capsys):
+        bad = _flip(stream)
+        rc, out, err = _run(
+            ["decode", str(bad), str(tmp_path / "r.npy"),
+             "--verify-crc"], capsys)
+        assert rc == 1 and "CRC mismatch" in err
+        assert "header says" in err           # stored digest named
+
+    def test_truncated_stream_exits_nonzero(self, stream, tmp_path,
+                                            capsys):
+        bad = stream.with_suffix(".trunc.dctz")
+        bad.write_bytes(stream.read_bytes()[:40])
+        rc, out, err = _run(
+            ["decode", str(bad), str(tmp_path / "r.npy")], capsys)
+        assert rc == 1 and err.startswith("error:")

@@ -1,0 +1,745 @@
+"""Resilience layer: primitives, fault-plan engine, service integration.
+
+Three tiers, mirroring how the layer is built:
+
+* the jax-free primitives (`repro.serve.resilience`) driven with fake
+  clocks — token bucket, backoff jitter, circuit-breaker state machine,
+  degradation hysteresis — exact, no sleeps;
+* the deterministic fault-plan engine (`repro.serve.chaos`, re-exported
+  as `tests.helpers.faults`) — same (plan, seed) must inject the same
+  events at the same engine-call indices;
+* the asyncio service with resilience enabled — retries, timeouts,
+  breaker trips/recovery, corruption quarantine, worker death, graceful
+  degradation, and the close()-never-dangles guarantee, all under the
+  conservation invariant submitted == served + rejected + failed.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve import admission, resilience
+from repro.serve.admission import RejectedError, ServiceClosed
+from repro.serve.queueing import BatchPlanner
+from repro.serve.resilience import (BreakerConfig, CircuitBreaker,
+                                    CircuitOpen, DegradationController,
+                                    DegradeConfig, ResilienceConfig,
+                                    RetryPolicy, TokenBucket)
+from repro.serve.service import (CodecService, EngineFailure,
+                                 EngineTimeout, PayloadCorrupt,
+                                 ServiceConfig)
+from tests.helpers.faults import (ChaosEngine, FaultPhase, FaultPlan,
+                                  InjectedFault, WorkerKilled)
+from tests.helpers.flaky import EchoEngine
+
+import random
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+def fast_config(**kw) -> ServiceConfig:
+    defaults = dict(max_batch=4, max_wait_s=0.002, max_queue_depth=32,
+                    initial_step_s=0.001, cache_entries=0)
+    defaults.update(kw)
+    return ServiceConfig(**defaults)
+
+
+def assert_conserved(svc: CodecService):
+    s = svc.stats
+    assert s.submitted == s.served + s.total_rejected + s.failed
+    assert s.degraded_served <= s.served
+    assert s.unhandled == 0
+
+
+# ---------------------------------------------------------------------------
+# Primitives (fake clocks, no asyncio)
+# ---------------------------------------------------------------------------
+
+class TestTokenBucket:
+    def test_burst_then_empty(self):
+        b = TokenBucket(rate=0.0, burst=2)
+        assert b.take(0.0) and b.take(0.0)
+        assert not b.take(0.0)
+        assert not b.take(100.0)        # rate 0: never refills
+
+    def test_refills_at_rate_up_to_burst(self):
+        b = TokenBucket(rate=2.0, burst=4)
+        for _ in range(4):
+            assert b.take(0.0)
+        assert not b.take(0.0)
+        assert b.take(0.5)              # 0.5s * 2/s = 1 token back
+        assert not b.take(0.5)
+        assert b.available(1000.0) == 4  # capped at burst
+
+    def test_negative_burst_rejected(self):
+        with pytest.raises(ValueError):
+            TokenBucket(rate=1.0, burst=-1)
+
+
+class TestRetryPolicy:
+    def test_backoff_is_decorrelated_jitter_in_bounds(self):
+        pol = RetryPolicy(max_attempts=4, backoff_base_s=0.01,
+                          backoff_cap_s=0.5)
+        rng = random.Random(7)
+        prev = 0.0
+        for _ in range(200):
+            d = pol.backoff_s(prev, rng)
+            assert pol.backoff_base_s <= d <= pol.backoff_cap_s
+            assert d <= max(pol.backoff_base_s, 3.0 * prev) + 1e-12
+            prev = d
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(backoff_base_s=1.0, backoff_cap_s=0.1)
+        assert not RetryPolicy(max_attempts=1).enabled
+        assert RetryPolicy(max_attempts=2).enabled
+
+
+class TestCircuitBreaker:
+    def cfg(self, **kw):
+        d = dict(window=8, min_calls=3, failure_threshold=0.5,
+                 reset_timeout_s=1.0, half_open_max_calls=1,
+                 half_open_successes=2)
+        d.update(kw)
+        return BreakerConfig(**d)
+
+    def test_trips_only_past_min_calls_and_threshold(self):
+        br = CircuitBreaker(self.cfg())
+        br.record_failure(0.0)
+        br.record_failure(0.1)           # 2 < min_calls: still closed
+        assert br.state(0.1) == resilience.CLOSED
+        br.record_success(0.2)
+        br.record_failure(0.3)           # 3/4 failed >= 0.5 -> open
+        assert br.state(0.3) == resilience.OPEN
+        assert br.transitions == [(0.3, resilience.CLOSED,
+                                   resilience.OPEN)]
+
+    def test_successes_keep_it_closed(self):
+        br = CircuitBreaker(self.cfg())
+        for t in range(20):
+            br.record_success(float(t))
+        br.record_failure(20.0)          # 1/8 window: below threshold
+        assert br.state(20.0) == resilience.CLOSED
+
+    def test_open_blocks_admission_and_dispatch_until_reset(self):
+        br = CircuitBreaker(self.cfg())
+        for t in range(3):
+            br.record_failure(float(t))
+        assert not br.admission_open(2.5)
+        assert br.dispatch_budget(2.5) == 0
+        assert br.retry_after_s(2.5) == pytest.approx(0.5)
+        # reset_timeout elapses -> half-open probes
+        assert br.state(3.0) == resilience.HALF_OPEN
+        assert br.admission_open(3.0)
+        assert br.dispatch_budget(3.0) == 1
+
+    def test_half_open_probe_failure_reopens(self):
+        br = CircuitBreaker(self.cfg())
+        for t in range(3):
+            br.record_failure(float(t))
+        assert br.state(3.5) == resilience.HALF_OPEN
+        br.on_dispatch(3.5)
+        assert br.dispatch_budget(3.5) == 0   # probe slot consumed
+        br.record_failure(3.6)
+        assert br.state(3.6) == resilience.OPEN
+        # and the new open period starts at the re-open time
+        assert br.retry_after_s(3.7) == pytest.approx(0.9)
+
+    def test_half_open_consecutive_successes_close(self):
+        br = CircuitBreaker(self.cfg())
+        for t in range(3):
+            br.record_failure(float(t))
+        assert br.state(3.5) == resilience.HALF_OPEN
+        br.on_dispatch(3.5)
+        br.record_success(3.6)
+        assert br.state(3.6) == resilience.HALF_OPEN  # needs 2
+        br.on_dispatch(3.7)
+        br.record_success(3.8)
+        assert br.state(3.8) == resilience.CLOSED
+        states = [(f, t_) for _, f, t_ in br.transitions]
+        assert states == [(resilience.CLOSED, resilience.OPEN),
+                          (resilience.OPEN, resilience.HALF_OPEN),
+                          (resilience.HALF_OPEN, resilience.CLOSED)]
+
+    def test_window_slides(self):
+        br = CircuitBreaker(self.cfg(window=4, min_calls=4))
+        for t in range(4):
+            br.record_failure(float(t))   # trips at the 4th
+        assert br.state(4.0) != resilience.CLOSED
+        br2 = CircuitBreaker(self.cfg(window=4, min_calls=4))
+        for t in range(10):
+            br2.record_success(float(t))
+        br2.record_failure(10.0)
+        br2.record_failure(11.0)          # window [S,S,F,F] = 0.5: trips
+        assert br2.state(11.0) == resilience.OPEN
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BreakerConfig(failure_threshold=0.0)
+        with pytest.raises(ValueError):
+            BreakerConfig(window=0)
+
+
+class TestDegradationController:
+    def cfg(self, **kw):
+        d = dict(quality_caps=(100, 60, 35),
+                 urgent_batch_caps=(None, 4, 2),
+                 enter_pressure=0.75, exit_pressure=0.25,
+                 sustain_s=1.0, cool_s=2.0)
+        d.update(kw)
+        return DegradeConfig(**d)
+
+    def test_escalates_only_after_sustained_pressure(self):
+        c = DegradationController(self.cfg())
+        assert c.observe(0.0, 0.9) == 0      # hot, but not yet sustained
+        assert c.observe(0.5, 0.9) == 0
+        assert c.observe(1.0, 0.9) == 1      # 1.0s sustained
+        assert c.quality_cap() == 60 and c.urgent_cap() == 4
+        assert c.observe(1.5, 0.9) == 1      # next level needs own dwell
+        assert c.observe(2.0, 0.9) == 2
+        assert c.observe(9.0, 0.9) == 2      # capped at max level
+
+    def test_burst_does_not_escalate(self):
+        c = DegradationController(self.cfg())
+        c.observe(0.0, 0.9)
+        c.observe(0.5, 0.1)                  # pressure fell: reset dwell
+        assert c.observe(1.5, 0.9) == 0
+
+    def test_hysteresis_band_holds_level(self):
+        c = DegradationController(self.cfg())
+        c.observe(0.0, 0.9)
+        c.observe(1.0, 0.9)
+        assert c.level == 1
+        for t in range(2, 20):
+            assert c.observe(float(t), 0.5) == 1   # mid-band: hold
+
+    def test_cools_down_after_quiet_period(self):
+        c = DegradationController(self.cfg())
+        c.observe(0.0, 0.9)
+        c.observe(1.0, 0.9)
+        assert c.level == 1
+        assert c.observe(2.0, 0.1) == 1
+        assert c.observe(3.9, 0.1) == 1      # 1.9s < cool_s
+        assert c.observe(4.0, 0.1) == 0      # 2.0s quiet: decay
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DegradeConfig(quality_caps=(90, 50),
+                          urgent_batch_caps=(None, 2))
+        with pytest.raises(ValueError):
+            DegradeConfig(quality_caps=(100,), urgent_batch_caps=(None,),
+                          enter_pressure=0.2, exit_pressure=0.5)
+
+
+class TestPlannerResilienceHooks:
+    def test_urgent_cap_shrinks_only_urgency_dispatches(self):
+        p = BatchPlanner(max_batch=8, max_wait_s=10.0, safety=1.5,
+                         initial_step_s=1.0)
+        for _ in range(5):
+            p.admit((64, 64), 50, "t", now=0.0, deadline=2.0)
+        # deadline-urgent (0.6 >= 2.0 - 1.5*1.0) yet still feasible
+        # (0.6 + 1.0 <= 2.0); not full, timer far off
+        poll = p.poll(0.6, urgent_cap=2)
+        assert poll.batches and not poll.rejects
+        assert all(len(b.requests) <= 2 for b in poll.batches)
+        assert sum(len(b.requests) for b in poll.batches) == 5
+
+    def test_full_bucket_ignores_urgent_cap(self):
+        p = BatchPlanner(max_batch=4, max_wait_s=10.0)
+        for _ in range(4):
+            p.admit((64, 64), 50, "t", now=0.0)
+        poll = p.poll(0.0, urgent_cap=1)
+        assert [len(b.requests) for b in poll.batches] == [4]
+
+    def test_readmit_keeps_identity_and_applies_depth_bound(self):
+        p = BatchPlanner(max_batch=2, max_wait_s=10.0, max_queue_depth=2)
+        r = p.admit((64, 64), 50, "t", now=0.0, deadline=math.inf)
+        batch = p.poll(100.0).batches[0]
+        assert batch.requests == [r]
+        p.readmit(r)
+        again = p.poll(200.0).batches[0].requests[0]
+        assert again.req_id == r.req_id and again.arrival == 0.0
+        p.readmit(r)
+        p.readmit(r)
+        with pytest.raises(RejectedError) as ei:
+            p.readmit(r)
+        assert ei.value.reason == admission.QUEUE_FULL
+
+    def test_pressure_is_fullest_bucket_fraction(self):
+        p = BatchPlanner(max_batch=4, max_queue_depth=10)
+        assert p.pressure() == 0.0
+        for _ in range(5):
+            p.admit((64, 64), 50, "t", now=0.0)
+        p.admit((128, 128), 50, "t", now=0.0)
+        assert p.pressure() == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Fault-plan engine
+# ---------------------------------------------------------------------------
+
+def echo_blobs(images, quality):
+    return EchoEngine()(images, quality)
+
+
+class TestChaosEngine:
+    def test_phases_select_by_call_index(self):
+        plan = FaultPlan(phases=(
+            FaultPhase(start=1, stop=3, fail_rate=1.0),
+        ), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        img = np.zeros((8, 8), np.uint8)
+        assert eng([img], 50)                     # call 0: clean
+        for _ in range(2):                        # calls 1, 2: scripted
+            with pytest.raises(InjectedFault):
+                eng([img], 50)
+        assert eng([img], 50)                     # call 3: clean again
+        assert eng.events == [(1, "fail"), (2, "fail")]
+        assert eng.event_counts() == {"fail": 2}
+
+    def test_same_plan_same_seed_is_reproducible(self):
+        plan = FaultPlan(phases=(
+            FaultPhase(start=0, stop=50, fail_rate=0.3, corrupt_rate=0.3),
+        ), seed=13)
+        img = np.zeros((8, 8), np.uint8)
+        logs = []
+        for _ in range(2):
+            eng = ChaosEngine(echo_blobs, plan)
+            for _ in range(50):
+                try:
+                    eng([img, img], 50)
+                except InjectedFault:
+                    pass
+            logs.append(list(eng.events))
+        assert logs[0] == logs[1] and logs[0]
+
+    def test_corruption_flips_exactly_one_byte(self):
+        plan = FaultPlan(phases=(
+            FaultPhase(start=0, corrupt_rate=1.0),), seed=3)
+        img = np.arange(64, dtype=np.uint8).reshape(8, 8)
+        clean = echo_blobs([img], 50)[0]
+        dirty = ChaosEngine(echo_blobs, plan)([img], 50)[0]
+        assert len(clean) == len(dirty)
+        assert sum(a != b for a, b in zip(clean, dirty)) == 1
+
+    def test_worker_kill_is_base_exception(self):
+        plan = FaultPlan(phases=(
+            FaultPhase(start=0, kill_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        with pytest.raises(WorkerKilled):
+            eng([np.zeros((8, 8), np.uint8)], 50)
+        assert issubclass(WorkerKilled, SystemExit)
+        assert not issubclass(WorkerKilled, Exception)
+
+    def test_phase_validation(self):
+        with pytest.raises(ValueError):
+            FaultPhase(start=5, stop=2)
+        with pytest.raises(ValueError):
+            FaultPhase(start=0, fail_rate=1.5)
+
+    def test_dctz_crc_validator_catches_byte_flip(self):
+        from repro.core.entropy import encode_zigzag_host
+        from repro.serve.chaos import dctz_crc_ok
+        z = np.zeros((4, 64), np.int64)
+        z[:, 0] = np.arange(4) * 3
+        z[:, 1] = -2
+        blob = encode_zigzag_host(z, 50, "exact", (16, 16))
+        assert dctz_crc_ok(blob)
+        flipped = bytearray(blob)
+        flipped[len(flipped) // 2] ^= 0xFF
+        assert not dctz_crc_ok(bytes(flipped))
+        assert not dctz_crc_ok(b"not a stream")
+        assert not dctz_crc_ok(None)
+
+
+# ---------------------------------------------------------------------------
+# Service integration
+# ---------------------------------------------------------------------------
+
+IMG = np.arange(64 * 64, dtype=np.uint8).reshape(64, 64) % 251
+
+
+class TestServiceRetries:
+    def test_transient_failure_is_retried_to_success(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0, stop=1,
+                                            fail_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(resilience=ResilienceConfig(
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.001,
+                              backoff_cap_s=0.005)))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                resp = await svc.submit(IMG, quality=50)
+                assert resp.attempts == 2
+                assert svc.stats.retries == 1
+                assert svc.stats.served == 1 and svc.stats.failed == 0
+                assert_conserved(svc)
+        run(main())
+
+    def test_exhausted_attempts_fail_with_cause(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0,
+                                            fail_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(resilience=ResilienceConfig(
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.001,
+                              backoff_cap_s=0.005)))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                with pytest.raises(EngineFailure) as ei:
+                    await svc.submit(IMG, quality=50)
+                assert isinstance(ei.value.__cause__, InjectedFault)
+                assert svc.stats.retries == 2
+                assert svc.stats.failed == 1
+                assert eng.calls == 3
+                assert_conserved(svc)
+        run(main())
+
+    def test_empty_retry_budget_fails_fast(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0,
+                                            fail_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(resilience=ResilienceConfig(
+            retry=RetryPolicy(max_attempts=5, backoff_base_s=0.001,
+                              backoff_cap_s=0.005, budget_rate=0.0,
+                              budget_burst=0.0)))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                with pytest.raises(EngineFailure):
+                    await svc.submit(IMG, quality=50)
+                assert svc.stats.retries == 0
+                assert svc.stats.retry_budget_exhausted == 1
+                assert eng.calls == 1
+                assert_conserved(svc)
+        run(main())
+
+    def test_retries_off_by_default(self):
+        eng = ChaosEngine(echo_blobs, FaultPlan(phases=(
+            FaultPhase(start=0, stop=1, fail_rate=1.0),), seed=0))
+
+        async def main():
+            async with CodecService(fast_config(), engine=eng) as svc:
+                with pytest.raises(EngineFailure):
+                    await svc.submit(IMG, quality=50)
+                assert eng.calls == 1 and svc.stats.retries == 0
+                assert_conserved(svc)
+        run(main())
+
+
+class TestServiceTimeout:
+    def test_slow_attempt_times_out(self):
+        eng = EchoEngine(step_s=0.25)
+        cfg = fast_config(resilience=ResilienceConfig(timeout_s=0.02))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                with pytest.raises(EngineFailure) as ei:
+                    await svc.submit(IMG, quality=50)
+                assert isinstance(ei.value.__cause__, EngineTimeout)
+                assert svc.stats.timeouts == 1
+                assert_conserved(svc)
+        run(main())
+
+    def test_timeout_plus_retry_recovers(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0, stop=1,
+                                            latency_rate=1.0,
+                                            latency_s=0.25),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(
+            engine_concurrency=2,   # the abandoned thread parks worker 1
+            resilience=ResilienceConfig(
+                timeout_s=0.05,
+                retry=RetryPolicy(max_attempts=2, backoff_base_s=0.001,
+                                  backoff_cap_s=0.005)))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                resp = await svc.submit(IMG, quality=50)
+                assert resp.attempts == 2
+                assert svc.stats.timeouts == 1
+                assert svc.stats.retries == 1
+                assert_conserved(svc)
+        run(main())
+
+
+class TestServiceBreaker:
+    def test_storm_trips_breaker_and_recovery_closes_it(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0, stop=2,
+                                            fail_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(resilience=ResilienceConfig(
+            breaker=BreakerConfig(window=4, min_calls=2,
+                                  failure_threshold=0.5,
+                                  reset_timeout_s=0.05,
+                                  half_open_successes=1)))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                for _ in range(2):
+                    with pytest.raises(EngineFailure):
+                        await svc.submit(IMG, quality=50)
+                # breaker is now open: typed fast-fail at submit
+                with pytest.raises(CircuitOpen) as ei:
+                    await svc.submit(IMG, quality=50)
+                assert ei.value.reason == admission.CIRCUIT_OPEN
+                assert svc.stats.rejected[admission.CIRCUIT_OPEN] == 1
+                await asyncio.sleep(0.08)     # reset timeout elapses
+                resp = await svc.submit(IMG, quality=50)  # probe: clean
+                assert resp.payload
+                states = [(f, t) for _, f, t in svc.breaker.transitions]
+                assert states == [("closed", "open"),
+                                  ("open", "half_open"),
+                                  ("half_open", "closed")]
+                assert_conserved(svc)
+        run(main())
+
+    def test_open_breaker_parks_queued_work_until_half_open(self):
+        # a request admitted *before* the trip stays queued while the
+        # breaker is open and dispatches once probes are allowed
+        plan = FaultPlan(phases=(FaultPhase(start=0, stop=2,
+                                            fail_rate=1.0,
+                                            latency_rate=1.0,
+                                            latency_s=0.05),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(
+            max_batch=1, max_wait_s=0.0005, max_inflight_batches=1,
+            resilience=ResilienceConfig(
+                breaker=BreakerConfig(window=4, min_calls=2,
+                                      failure_threshold=0.5,
+                                      reset_timeout_s=0.05,
+                                      half_open_successes=1)))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                async def one(img):
+                    try:
+                        return await svc.submit(img, quality=50)
+                    except EngineFailure:
+                        return None
+
+                # with one in-flight slot A and B fail serially (50 ms
+                # each); C is admitted while closed but is still queued
+                # when B's failure trips the breaker — it must park,
+                # then ride the half-open probe to success
+                imgs = [((IMG + i) % 251).astype(np.uint8)
+                        for i in range(3)]
+                t0 = asyncio.get_running_loop().time()
+                results = await asyncio.gather(*[one(im) for im in imgs])
+                waited = asyncio.get_running_loop().time() - t0
+                assert results[0] is None and results[1] is None
+                assert results[2] is not None and results[2].payload
+                # A (50ms) + B (50ms) + open period (50ms): C was parked
+                assert waited >= 0.13
+                states = [(f, t) for _, f, t in svc.breaker.transitions]
+                assert states[:2] == [("closed", "open"),
+                                      ("open", "half_open")]
+                assert_conserved(svc)
+        run(main())
+
+
+class TestServiceCorruption:
+    def test_corrupt_payload_never_served_and_retried(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0, stop=1,
+                                            corrupt_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        # chaos corrupts by flipping one byte; the validator detects any
+        # difference from the known clean echo payload
+        clean = {}
+
+        async def main():
+            clean[echo_blobs([IMG], 50)[0]] = True
+            cfg = fast_config(resilience=ResilienceConfig(
+                validate_payload=lambda b: b in clean,
+                retry=RetryPolicy(max_attempts=2, backoff_base_s=0.001,
+                                  backoff_cap_s=0.005)))
+            async with CodecService(cfg, engine=eng) as svc:
+                resp = await svc.submit(IMG, quality=50)
+                assert resp.payload in clean
+                assert resp.attempts == 2
+                assert svc.stats.corrupt_payloads == 1
+                assert svc.stats.retries == 1
+                assert_conserved(svc)
+        run(main())
+
+    def test_corrupt_payload_without_retry_fails_typed(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0,
+                                            corrupt_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(resilience=ResilienceConfig(
+            validate_payload=lambda b: b == echo_blobs([IMG], 50)[0]))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                with pytest.raises(EngineFailure) as ei:
+                    await svc.submit(IMG, quality=50)
+                assert isinstance(ei.value.__cause__, PayloadCorrupt)
+                assert svc.stats.corrupt_payloads == 1
+                assert svc.stats.failed == 1
+                assert_conserved(svc)
+        run(main())
+
+
+class TestServiceWorkerDeath:
+    def test_worker_death_fails_batch_not_service(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0, stop=1,
+                                            kill_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+
+        async def main():
+            async with CodecService(fast_config(), engine=eng) as svc:
+                with pytest.raises(EngineFailure) as ei:
+                    await svc.submit(IMG, quality=50)
+                assert isinstance(ei.value.__cause__, WorkerKilled)
+                # the service must keep serving afterwards
+                resp = await svc.submit(np.rot90(IMG).copy(), quality=50)
+                assert resp.payload
+                assert svc.stats.unhandled == 0
+                assert svc.dispatcher_error is None
+                assert_conserved(svc)
+        run(main())
+
+
+class TestServiceDegradation:
+    def test_sustained_pressure_downshifts_quality(self):
+        eng = EchoEngine()
+        cfg = fast_config(resilience=ResilienceConfig(
+            degrade=DegradeConfig(quality_caps=(100, 40),
+                                  urgent_batch_caps=(None, 1),
+                                  enter_pressure=0.0, exit_pressure=0.0,
+                                  sustain_s=0.0, cool_s=60.0)))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                # warm one loop iteration so the controller escalates
+                await svc.submit(IMG, quality=90)
+                await asyncio.sleep(0.01)
+                resp = await svc.submit(np.rot90(IMG).copy(), quality=90)
+                assert resp.degraded and resp.quality == 40
+                assert svc.stats.degraded >= 1
+                assert svc.stats.degraded_served >= 1
+                assert_conserved(svc)
+        run(main())
+
+    def test_no_degradation_without_config(self):
+        eng = EchoEngine()
+
+        async def main():
+            async with CodecService(fast_config(), engine=eng) as svc:
+                resp = await svc.submit(IMG, quality=90)
+                assert not resp.degraded and resp.quality == 90
+                assert svc.stats.degraded == 0
+        run(main())
+
+
+class TestServiceClose:
+    def test_close_resolves_future_stranded_by_dispatcher_crash(self):
+        eng = EchoEngine()
+
+        async def main():
+            svc = CodecService(fast_config(), engine=eng)
+            await svc.start()
+            svc._planner.poll = lambda *a, **k: (_ for _ in ()).throw(
+                RuntimeError("planner exploded"))
+            task = asyncio.ensure_future(svc.submit(IMG, quality=50))
+            await asyncio.sleep(0.02)
+            assert not task.done()     # stranded: dispatcher is dead
+            await svc.close()
+            with pytest.raises(ServiceClosed) as ei:
+                await task
+            assert ei.value.reason == admission.SHUTDOWN
+            assert isinstance(svc.dispatcher_error, RuntimeError)
+            assert svc.stats.closed_unserved == 1
+            assert_conserved(svc)
+        run(main())
+
+    def test_close_cancels_parked_retry_and_resolves_future(self):
+        plan = FaultPlan(phases=(FaultPhase(start=0,
+                                            fail_rate=1.0),), seed=0)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(resilience=ResilienceConfig(
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=5.0,
+                              backoff_cap_s=5.0)))
+
+        async def main():
+            svc = CodecService(cfg, engine=eng)
+            await svc.start()
+            task = asyncio.ensure_future(svc.submit(IMG, quality=50))
+            for _ in range(200):
+                await asyncio.sleep(0.005)
+                if svc.stats.retries:
+                    break
+            assert svc.stats.retries == 1
+            await svc.close()          # must not wait out the 5s backoff
+            with pytest.raises(ServiceClosed):
+                await task
+            assert svc.stats.closed_unserved == 1
+            assert_conserved(svc)
+        run(main())
+
+    def test_clean_close_reports_no_unserved(self):
+        eng = EchoEngine()
+
+        async def main():
+            svc = CodecService(fast_config(), engine=eng)
+            await svc.start()
+            await svc.submit(IMG, quality=50)
+            await svc.close()
+            assert svc.stats.closed_unserved == 0
+            assert svc.dispatcher_error is None
+            with pytest.raises(RejectedError) as ei:
+                await svc.submit(IMG, quality=50)
+            assert ei.value.reason == admission.SHUTDOWN
+            assert_conserved(svc)
+        run(main())
+
+
+class TestConservationUnderChaos:
+    def test_mixed_fault_storm_conserves_every_outcome(self):
+        plan = FaultPlan(phases=(
+            FaultPhase(start=2, stop=8, fail_rate=0.7),
+            FaultPhase(start=8, stop=12, corrupt_rate=0.5),
+            FaultPhase(start=12, stop=14, kill_rate=1.0),
+        ), seed=11)
+        eng = ChaosEngine(echo_blobs, plan)
+        cfg = fast_config(
+            max_batch=2, max_queue_depth=8,
+            resilience=ResilienceConfig(
+                retry=RetryPolicy(max_attempts=2, backoff_base_s=0.001,
+                                  backoff_cap_s=0.004),
+                breaker=BreakerConfig(window=6, min_calls=3,
+                                      failure_threshold=0.7,
+                                      reset_timeout_s=0.01,
+                                      half_open_successes=1),
+                validate_payload=lambda b: isinstance(b, bytes)
+                and len(b) == 20 and not b.startswith(b"\xff")))
+
+        async def main():
+            async with CodecService(cfg, engine=eng) as svc:
+                imgs = [((IMG + i) % 251).astype(np.uint8)
+                        for i in range(40)]
+
+                async def one(img):
+                    try:
+                        await svc.submit(img, quality=50,
+                                         deadline_s=2.0)
+                        return "served"
+                    except RejectedError:
+                        return "rejected"
+                    except EngineFailure:
+                        return "failed"
+
+                outcomes = await asyncio.gather(*[one(im) for im in imgs])
+                assert len(outcomes) == 40
+                assert_conserved(svc)
+                assert svc.stats.submitted == 40
+        run(main())

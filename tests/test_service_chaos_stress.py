@@ -1,0 +1,121 @@
+"""Fault-injection chaos stress for the resilient service (marked slow).
+
+The slow-tier companion to ``tests/test_resilience.py``: real
+concurrent clients, the real :mod:`repro.serve.codec_engine`, and a
+seeded :class:`repro.serve.chaos.ChaosEngine` storm (scripted
+exceptions, a payload-corruption burst, one worker death) through the
+full resilience envelope.  The claims are the chaos bench's gate,
+under closed-loop concurrency instead of open-loop arrivals: every
+request reaches exactly one terminal outcome, nothing escapes the
+dispatch loop unhandled, corruption is caught by the CRC validator —
+never served — and every payload that *is* served is byte-identical
+to a serial ``encode_batch`` of the same image at the same quality.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+from helpers.faults import ChaosEngine, FaultPhase, FaultPlan, dctz_crc_ok
+
+from repro.serve.admission import RejectedError
+from repro.serve.resilience import (BreakerConfig, ResilienceConfig,
+                                    RetryPolicy)
+from repro.serve.service import (CodecService, EngineFailure, Response,
+                                 ServiceConfig)
+
+pytestmark = pytest.mark.slow
+
+QUALITIES = (30, 75)
+SHAPES = ((40, 40), (48, 56))
+
+
+def test_chaos_storm_conserves_and_serves_identical_bytes():
+    codec_engine = pytest.importorskip("repro.serve.codec_engine")
+    rng = np.random.default_rng(0)
+    pool = [rng.integers(0, 256, s, dtype=np.uint8) for s in SHAPES]
+
+    inner = lambda images, quality: codec_engine.encode_batch(
+        list(images), quality)
+    # warm every (shape, quality) so jit compiles never eat the attempt
+    # timeout on a shared runner
+    for img in pool:
+        for q in QUALITIES:
+            inner([img], q)
+
+    plan = FaultPlan(phases=(
+        FaultPhase(start=2, stop=5, fail_rate=1.0),
+        FaultPhase(start=8, stop=9, kill_rate=1.0),
+        FaultPhase(start=10, stop=13, corrupt_rate=1.0),
+    ), seed=0)
+    eng = ChaosEngine(inner, plan)
+
+    cfg = ServiceConfig(
+        max_batch=4, max_wait_s=0.005, max_queue_depth=64,
+        cache_entries=0, default_deadline_s=30.0,
+        resilience=ResilienceConfig(
+            timeout_s=5.0,
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.01,
+                              backoff_cap_s=0.1, budget_rate=50,
+                              budget_burst=100),
+            breaker=BreakerConfig(window=8, min_calls=4,
+                                  failure_threshold=0.5,
+                                  reset_timeout_s=0.05),
+            validate_payload=dctz_crc_ok))
+
+    n_clients, per_client = 6, 5
+    outcomes = []
+
+    async def client(svc, cid):
+        crng = np.random.default_rng(100 + cid)
+        for _ in range(per_client):
+            idx = int(crng.integers(len(pool)))
+            q = QUALITIES[int(crng.integers(len(QUALITIES)))]
+            try:
+                resp = await svc.submit(pool[idx], quality=q)
+                outcomes.append(("served", idx, q, resp))
+            except RejectedError as exc:
+                outcomes.append(("rejected", idx, q, exc))
+            except EngineFailure as exc:
+                outcomes.append(("failed", idx, q, exc))
+            await asyncio.sleep(float(crng.uniform(0, 0.01)))
+
+    async def go():
+        async with CodecService(cfg, engine=eng) as svc:
+            await asyncio.gather(*[client(svc, c)
+                                   for c in range(n_clients)])
+            # the storm is bounded in call-index space: once it has
+            # passed, a fresh submit must be served cleanly again
+            resp = await svc.submit(pool[0], quality=75)
+            assert isinstance(resp, Response)
+            outcomes.append(("served", 0, 75, resp))
+        return svc.stats
+
+    stats = asyncio.run(go())
+
+    # one terminal outcome per submit, fully accounted
+    assert len(outcomes) == n_clients * per_client + 1
+    assert stats.submitted == n_clients * per_client + 1
+    assert stats.submitted == (stats.served + stats.total_rejected
+                               + stats.failed)
+    assert stats.unhandled == 0
+    assert stats.closed_unserved == 0
+
+    # the storm actually happened and the envelope engaged
+    counts = eng.event_counts()
+    assert counts.get("fail", 0) >= 1
+    assert counts.get("corrupt", 0) >= 1
+    assert stats.retries >= 1
+
+    # corruption is caught, never served: every served payload is
+    # byte-identical to a serial encode of the same image/quality
+    serial = {}
+    for kind, idx, q, resp in outcomes:
+        if kind != "served":
+            continue
+        key = (idx, q)
+        if key not in serial:
+            serial[key] = inner([pool[idx]], q)[0]
+        assert bytes(resp.payload) == bytes(serial[key]), key
+        assert dctz_crc_ok(resp.payload)
+    assert any(kind == "served" for kind, *_ in outcomes)
