@@ -13,8 +13,10 @@ timer (:func:`repro.bench.timer.measure`) and writes two artifacts:
 
 The swept knobs are exactly the ones the routers expose: ``tile`` (the
 ``common.pick_tile`` target) for ``dct8x8`` / ``cordic_loeffler`` /
-``fused_codec``, and ``tile_bits`` (window follows as
-``tile_bits + margin``) for ``pack_bits`` / ``unpack_bits``.  Off-TPU
+``fused_codec``, ``tile_bits`` (window follows as
+``tile_bits + margin``) for ``pack_bits`` / ``unpack_bits``,
+``block_rows`` for ``grad_dct``, and ``tile_blocks`` for
+``symbolize``.  Off-TPU
 the Pallas legs run in interpret mode — the sweep then measures the
 interpreter, which is still a full pipeline proof (CI runs it with
 ``--smoke``); winners are only *routed* on the backend they were swept
@@ -46,6 +48,8 @@ CANDIDATES = {
     "fused_codec": (8, 16, 32, 64, 128, 256),
     "pack_bits": (256, 512, 1024, 2048, 4096),
     "unpack_bits": (512, 1024, 2048, 4096, 8192),
+    "grad_dct": (64, 128, 256, 512, 1024),
+    "symbolize": (8, 16, 32, 64, 128),
 }
 
 # Suite -> sweep grid.  ``image_buckets`` are square image sizes (the
@@ -55,11 +59,11 @@ CANDIDATES = {
 # (smoke keeps the sweep tiny for CI).
 SUITE_GRIDS = {
     "smoke": {"image_buckets": (64,), "entropy_size": 48,
-              "max_candidates": 2},
+              "grad_rows": 256, "max_candidates": 2},
     "paper": {"image_buckets": (256,), "entropy_size": 128,
-              "max_candidates": None},
+              "grad_rows": 4096, "max_candidates": None},
     "full": {"image_buckets": (256, 512), "entropy_size": 256,
-             "max_candidates": None},
+             "grad_rows": 16384, "max_candidates": None},
 }
 
 SUITE_TIMERS = {
@@ -94,8 +98,9 @@ def _image_fn(kernel: str):
 
 def _entropy_workload(size: int):
     """One real image's entropy stage: (codes, lengths, payload, tables,
-    n_blocks).  The pack sweep times the captured codeword fields; the
-    unpack sweep times the payload they packed into."""
+    n_blocks, dc_diff, ac).  The pack sweep times the captured codeword
+    fields; the unpack sweep times the payload they packed into; the
+    symbolize sweep re-symbolises the raw block arrays."""
     from repro.bench import cases
     from repro.core.entropy import bitio, rle
     (_, dc_diff, ac, payload, (dc_t, ac_t),
@@ -109,7 +114,7 @@ def _entropy_workload(size: int):
 
     rle.encode_payload(*syms, dc_t, ac_t, packer=cap)
     codes, lengths = captured["cl"]
-    return codes, lengths, payload, (dc_t, ac_t), n_blocks
+    return codes, lengths, payload, (dc_t, ac_t), n_blocks, dc_diff, ac
 
 
 def sweep(suite: str = "paper", timer: TimerConfig | None = None,
@@ -139,7 +144,7 @@ def sweep(suite: str = "paper", timer: TimerConfig | None = None,
                 extra_params={"image_hw": bucket}))
 
     size = grid["entropy_size"]
-    codes, lengths, payload, (dc_t, ac_t), n_blocks = (
+    codes, lengths, payload, (dc_t, ac_t), n_blocks, dc_diff, ac = (
         _entropy_workload(size))
     nbits = len(payload) * 8
 
@@ -161,6 +166,34 @@ def sweep(suite: str = "paper", timer: TimerConfig | None = None,
         timer, log, extra_params={"entropy_size": size,
                                   "payload_bits": nbits,
                                   "n_blocks": n_blocks}))
+
+    # symbolize: same image's zig-zag blocks through the Pallas kernel
+    # (interpret mode off-TPU), keyed by block count like the routers
+    from repro.kernels import symbolize as sy
+    records.append(_sweep_one(
+        "symbolize", tuning.bucket_of(n_blocks),
+        [c for c in _bit_candidates("symbolize", cap) if c <= n_blocks]
+        or [CANDIDATES["symbolize"][0]],
+        lambda t: sy.symbolize_dense(dc_diff, ac, backend="pallas",
+                                     tile_blocks=t),
+        timer, log, extra_params={"entropy_size": size,
+                                  "n_blocks": n_blocks}))
+
+    # grad_dct: a flat gradient vector (the distributed-training
+    # compressor), keyed by 64-sample row count
+    from repro.kernels import grad_dct as gd
+    rows = grid["grad_rows"]
+    g = np.asarray(np.random.default_rng(0).standard_normal(
+        rows * gd.BLOCK + 7), dtype=np.float32)
+    # measure() blocks on the returned pytree; CompressedGrad is a plain
+    # dataclass, so hand its arrays back as a tuple
+    records.append(_sweep_one(
+        "grad_dct", tuning.bucket_of(rows),
+        [c for c in _bit_candidates("grad_dct", cap) if c <= rows]
+        or [CANDIDATES["grad_dct"][0]],
+        lambda t: (lambda cg: (cg.q, cg.scale, cg.tail))(
+            gd.encode(g, block_rows=t)),
+        timer, log, extra_params={"grad_rows": rows}))
     return records
 
 

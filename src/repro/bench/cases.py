@@ -374,6 +374,53 @@ def entropy_throughput_points(size: int, batches, warmup: int,
                  "enc_mb_per_s": mb / (t_enc_vec.median_us / 1e6),
                  "dec_mb_per_s": mb / (t_dec_vec.median_us / 1e6)})]
 
+    # per-stage encode breakdown: the fused dense pass split into its
+    # stages (symbolize incl. histograms / table choice / codeword
+    # lookup / bit pack), scored against the PR 4 vectorized host
+    # symbolisation on the same blocks, plus the host<->device traffic
+    # each symbolize routing implies (docs/benchmarks.md)
+    from repro.core.entropy import bitio, huffman
+    from repro.kernels.symbolize import ref as sref
+
+    def vectorized_symbolize():
+        syms = rle.symbolize(dc_diff, ac)
+        return rle.symbol_frequencies(syms[0], syms[1])
+
+    dense = sref.symbolize_dense(dc_diff, ac)
+    fields, widths = sref.encode_fields_dense(dense, dc_t, ac_t)
+    t_sym = measure(sref.symbolize_dense, dc_diff, ac,
+                    warmup=warmup, iters=iters)
+    t_sym_vec = measure(vectorized_symbolize, warmup=warmup, iters=iters)
+    t_tab = measure(lambda: (huffman.build_table(dense.dc_freq),
+                             huffman.build_table(dense.ac_freq)),
+                    warmup=warmup, iters=iters)
+    t_cw = measure(sref.encode_fields_dense, dense, dc_t, ac_t,
+                   warmup=warmup, iters=iters)
+    t_pack = measure(bitio.pack_bits, fields, widths,
+                     warmup=warmup, iters=iters)
+    # host-routed encode pulls the full int32 coefficient tensor; the
+    # device-resident chain pulls two (1, 256) int32 histograms, one
+    # scalar bit count + flag, and the finished payload bytes
+    host_xfer = n_blocks * 64 * 4
+    device_xfer = 2 * 256 * 4 + 8 + len(payload)
+    records.append(BenchRecord(
+        label=f"encode_stages_{size}",
+        params={"height": size, "width": size, "image": "lena",
+                "quality": QUALITY, "n_blocks": n_blocks,
+                "payload_nbytes": len(payload)},
+        timings_us={"stage_symbolize": t_sym.to_json(),
+                    "stage_symbolize_vectorized": t_sym_vec.to_json(),
+                    "stage_table_choice": t_tab.to_json(),
+                    "stage_codeword": t_cw.to_json(),
+                    "stage_pack": t_pack.to_json()},
+        metrics={
+            "symbolize_speedup_vs_vectorized":
+                t_sym_vec.median_us / t_sym.median_us,
+            "host_transfer_bytes_per_image": float(host_xfer),
+            "device_transfer_bytes_per_image": float(device_xfer),
+            "transfer_reduction": host_xfer / device_xfer,
+        }))
+
     # single-image reference end-to-end rate: sharded device compress
     # (shared by both code shapes) + the scalar host coding PR 3 paid
     img1 = images.lena_like(size, size, seed=0)[None]
@@ -630,6 +677,105 @@ def unpack_identity_violations(seed: int = 0, trials: int = 25) -> list:
                                                     unpacker=unpacker)
         if not (np.array_equal(want_z, got_z) and want_hdr == got_hdr):
             bad.append(f"stream_{tables}: routed unpack stream mismatch")
+    return bad
+
+
+def symbolize_identity_violations(seed: int = 0, trials: int = 25) -> list:
+    """Cases where a routed symbolize backend diverges from the scalar
+    oracle — the symbolisation third of the ``--check-identical`` CI
+    gate (must return []).
+
+    Checks, per case, that the staged dense NumPy pass
+    (:func:`repro.kernels.symbolize.ref.symbolize_ref`) and the Pallas
+    kernel (interpret mode off-TPU) produce symbol streams element- and
+    dtype-identical to
+    :func:`repro.core.entropy.rle.symbolize_reference`, histograms
+    bit-identical to :func:`repro.core.entropy.rle.symbol_frequencies`,
+    and payload bytes identical to the scalar path, over ``trials``
+    random batches plus the :func:`adversarial_blocks`; that levels too
+    wide for a 15-bit amplitude are rejected with the oracle's exact
+    :class:`repro.core.entropy.rle.RangeError` message on every
+    backend; and that whole ``DCTZ`` streams framed through each routed
+    symbolizer (v1 embedded-table and v2 shared/auto-negotiated framing
+    alike) are byte-identical to the default path.
+    """
+    from repro.core import entropy
+    from repro.core.entropy import huffman, rle
+    from repro.kernels import symbolize as sy
+    from repro.kernels.symbolize import ref as sref
+    rng = np.random.default_rng(seed)
+    cases = []
+    for t in range(trials):
+        n = int(rng.integers(1, 24))
+        ac = rng.integers(-32767, 32768, (n, 63))
+        ac[rng.random((n, 63)) < rng.uniform(0.2, 0.995)] = 0
+        dc = rng.integers(-32767, 32768, (n,))
+        cases.append((f"random_{t}", dc, ac))
+    cases += [(f"adversarial_{i}", dc, ac)
+              for i, (dc, ac) in enumerate(adversarial_blocks())]
+
+    backends = [
+        ("staged", lambda d, a: sref.symbolize_ref(d, a)),
+        ("pallas", lambda d, a: sy.symbolize(d, a, backend="pallas",
+                                             interpret=True)),
+    ]
+    preps = [(bname, sy.make_symbolizer(bname, interpret=True))
+             for bname in ("numpy", "pallas")]
+    bad = []
+    for name, dc, ac in cases:
+        want = rle.symbolize_reference(dc, ac)
+        for bname, fn in backends:
+            got = fn(dc, ac)
+            if not all(np.array_equal(a, b) and a.dtype == b.dtype
+                       for a, b in zip(got, want)):
+                bad.append(f"{name}: {bname} symbol stream mismatch")
+        dc_f, ac_f = rle.symbol_frequencies(want[0], want[1])
+        dc_t, ac_t = (huffman.build_table(dc_f), huffman.build_table(ac_f))
+        want_payload = rle.encode_payload(*want, dc_t, ac_t)
+        for bname, prepare in preps:
+            prep = prepare(dc, ac)
+            if not (np.array_equal(prep.dc_freq, dc_f)
+                    and np.array_equal(prep.ac_freq, ac_f)):
+                bad.append(f"{name}: {bname} histogram mismatch")
+                continue
+            if prep.payload(dc_t, ac_t) != want_payload:
+                bad.append(f"{name}: {bname} payload bytes mismatch")
+
+    # out-of-range levels must raise the oracle's exact RangeError on
+    # every backend (the device guard routes them to the reference)
+    def outcome(fn):
+        try:
+            fn()
+            return None
+        except rle.RangeError as e:
+            return str(e)
+
+    for rname, dc, ac in [
+            ("dc_overflow", np.array([1 << 15]), np.zeros((1, 63))),
+            ("ac_overflow", np.array([0]),
+             np.eye(1, 63, 5, dtype=np.int64) * (1 << 15))]:
+        want_err = outcome(lambda: rle.symbolize_reference(dc, ac))
+        for bname, fn in backends:
+            if outcome(lambda: fn(dc, ac)) != want_err:
+                bad.append(f"{rname}: {bname} RangeError mismatch")
+        for bname, prepare in preps:
+            if outcome(lambda: prepare(dc, ac)) != want_err:
+                bad.append(f"{rname}: {bname} prepared RangeError mismatch")
+
+    # whole-stream check: each routed symbolizer must frame identical
+    # DCTZ containers under every table policy (v1 embedded framing and
+    # v2 shared/auto-negotiated framing, from the device histograms)
+    c = codec.compress(images.lena_like(32, 32), QUALITY)
+    for tables in ("auto", "embedded", "shared"):
+        want_s = entropy.encode_qcoeffs(c.qcoeffs, QUALITY, "exact",
+                                        (32, 32), tables=tables)
+        for bname, prepare in preps:
+            got_s = entropy.encode_qcoeffs(c.qcoeffs, QUALITY, "exact",
+                                           (32, 32), tables=tables,
+                                           symbolizer=prepare)
+            if got_s != want_s:
+                bad.append(f"stream_{tables}: routed {bname} "
+                           f"symbolizer stream mismatch")
     return bad
 
 

@@ -93,6 +93,8 @@ def _rd_table(result) -> str:
 
 def _entropy_table(result) -> str:
     stage = [r for r in result.records if r.label.startswith("entropy_")]
+    stages = [r for r in result.records
+              if r.label.startswith("encode_stages_")]
     batches = [r for r in result.records if r.label.startswith("batch_")]
     lines = ["## Entropy throughput (vectorized host coding)", "",
              "The host entropy stage (`repro.core.entropy.rle`) measured "
@@ -119,6 +121,31 @@ def _entropy_table(result) -> str:
             f"| {_ms(r.timings_us['dec_reference'])} "
             f"| {r.metrics['dec_speedup']:.1f}x "
             f"| {r.metrics['dec_mb_per_s']:.1f} |", ""]
+    for r in stages:
+        lines += [
+            f"Per-stage encode breakdown {_size(r)} (staged pipeline; "
+            f"`symbolize` is the fused `kernels/symbolize` pass, scored "
+            f"against the PR 4 vectorized symbolise+histogram path; "
+            f"transfer compares the coefficient bytes the host path "
+            f"pulls per image against the histograms+payload the "
+            f"device-resident TPU chain ships):", "",
+            "| stage | median (ms) |",
+            "|---|---|",
+            f"| symbolize (fused) | "
+            f"{_ms(r.timings_us['stage_symbolize'])} |",
+            f"| symbolize (PR 4 vectorized) | "
+            f"{_ms(r.timings_us['stage_symbolize_vectorized'])} "
+            f"({r.metrics['symbolize_speedup_vs_vectorized']:.2f}x "
+            f"fused win) |",
+            f"| table choice | {_ms(r.timings_us['stage_table_choice'])} |",
+            f"| codeword lookup | {_ms(r.timings_us['stage_codeword'])} |",
+            f"| bit packing | {_ms(r.timings_us['stage_pack'])} |", "",
+            f"Transfer per image: "
+            f"{r.metrics['host_transfer_bytes_per_image']:.0f} B host "
+            f"coefficients vs "
+            f"{r.metrics['device_transfer_bytes_per_image']:.0f} B "
+            f"device (histograms + payload) — "
+            f"{r.metrics['transfer_reduction']:.1f}x less traffic.", ""]
     if batches:
         lines += [
             "| batch | enc img/s (pipelined) | enc img/s (serial) "
@@ -279,9 +306,10 @@ def _tuning_table(result) -> str:
              "| kernel | bucket | winner | best (ms) | vs default "
              "| candidates swept |",
              "|---|---|---|---|---|---|"]
+    from repro.kernels import tuning
     for r in result.records:
         kernel = r.params["kernel"]
-        param = "tile_bits" if "tile_bits" in r.params else "tile"
+        param = tuning.PARAM_OF.get(kernel, "tile")
         vs = r.metrics.get("speedup_vs_default")
         lines.append(
             f"| {kernel} | {r.params['bucket']} "

@@ -82,7 +82,7 @@ def _check_encode_args(quality: int, transform: str, tables: str) -> None:
 
 def encode_qcoeffs(qcoeffs, quality: int, transform: str,
                    orig_shape: tuple, *, tables: str = "auto",
-                   packer=None) -> bytes:
+                   packer=None, symbolizer=None) -> bytes:
     """Entropy-code one image's quantised levels into a ``DCTZ`` stream.
 
     Args:
@@ -104,6 +104,10 @@ def encode_qcoeffs(qcoeffs, quality: int, transform: str,
             bytes`` callable (e.g. the routed
             :func:`repro.kernels.pack_bits.pack_bits`); None = the
             NumPy reference.
+        symbolizer: symbolisation backend override (see
+            :func:`_frame_stream`), e.g. the routed
+            :func:`repro.kernels.symbolize.make_symbolizer`; None = the
+            vectorised host pipeline.  Bytes identical either way.
 
     Returns:
         The complete container as bytes.
@@ -130,12 +134,12 @@ def encode_qcoeffs(qcoeffs, quality: int, transform: str,
     dc_diff, ac = scan.dc_differential(z)
     return _frame_stream(np.asarray(dc_diff), np.asarray(ac),
                          quality, transform, h, w, tables=tables,
-                         packer=packer)
+                         packer=packer, symbolizer=symbolizer)
 
 
 def encode_zigzag_host(z: np.ndarray, quality: int, transform: str,
                        orig_shape: tuple, *, tables: str = "auto",
-                       packer=None) -> bytes:
+                       packer=None, symbolizer=None) -> bytes:
     """Entropy-code a (n_blocks, 64) zig-zag stream — pure host path.
 
     The jax-free sibling of :func:`encode_qcoeffs` for callers that
@@ -156,6 +160,10 @@ def encode_zigzag_host(z: np.ndarray, quality: int, transform: str,
         tables: Huffman table policy, as in :func:`encode_qcoeffs`.
         packer: bit-packing backend override, as in
             :func:`encode_qcoeffs`.
+        symbolizer: symbolisation backend override, as in
+            :func:`encode_qcoeffs`.  The default keeps this function's
+            no-jax-import property; a routed symbolizer built in the
+            parent process is fine for worker *threads*.
 
     Returns:
         The complete container as bytes.
@@ -174,7 +182,8 @@ def encode_zigzag_host(z: np.ndarray, quality: int, transform: str,
     dc = z[:, 0].astype(np.int64)
     dc_diff = np.diff(dc, prepend=np.int64(0))
     return _frame_stream(dc_diff, z[:, 1:], quality, transform, h, w,
-                         tables=tables, packer=packer)
+                         tables=tables, packer=packer,
+                         symbolizer=symbolizer)
 
 
 def _choose_table(freqs: np.ndarray, shared_id: int, tables: str,
@@ -212,18 +221,28 @@ def _choose_table(freqs: np.ndarray, shared_id: int, tables: str,
 
 def _frame_stream(dc_diff: np.ndarray, ac: np.ndarray, quality: int,
                   transform: str, h: int, w: int, *,
-                  tables: str = "auto", packer=None) -> bytes:
+                  tables: str = "auto", packer=None,
+                  symbolizer=None) -> bytes:
     """Host edge shared by both encoders: the staged entropy pipeline
     (symbolise -> table choice -> codeword lookup -> routed packing)
-    plus framing."""
-    is_dc, syms, amp_vals, amp_lens = rle.symbolize(dc_diff, ac)
-    dc_freq, ac_freq = rle.symbol_frequencies(is_dc, syms)
-    dc_id, dc_table = _choose_table(dc_freq, huffman.STANDARD_DC_LUMA_ID,
+    plus framing.
+
+    ``symbolizer`` routes the symbolisation/payload stages: a
+    ``(dc_diff, ac, packer=None) -> prepared`` callable whose result
+    exposes ``dc_freq``/``ac_freq`` histograms (consumed by table
+    choice below) and ``payload(dc_table, ac_table) -> bytes`` — e.g.
+    :func:`repro.kernels.symbolize.make_symbolizer`.  ``None`` keeps
+    the vectorised host pipeline; bytes are identical either way
+    (CI-gated), so the table negotiation and framing here never change.
+    """
+    prep = (symbolizer or rle.prepare_stream)(dc_diff, ac, packer=packer)
+    dc_id, dc_table = _choose_table(prep.dc_freq,
+                                    huffman.STANDARD_DC_LUMA_ID,
                                     tables, "DC")
-    ac_id, ac_table = _choose_table(ac_freq, huffman.STANDARD_AC_LUMA_ID,
+    ac_id, ac_table = _choose_table(prep.ac_freq,
+                                    huffman.STANDARD_AC_LUMA_ID,
                                     tables, "AC")
-    payload = rle.encode_payload(is_dc, syms, amp_vals, amp_lens,
-                                 dc_table, ac_table, packer=packer)
+    payload = prep.payload(dc_table, ac_table)
 
     table_segs = b""
     if dc_id == TABLE_EMBEDDED:

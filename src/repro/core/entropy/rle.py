@@ -282,6 +282,38 @@ def encode_payload(is_dc, syms, amp_vals, amp_lens,
     return (packer or bitio.pack_bits)(fields, widths)
 
 
+class PreparedStream:
+    """Two-phase symbolisation: histograms first, payload on demand.
+
+    The shape the container's table negotiation needs — it must see the
+    per-alphabet histograms *before* it can pick tables, and only then
+    can codeword lookup and packing run.  This default implementation
+    wraps the vectorised host pipeline (:func:`symbolize` →
+    :func:`symbol_frequencies` → :func:`encode_payload`); the routed
+    alternatives (:func:`repro.kernels.symbolize.make_symbolizer`)
+    expose the same two attributes and method over the fused dense pass
+    or the device-resident chain, byte-identically (CI-gated).
+    """
+
+    def __init__(self, dc_diff: np.ndarray, ac: np.ndarray, packer=None):
+        self._stream = symbolize(dc_diff, ac)
+        self._packer = packer
+        self.dc_freq, self.ac_freq = symbol_frequencies(
+            self._stream[0], self._stream[1])
+
+    def payload(self, dc_table: huffman.CanonicalTable,
+                ac_table: huffman.CanonicalTable) -> bytes:
+        """Huffman-code + pack the prepared stream for chosen tables."""
+        return encode_payload(*self._stream, dc_table, ac_table,
+                              packer=self._packer)
+
+
+def prepare_stream(dc_diff: np.ndarray, ac: np.ndarray,
+                   packer=None) -> PreparedStream:
+    """The default ``symbolizer=`` backend: vectorised host pipeline."""
+    return PreparedStream(dc_diff, ac, packer=packer)
+
+
 _PAST_END = 32     # sentinel slots appended past the last window position
 
 # packed per-position decode word: (ctrl + 2) << 23 | adv << 17 |

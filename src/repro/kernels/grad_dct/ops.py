@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dct
-from repro.kernels import common
+from repro.kernels import common, tuning
 from repro.kernels.grad_dct import kernel
 
 BLOCK = kernel.BLOCK
@@ -39,9 +39,15 @@ def _split(g: jnp.ndarray):
     return g[:r * BLOCK].reshape(r, BLOCK), g[r * BLOCK:]
 
 
-def encode(g: jnp.ndarray, keep: int = 16, *, block_rows: int = 512,
+def encode(g: jnp.ndarray, keep: int = 16, *, block_rows: int | None = None,
            interpret: bool | None = None) -> CompressedGrad:
-    """Compress a flat f32 gradient vector."""
+    """Compress a flat f32 gradient vector.
+
+    ``block_rows=None`` routes through the tuned-tile artifact
+    (:func:`repro.kernels.tuning.tile_for`), the same default the
+    image and bit kernels got in PR 8; ``r`` is a static shape, so the
+    lookup happens at trace time and jit caching is unaffected.
+    """
     if interpret is None:
         interpret = common.interpret_default()
     n = g.shape[0]
@@ -51,6 +57,8 @@ def encode(g: jnp.ndarray, keep: int = 16, *, block_rows: int = 512,
         return CompressedGrad(q=jnp.zeros((0, keep), jnp.int8),
                               scale=jnp.zeros((0, 1), jnp.float32),
                               tail=tail, n=n)
+    if block_rows is None:
+        block_rows = tuning.tile_for("grad_dct", r)
     # pad rows to a grid multiple
     br = min(block_rows, r)
     pad_rows = (-r) % br
@@ -62,14 +70,21 @@ def encode(g: jnp.ndarray, keep: int = 16, *, block_rows: int = 512,
     return CompressedGrad(q=q[:r], scale=s[:r], tail=tail, n=n)
 
 
-def decode(cg: CompressedGrad, *, block_rows: int = 512,
+def decode(cg: CompressedGrad, *, block_rows: int | None = None,
            interpret: bool | None = None) -> jnp.ndarray:
-    """Reconstruct the flat gradient (lossy in the compressed span)."""
+    """Reconstruct the flat gradient (lossy in the compressed span).
+
+    ``block_rows=None`` routes through the tuned-tile artifact, as in
+    :func:`encode`; the tile never changes values, only grid shape
+    (pinned by the tile-invariance tests).
+    """
     if interpret is None:
         interpret = common.interpret_default()
     r = cg.q.shape[0]
     if r == 0:
         return cg.tail[:cg.n]
+    if block_rows is None:
+        block_rows = tuning.tile_for("grad_dct", r)
     br = min(block_rows, r)
     pad_rows = (-r) % br
     q, s = cg.q, cg.scale

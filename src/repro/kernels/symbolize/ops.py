@@ -1,0 +1,303 @@
+"""Routed public wrappers for the symbolize kernel.
+
+``symbolize`` is a drop-in for :func:`repro.core.entropy.rle.symbolize`
+with the stage routed per backend — the Pallas kernel on TPU, the
+staged dense NumPy reference everywhere else — element-identical either
+way (CI-gated by ``bench_entropy_throughput --check-identical``).
+
+:func:`make_symbolizer` builds the object the container encoders thread
+through (``symbolizer=``): a two-phase *prepared stream* exposing the
+device-computed alphabet histograms first (all the host needs for
+Huffman table negotiation) and producing the payload bytes once tables
+are chosen.  On the Pallas backend that second phase chains entirely on
+device — dense codeword gather, stable zero-width compaction,
+prefix-sum offsets, then the ``pack_bits`` scatter-pack kernel — so the
+host transfers two 1 KiB histograms, one scalar bit count and the
+finished payload instead of the full coefficient tensor.  On the NumPy
+backend it is the fused dense pass of :mod:`.ref` (one symbolize +
+histogram sweep, codeword lookup on the dense slots, one packer call).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.entropy import huffman, rle
+from repro.kernels import tuning
+from repro.kernels.pack_bits import kernel as pack_kernel
+from repro.kernels.pack_bits import ops as pack_ops
+from repro.kernels.symbolize import kernel, ref
+
+TILE_BLOCKS = 64                    # default blocks per kernel program
+
+# Above this many blocks the stream falls back to the staged NumPy
+# reference: the chained payload stage holds the three flattened
+# (2 * 64 * n_pad,) field arrays unblocked in VMEM like pack_bits does,
+# so the same MAX_DEVICE_FIELDS budget divided by the 128 fields a
+# block can emit caps the device-resident block count.
+MAX_DEVICE_BLOCKS = pack_ops.MAX_DEVICE_FIELDS // (2 * ref.SLOTS)
+
+# The kernel computes magnitude categories as 15 threshold compares in
+# int32, so levels must already fit 15-bit amplitudes; anything larger
+# is routed to the reference, which raises the oracle's RangeError.
+_MAX_DEVICE_LEVEL = 1 << rle.MAX_CATEGORY
+
+BACKENDS = ("pallas", "numpy")
+
+
+def select_backend(backend: str = "auto") -> str:
+    """Resolve the symbolize backend ("pallas" on TPU, else "numpy")."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "numpy"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown symbolize backend {backend!r}; "
+                         f"expected one of {('auto',) + BACKENDS}")
+    return backend
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _device_ok(dc_diff: np.ndarray, ac: np.ndarray) -> bool:
+    """True when the kernel's int32/15-bit preconditions hold."""
+    n = dc_diff.shape[0]
+    if n == 0 or n > MAX_DEVICE_BLOCKS:
+        return False
+    if n and int(np.abs(dc_diff).max()) >= _MAX_DEVICE_LEVEL:
+        return False
+    if ac.size and int(np.abs(ac).max()) >= _MAX_DEVICE_LEVEL:
+        return False
+    return True
+
+
+def _run_kernel(dc_diff: np.ndarray, ac: np.ndarray, tile_blocks: int,
+                interpret: bool) -> tuple:
+    """Pad, launch, and return the kernel's device outputs + n_pad."""
+    n = dc_diff.shape[0]
+    n_pad = max(_pow2(n), tile_blocks)
+    dc = np.zeros((n_pad, 1), np.int32)
+    dc[:n, 0] = dc_diff
+    acp = np.zeros((n_pad, ref.AC_LEN), np.int32)
+    acp[:n] = ac
+    nrows = np.array([n], np.int32)
+    return kernel.symbolize_pallas(jnp.asarray(dc), jnp.asarray(acp),
+                                   jnp.asarray(nrows),
+                                   tile_blocks=tile_blocks,
+                                   interpret=interpret)
+
+
+def symbolize_dense(dc_diff, ac, *, backend: str = "auto",
+                    tile_blocks: int | None = None,
+                    interpret: bool | None = None) -> ref.DenseSymbols:
+    """Routed fused pass: dense slots + histograms on the host.
+
+    Args:
+        dc_diff: (n,) int DC differences in block order.
+        ac: (n, 63) int AC tails in zig-zag order.
+        backend: "auto" (Pallas on TPU, NumPy elsewhere), "pallas", or
+            "numpy".
+        tile_blocks: blocks per kernel program (pow2); ``None`` routes
+            through the tuned-tile artifact
+            (:func:`repro.kernels.tuning.tile_for`).  Ignored by
+            "numpy".
+        interpret: Pallas interpret-mode override; ignored by "numpy".
+
+    Returns:
+        A :class:`repro.kernels.symbolize.ref.DenseSymbols`, identical
+        across backends and every ``tile_blocks``.
+
+    Raises:
+        rle.RangeError: some level needs an amplitude wider than 15
+            bits (the oracle's exact message, whichever backend runs).
+    """
+    dc_diff = np.asarray(dc_diff, dtype=np.int64)
+    ac = np.asarray(ac, dtype=np.int64)
+    if select_backend(backend) == "numpy" or not _device_ok(dc_diff, ac):
+        return ref.symbolize_dense(dc_diff, ac)
+    from repro.kernels import common
+    if interpret is None:
+        interpret = common.interpret_default()
+    if tile_blocks is None:
+        tile_blocks = tuning.tile_for("symbolize", dc_diff.shape[0])
+    n = dc_diff.shape[0]
+    syms, amps, lens, total, dc_h, ac_h = jax.device_get(
+        _run_kernel(dc_diff, ac, tile_blocks, interpret))
+    return ref.DenseSymbols(
+        syms=np.asarray(syms[:n], np.int16),
+        amp_vals=np.asarray(amps[:n], np.int16),
+        amp_lens=np.asarray(lens[:n], np.int16),
+        total=np.asarray(total[:n, 0], np.int64),
+        dc_freq=np.asarray(dc_h[0], np.int64),
+        ac_freq=np.asarray(ac_h[0], np.int64))
+
+
+def symbolize(dc_diff, ac, *, backend: str = "auto",
+              tile_blocks: int | None = None,
+              interpret: bool | None = None) -> tuple:
+    """Routed drop-in for :func:`repro.core.entropy.rle.symbolize`.
+
+    Same contract and return dtypes (``(is_dc, syms, amp_vals,
+    amp_lens)``), element-identical to the scalar oracle across every
+    backend and tile (CI-gated).
+    """
+    return ref.dense_to_stream(symbolize_dense(
+        dc_diff, ac, backend=backend, tile_blocks=tile_blocks,
+        interpret=interpret))
+
+
+# ---------------------------------------------------------------------------
+# Prepared streams: the container's symbolizer= protocol
+# ---------------------------------------------------------------------------
+
+class _NumpyPrepared:
+    """Fused host preparation: dense pass now, one packer call later."""
+
+    def __init__(self, dense: ref.DenseSymbols, packer):
+        self._dense = dense
+        self._packer = packer
+        self.dc_freq = dense.dc_freq
+        self.ac_freq = dense.ac_freq
+
+    def payload(self, dc_table: huffman.CanonicalTable,
+                ac_table: huffman.CanonicalTable) -> bytes:
+        return ref.encode_payload_dense(self._dense, dc_table, ac_table,
+                                        packer=self._packer)
+
+
+@jax.jit
+def _fields_device(syms, amps, lens, total, dc_code, dc_len,
+                   ac_code, ac_len):
+    """Dense codeword gather + stable zero-width compaction, on device.
+
+    Returns the flattened field/width/start arrays ready for the
+    scatter-pack kernel (kept fields first, in stream order; zero-width
+    tail at offset ``total_bits``), plus the payload bit count and an
+    uncodeable-symbol flag.
+    """
+    slot = jnp.arange(ref.SLOTS, dtype=jnp.int32)[None, :]
+    valid = slot < total                                    # (n_pad, 64)
+    isdc = slot == 0
+    codes = jnp.where(isdc, dc_code[syms], ac_code[syms])
+    clens = jnp.where(isdc, dc_len[syms], ac_len[syms])
+    bad = jnp.any((clens == 0) & valid)
+    f = jnp.stack([codes, amps], axis=-1).reshape(-1)
+    w = jnp.stack([jnp.where(valid, clens, 0),
+                   jnp.where(valid, lens, 0)], axis=-1).reshape(-1)
+    f = f & ((1 << w) - 1)          # only the low `w` bits are payload
+    # stable partition without sorting: kept fields keep stream order,
+    # zero-width fields move to the tail
+    kept = w > 0
+    m = f.shape[0]
+    n_kept = jnp.cumsum(kept.astype(jnp.int32))
+    dest = jnp.where(kept, n_kept - 1,
+                     n_kept[-1] + jnp.cumsum((~kept).astype(jnp.int32)) - 1)
+    f2 = jnp.zeros((m,), f.dtype).at[dest].set(f)
+    w2 = jnp.zeros((m,), w.dtype).at[dest].set(w)
+    ends = jnp.cumsum(w2)
+    return f2, w2, ends - w2, ends[-1], bad
+
+
+@jax.jit
+def _first_device(ends, n_tiles_arr, tile_bits, window):
+    first = jnp.searchsorted(ends, n_tiles_arr * tile_bits, side="right")
+    return jnp.minimum(first, ends.shape[0] - window).astype(jnp.int32)
+
+
+class _PallasPrepared:
+    """Device-resident preparation: histograms now, device pack later.
+
+    Construction runs the symbolize kernel and pulls only the two
+    (1, 256) histograms; :meth:`payload` chains codeword gather →
+    prefix-sum offsets → scatter-pack on device and pulls the finished
+    bytes (plus one scalar bit count to size the tile grid).
+    """
+
+    def __init__(self, dc_diff, ac, tile_blocks, interpret):
+        self._interpret = interpret
+        n = dc_diff.shape[0]
+        self._n = n
+        (self._syms, self._amps, self._lens, self._total,
+         dc_h, ac_h) = _run_kernel(dc_diff, ac, tile_blocks, interpret)
+        dc_h, ac_h = jax.device_get((dc_h, ac_h))
+        self.dc_freq = np.asarray(dc_h[0], np.int64)
+        self.ac_freq = np.asarray(ac_h[0], np.int64)
+
+    def payload(self, dc_table: huffman.CanonicalTable,
+                ac_table: huffman.CanonicalTable) -> bytes:
+        lut = lambda a: jnp.asarray(np.asarray(a, np.int32))
+        dc_code, dc_len = huffman.encoder_luts(dc_table)
+        ac_code, ac_len = huffman.encoder_luts(ac_table)
+        f, w, s, total_bits, bad = _fields_device(
+            self._syms, self._amps, self._lens, self._total,
+            lut(dc_code), lut(dc_len), lut(ac_code), lut(ac_len))
+        bad, total = jax.device_get((bad, total_bits))
+        if bool(bad):
+            raise ValueError("symbol stream contains a symbol absent "
+                             "from the Huffman table")
+        total = int(total)
+        if total == 0:
+            return b""
+        tile_bits = tuning.tile_for("pack_bits", total)
+        window = tile_bits + pack_ops.WINDOW_MARGIN
+        n_tiles = _pow2(-(-total // tile_bits))
+        m = int(f.shape[0])
+        m_pad = _pow2(m + window)
+        if m_pad > m:
+            pad = m_pad - m
+            f = jnp.concatenate([f, jnp.zeros((pad,), f.dtype)])
+            w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+            # padding starts sit at the payload end (zero width), so
+            # the `ends` array stays sorted for searchsorted
+            s = jnp.concatenate([s, jnp.broadcast_to(total_bits, (pad,))])
+        first = _first_device(s + w, jnp.arange(n_tiles, dtype=jnp.int32),
+                              tile_bits, window)
+        col = lambda a: a.reshape(-1, 1).astype(jnp.int32)
+        out = pack_kernel.pack_bits_pallas(
+            col(f), col(w), col(s), first, tile_bits=tile_bits,
+            window=window, interpret=self._interpret)
+        nbytes = (total + 7) // 8
+        by = np.asarray(jax.device_get(out)).astype(np.uint8)
+        by = by.reshape(-1)[:nbytes].copy()
+        pad_bits = (-total) % 8
+        if pad_bits:                # writer convention: 1-padded tail
+            by[-1] |= (1 << pad_bits) - 1
+        return by.tobytes()
+
+
+def make_symbolizer(backend: str = "auto", *,
+                    tile_blocks: int | None = None,
+                    interpret: bool | None = None):
+    """Symbolizer callable for the container encoders' ``symbolizer=``.
+
+    The returned callable maps ``(dc_diff, ac, packer=None)`` to a
+    prepared stream with ``dc_freq`` / ``ac_freq`` histogram attributes
+    and a ``payload(dc_table, ac_table) -> bytes`` method — the
+    two-phase shape :func:`repro.core.entropy.container._frame_stream`
+    needs for table negotiation.  Bytes are identical across backends
+    and to the default (``symbolizer=None``) path (CI-gated).
+
+    On "pallas", ``packer`` only applies to streams the device guards
+    reject (size/range fallbacks run the staged NumPy pass): accepted
+    streams pack through the chained device scatter-pack.
+    """
+    resolved = select_backend(backend)
+
+    def prepare(dc_diff, ac, packer=None):
+        dc_diff = np.asarray(dc_diff, dtype=np.int64)
+        ac = np.asarray(ac, dtype=np.int64)
+        if resolved == "pallas" and _device_ok(dc_diff, ac):
+            from repro.kernels import common
+            interp = (common.interpret_default()
+                      if interpret is None else interpret)
+            tiles = (tuning.tile_for("symbolize", dc_diff.shape[0])
+                     if tile_blocks is None else tile_blocks)
+            return _PallasPrepared(dc_diff, ac, tiles, interp)
+        return _NumpyPrepared(ref.symbolize_dense(dc_diff, ac), packer)
+
+    return prepare

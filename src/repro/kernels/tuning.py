@@ -38,13 +38,17 @@ ENV_VAR = "REPRO_TUNING_PATH"
 # fallback whenever no valid tuned entry applies.  ``tile`` is the
 # pick_tile target for the image kernels; ``tile_bits`` is the per-tile
 # bit budget of the entropy pack/unpack kernels (window margins are
-# derived by the ops modules, not stored here).
+# derived by the ops modules, not stored here); ``block_rows`` is the
+# gradient rows per grad_dct program; ``tile_blocks`` the 8x8 blocks
+# per symbolize program.
 DEFAULTS = {
     "dct8x8": {"tile": 256},
     "cordic_loeffler": {"tile": 256},
     "fused_codec": {"tile": 256},
     "pack_bits": {"tile_bits": 1024},
     "unpack_bits": {"tile_bits": 2048},
+    "grad_dct": {"block_rows": 512},
+    "symbolize": {"tile_blocks": 64},
 }
 
 KERNELS = tuple(DEFAULTS)

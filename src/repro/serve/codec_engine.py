@@ -84,8 +84,8 @@ class CompressedBatch:
     cordic_config: cordic.CordicConfig
     stacked: bool                  # input was a single (B, H, W) array
     # (tables_policy, streams) — byte output depends on the table
-    # policy but never on the packing backend, so the cache keys on the
-    # former only
+    # policy but never on the packing or symbolize backend (enforced by
+    # the --check-identical gate), so the cache keys on the former only
     _streams: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -130,7 +130,8 @@ class CompressedBatch:
     def to_bytes_list(self, pipelined: bool = True,
                       workers: int | None = None,
                       pack_backend: str = "auto",
-                      tables: str = "auto") -> list:
+                      tables: str = "auto",
+                      symbolize_backend: str = "auto") -> list:
         """Entropy-code every image: list of ``DCTZ`` streams in input
         order (measured per-image byte sizes via ``len()``).
 
@@ -159,17 +160,26 @@ class CompressedBatch:
             tables: Huffman table policy per stream ("auto" /
                 "embedded" / "shared"), see
                 :func:`repro.core.entropy.encode_qcoeffs`.
+            symbolize_backend: symbolisation backend ("auto"/"pallas"/
+                "numpy"), see
+                :func:`repro.kernels.symbolize.make_symbolizer`.  On
+                TPU, "auto" chains symbolise → codeword lookup →
+                scatter-pack on device, so only histograms, headers and
+                payload bytes cross to the host; elsewhere it is the
+                fused dense NumPy pass.
         """
         from repro.core import entropy
         from repro.core.entropy import scan
-        from repro.kernels import pack_bits
+        from repro.kernels import pack_bits, symbolize
         if self._streams is not None and self._streams[0] == tables:
             return list(self._streams[1])
         packer = pack_bits.make_packer(pack_backend)
+        symbolizer = symbolize.make_symbolizer(symbolize_backend)
         if not pipelined:
             self._streams = (tables, [
                 entropy.encode_qcoeffs(q, self.quality, self.transform,
-                                       shape, tables=tables, packer=packer)
+                                       shape, tables=tables, packer=packer,
+                                       symbolizer=symbolizer)
                 for q, shape in self._image_qcoeffs()])
             return list(self._streams[1])
         # dispatch the zig-zag for every bucket up front: jax queues the
@@ -189,7 +199,8 @@ class CompressedBatch:
                         entropy.encode_zigzag_host,
                         znp[j, :gh, :gw].reshape(gh * gw, 64),
                         self.quality, self.transform, (h, w),
-                        tables=tables, packer=packer)
+                        tables=tables, packer=packer,
+                        symbolizer=symbolizer)
             self._streams = (tables, [f.result() for f in jobs])
         return list(self._streams[1])
 
@@ -451,7 +462,8 @@ def encode_batch(imgs, quality: int = 50,
                  transform: codec.Transform = "exact",
                  cordic_config: cordic.CordicConfig = cordic.PAPER_CONFIG,
                  pipelined: bool = True, workers: int | None = None,
-                 pack_backend: str = "auto", tables: str = "auto") -> list:
+                 pack_backend: str = "auto", tables: str = "auto",
+                 symbolize_backend: str = "auto") -> list:
     """Compress a batch all the way to entropy-coded ``DCTZ`` streams.
 
     The array half (DCT + quantise) runs the sharded
@@ -474,6 +486,10 @@ def encode_batch(imgs, quality: int = 50,
         pack_backend: bit-packing backend ("auto"/"pallas"/"numpy"),
             see :meth:`CompressedBatch.to_bytes_list`.
         tables: Huffman table policy ("auto"/"embedded"/"shared").
+        symbolize_backend: symbolisation backend ("auto"/"pallas"/
+            "numpy"), see :meth:`CompressedBatch.to_bytes_list`.  On
+            TPU, "auto" keeps encode device-resident from pixels to
+            packed bits.
 
     Returns:
         List of ``bytes`` (one ``DCTZ`` stream per image, input order);
@@ -482,7 +498,8 @@ def encode_batch(imgs, quality: int = 50,
     """
     cb = compress_batch(imgs, quality, transform, cordic_config)
     return cb.to_bytes_list(pipelined=pipelined, workers=workers,
-                            pack_backend=pack_backend, tables=tables)
+                            pack_backend=pack_backend, tables=tables,
+                            symbolize_backend=symbolize_backend)
 
 
 def _hydrate_tables(segments) -> None:

@@ -144,6 +144,92 @@ def test_unpack_bits_truncation_errors_tile_invariant(tile_bits,
 
 
 # ---------------------------------------------------------------------------
+# symbolize: element-identical to the scalar oracle at every tile_blocks
+# ---------------------------------------------------------------------------
+
+def _blocks(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    dc_diff = rng.integers(-1024, 1025, n)
+    ac = rng.integers(-255, 256, (n, 63))
+    ac[rng.uniform(size=ac.shape) < 0.85] = 0     # realistic sparsity
+    return dc_diff, ac
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(CANDIDATES["symbolize"]),
+       st.integers(1, 40), st.integers(0, 3))
+def test_symbolize_tile_blocks_invariant(tile_blocks, n, seed):
+    from repro.core.entropy import rle
+    from repro.kernels.symbolize import ops
+    dc_diff, ac = _blocks(n, seed)
+    want = rle.symbolize_reference(dc_diff, ac)
+    got = ops.symbolize(dc_diff, ac, backend="pallas",
+                        tile_blocks=tile_blocks, interpret=True)
+    for w, g in zip(want, got):
+        assert w.dtype == g.dtype and np.array_equal(w, g), \
+            f"symbolize tile_blocks={tile_blocks} n={n}"
+    dense = ops.symbolize_dense(dc_diff, ac, backend="pallas",
+                                tile_blocks=tile_blocks, interpret=True)
+    dc_freq, ac_freq = rle.symbol_frequencies(want[0], want[1])
+    assert np.array_equal(dense.dc_freq, dc_freq)
+    assert np.array_equal(dense.ac_freq, ac_freq)
+
+
+# ---------------------------------------------------------------------------
+# grad_dct: bit-exact across every block_rows candidate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_rows", CANDIDATES["grad_dct"])
+def test_grad_dct_block_rows_invariant(block_rows):
+    from repro.kernels import grad_dct as gd
+    rng = np.random.default_rng(block_rows)
+    g = rng.standard_normal(200 * gd.BLOCK + 9).astype(np.float32)
+    ref_rows = CANDIDATES["grad_dct"][-1]
+    want = gd.encode(g, block_rows=ref_rows, interpret=True)
+    got = gd.encode(g, block_rows=block_rows, interpret=True)
+    assert np.array_equal(np.asarray(got.q), np.asarray(want.q))
+    assert np.array_equal(np.asarray(got.scale), np.asarray(want.scale))
+    assert np.array_equal(np.asarray(got.tail), np.asarray(want.tail))
+    want_g = np.asarray(gd.decode(want, block_rows=ref_rows,
+                                  interpret=True))
+    got_g = np.asarray(gd.decode(want, block_rows=block_rows,
+                                 interpret=True))
+    assert np.array_equal(got_g, want_g), \
+        f"grad_dct decode block_rows={block_rows}"
+
+
+def test_grad_dct_routes_tuned_block_rows(tmp_path, monkeypatch):
+    # block_rows=None must consult the tuning artifact, like the other
+    # kernel routers
+    import json
+
+    from repro.kernels import grad_dct as gd
+    from repro.kernels import tuning
+    doc = tuning.make_doc([{"kernel": "grad_dct", "bucket": 256,
+                            "params": {"block_rows": 64},
+                            "best_us": 1.0}], backend="cpu")
+    p = tmp_path / "tuning.json"
+    p.write_text(json.dumps(doc))
+    monkeypatch.setenv("REPRO_TUNING_PATH", str(p))
+    tuning.invalidate_cache()
+    try:
+        seen = {}
+        real = gd.ops.kernel.grad_dct_encode_pallas
+
+        def spy(body, c, *, keep, block_rows, interpret):
+            seen["block_rows"] = block_rows
+            return real(body, c, keep=keep, block_rows=block_rows,
+                        interpret=interpret)
+
+        monkeypatch.setattr(gd.ops.kernel, "grad_dct_encode_pallas", spy)
+        g = np.ones(200 * gd.BLOCK, np.float32)
+        gd.encode(g, interpret=True)
+        assert seen["block_rows"] == 64
+    finally:
+        tuning.invalidate_cache()
+
+
+# ---------------------------------------------------------------------------
 # pick_tile boundary behaviour (the contract the routers rely on)
 # ---------------------------------------------------------------------------
 
